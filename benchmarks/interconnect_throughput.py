@@ -1,0 +1,61 @@
+"""Event-routing datapath throughput on the 4-chip prototype topology.
+
+Times the full route_step (fwd LUT → Aggregator all-to-all → reverse LUT →
+capacity pack) and the fused Pallas spike_router kernel (interpret mode on
+CPU — wall time is *not* TPU-representative; the derived column carries the
+per-event work, which is).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import identity_router, make_frame, route_step
+from repro.core.routing import build_fwd_table
+from repro.kernels.spike_router.ops import route_and_pack
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(verbose: bool = True):
+    rows = []
+    key = jax.random.key(0)
+    for n_events, cap in ((64, 256), (256, 1024), (1024, 4096)):
+        state = identity_router(4)
+        labels = jax.random.randint(key, (4, n_events), 0, 2**15)
+        valid = jax.random.uniform(jax.random.fold_in(key, 1),
+                                   (4, n_events)) < 0.5
+        frames, _ = make_frame(labels, jnp.zeros_like(labels), valid, n_events)
+        step = jax.jit(lambda f: route_step(state, f, cap))
+        us = _time(step, frames)
+        per_event = us / (4 * n_events)
+        rows.append(("route_step", n_events, us, per_event))
+        if verbose:
+            print(f"interconnect[route_step n={n_events}],{us:.0f},"
+                  f"{per_event*1000:.1f}ns/event")
+
+    ids = jnp.arange(4096)
+    lut = build_fwd_table(ids, ids)
+    for n_events in (256, 1024):
+        labels = jax.random.randint(key, (4, n_events), 0, 4096)
+        valid = jax.random.uniform(key, (4, n_events)) < 0.5
+        fn = jax.jit(lambda l, v: route_and_pack(l, v, lut, capacity=512,
+                                                 interpret=True))
+        us = _time(fn, labels, valid, reps=5)
+        rows.append(("spike_router_kernel", n_events, us, us / (4 * n_events)))
+        if verbose:
+            print(f"interconnect[pallas_router n={n_events}],{us:.0f},"
+                  "interpret-mode (CPU)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

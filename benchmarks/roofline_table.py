@@ -1,0 +1,44 @@
+"""§Roofline table: renders results/dryrun.json (all compiled cells)."""
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run(verbose: bool = True, path: str = RESULTS):
+    if not os.path.exists(path):
+        print("roofline_table,0,results/dryrun.json missing — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'dom':10s} "
+           f"{'compute':>10s} {'memory':>10s} {'coll':>10s} "
+           f"{'useful':>7s} {'roofline':>9s}")
+    if verbose:
+        print(hdr)
+    for cell, rec in sorted(results.items()):
+        if rec.get("status") == "skipped":
+            if verbose:
+                print(f"{rec['cell']:50s} SKIPPED: {rec['reason'][:60]}")
+            continue
+        if rec.get("status") != "ok":
+            if verbose:
+                print(f"{rec['cell']:50s} FAILED: {rec.get('error', '?')[:60]}")
+            continue
+        r = rec["roofline"]
+        rows.append(r)
+        if verbose:
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{r['dominant']:10s} {r['compute_s']*1e3:9.2f}ms "
+                  f"{r['memory_s']*1e3:9.2f}ms "
+                  f"{r['collective_s']*1e3:9.2f}ms "
+                  f"{r['useful_ratio']:7.2f} {r['roofline_fraction']:9.2%}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator — one module per paper table/figure/claim.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark.
+
+  fig5_latency            Fig 5A  latency distributions vs rate (3:1 fan-in)
+  fig5_speedup            Fig 5B  speed-up factor vs routing latency
+  encoding_tradeoff       §III    8b10b@5G vs 64b66b@8G
+  scaling_projection      §V      120-chip second-layer projection
+  interconnect_throughput §III    routing datapath throughput
+  moe_dispatch            DESIGN §4  event-frame dispatch at LM scale
+  roofline_table          §Roofline  all dry-run cells (needs results/)
+"""
+
+import sys
+import traceback
+
+from benchmarks import (encoding_tradeoff, fig5_latency, fig5_speedup,
+                        grad_compression, interconnect_throughput,
+                        moe_dispatch, roofline_table, scaling_projection)
+
+ALL = [
+    ("fig5_latency", fig5_latency.run),
+    ("fig5_speedup", fig5_speedup.run),
+    ("encoding_tradeoff", encoding_tradeoff.run),
+    ("scaling_projection", scaling_projection.run),
+    ("interconnect_throughput", interconnect_throughput.run),
+    ("moe_dispatch", moe_dispatch.run),
+    ("grad_compression", grad_compression.run),
+    ("roofline_table", roofline_table.run),
+]
+
+
+def main() -> None:
+    failures = []
+    for name, fn in ALL:
+        print(f"\n=== {name} ===")
+        try:
+            fn(verbose=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: one BSS-2 chip + the multi-chip spike-routing datapath.
+
+Runs in seconds on CPU:
+  1. drive a single emulated chip with a Poisson stimulus,
+  2. route its output spikes through the fwd LUT → Aggregator → reverse LUT
+     path (the paper's §III datapath),
+  3. print the deterministic latency budget of that path (§IV numbers).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DEFAULT_PARAMS, identity_router, make_frame,
+                        route_step)
+from repro.snn import (ChipConfig, chip_step, init_chip_params,
+                       init_chip_state, poisson_encode, spikes_to_labels)
+
+key = jax.random.key(0)
+
+# --- 1. one chip: 512 AdEx/LIF neurons, 256×512 synapse crossbar ------------
+cfg = ChipConfig()
+params = init_chip_params(key, cfg)
+state = init_chip_state(cfg, batch=1)
+
+stimulus = poisson_encode(jax.random.key(1),
+                          jnp.full((1, cfg.n_rows), 0.4), n_steps=50)
+total_out = 0
+for t in range(50):
+    state, out_spikes = chip_step(params, state, stimulus[t], cfg)
+    total_out += int(out_spikes.sum())
+print(f"chip emulation: {total_out} output spikes over 50 steps "
+      f"({cfg.n_neurons} neurons, {cfg.n_rows * cfg.n_neurons} synapses)")
+
+# --- 2. multi-chip routing: 4-chip prototype, all-to-all -------------------
+labels, valid = spikes_to_labels(out_spikes, chip_id=0)
+frame, _ = make_frame(jnp.tile(labels, (4, 1)), jnp.zeros_like(
+    jnp.tile(labels, (4, 1))), jnp.tile(valid, (4, 1)), capacity=512)
+router = identity_router(4)
+ingress, dropped = route_step(router, frame, capacity=1024)
+print(f"routing: each chip received {ingress.count().tolist()} events "
+      f"(dropped {dropped.tolist()}) through fwd-LUT → star → rev-LUT")
+
+# --- 3. the latency budget of that path (paper §IV) ------------------------
+p = DEFAULT_PARAMS
+print(f"latency budget: 2×MGT hops {p.mgt_path_ns():.0f} ns + "
+      f"CDC {p.n_fpgas * p.cdc_ns_per_fpga:.0f} ns + "
+      f"pack/LUT {2 * p.pack_lut_ns:.0f} ns + arb {p.mux_arb_ns:.0f} ns + "
+      f"2×layer-2 {2 * p.l2_link_ns:.0f} ns + on-chip {p.on_chip_ns:.0f} ns "
+      f"= {p.chip_to_chip_ns():.0f} ns chip-to-chip (paper: 0.9–1.3 µs)")

@@ -1,0 +1,104 @@
+"""Render §Roofline markdown tables from results/dryrun*.json into
+EXPERIMENTS.md (replaces the content between the §3 and §4 headers —
+re-runnable)."""
+
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+HEADER_NOTE = """
+(Each cell: three terms in seconds from the per-device partitioned program /
+single-chip peaks; dominant term; MODEL_FLOPS = 6·N_active·D for train,
+2·N_active·D forward-only; useful = MODEL_FLOPS / global HLO FLOPs;
+roofline = ideal-model-math-time / dominant-term time.)
+"""
+
+
+def _cell_mesh(cell: str) -> str:
+    return cell.split("|")[2]
+
+
+def table(results: dict, mesh: str) -> str:
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "temps/dev | useful | roofline |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for cell in sorted(results):
+        rec = results[cell]
+        if _cell_mesh(cell) != mesh:
+            continue
+        if rec["status"] == "skipped":
+            arch, shape, _ = cell.split("|")
+            lines.append(f"| {arch} | {shape} | — | — | — | *skipped "
+                         f"(full attention)* | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {cell} | FAILED | | | | | | | |")
+            continue
+        r = rec["roofline"]
+        temps = r["bytes_per_device"]["temps"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.1f} ms "
+            f"| {r['memory_s']*1e3:.1f} ms | {r['collective_s']*1e3:.1f} ms "
+            f"| **{r['dominant']}** | {temps:.2f} GB "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2%} |")
+    return hdr + "\n".join(lines)
+
+
+def opt_table() -> str:
+    path = os.path.join(ROOT, "results", "dryrun_opt.json")
+    if not os.path.exists(path):
+        return "*optimized sweep pending*"
+    with open(path) as f:
+        results = json.load(f)
+    base = json.load(open(os.path.join(ROOT, "results", "dryrun.json")))
+    hdr = ("| arch | shape | bound (base → opt) | dominant | temps/dev "
+           "(base → opt) | roofline (base → opt) |\n|---|---|---|---|---|---|\n")
+    lines = []
+    for cell in sorted(results):
+        rec = results[cell]
+        if rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        b = base.get(cell, {}).get("roofline")
+        if not b:
+            continue
+        bb = max(b["compute_s"], b["memory_s"], b["collective_s"]) * 1e3
+        ob = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3
+        bt = b["bytes_per_device"]["temps"] / 1e9
+        ot = r["bytes_per_device"]["temps"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {bb:.0f} → {ob:.0f} ms "
+            f"| {r['dominant']} | {bt:.1f} → {ot:.1f} GB "
+            f"| {b['roofline_fraction']:.2%} → **{r['roofline_fraction']:.2%}** |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    with open(os.path.join(ROOT, "results", "dryrun.json")) as f:
+        results = json.load(f)
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(exp_path) as f:
+        text = f.read()
+
+    section = (
+        "## 3. §Roofline\n" + HEADER_NOTE
+        + "\n### Single-pod (16×16 = 256 chips), paper-faithful baseline\n\n"
+        + table(results, "16x16")
+        + "\n\n### Multi-pod (2×16×16 = 512 chips), paper-faithful baseline\n\n"
+        + table(results, "2x16x16")
+        + "\n\n### Optimized configuration (beyond-paper: chunked attention "
+          "+ local MoE dispatch), single-pod\n\n"
+        + opt_table() + "\n\n")
+
+    text = re.sub(r"## 3\. §Roofline.*?(?=## 4\.)", section, text,
+                  flags=re.DOTALL)
+    with open(exp_path, "w") as f:
+        f.write(text)
+    print("rendered §Roofline into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""HLO-text parsing: collective ops + operand byte counts.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so the collective roofline term comes from scanning the optimized
+HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and summing their operand sizes.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[8,512,1024] all-gather(%param.1), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\])\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Total output bytes per collective op kind (proxy for wire traffic)."""
+    out: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            nbytes = sum(_shape_bytes(dt, dm)
+                         for dt, dm in _SHAPE_RE.findall(tuple_body))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        out[kind] += nbytes
+        counts[kind] += 1
+    out_d = dict(out)
+    out_d["_counts"] = dict(counts)
+    return out_d
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    per = collective_bytes(hlo_text)
+    return sum(v for k, v in per.items() if not k.startswith("_"))
+
+
+def collective_schedule(hlo_text: str, limit: int = 20) -> list[str]:
+    """Ordered list of collective ops (name + shape) as they appear."""
+    sched = []
+    for line in hlo_text.splitlines():
+        if any(f" {op}(" in line or f"{op}-start" in line
+               for op in COLLECTIVE_OPS):
+            name = line.strip().split(" = ")[0][:60]
+            m = _OP_RE.search(line)
+            kind = m.group(4) if m else "?"
+            sched.append(f"{kind}: {name}")
+            if len(sched) >= limit:
+                break
+    return sched

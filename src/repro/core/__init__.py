@@ -1,0 +1,31 @@
+"""Core: the paper's contribution — label-routed, capacity-bounded,
+deterministic-latency sparse-event interconnect (BrainScaleS-2 multi-chip)."""
+
+from repro.core.events import (  # noqa: F401
+    EventFrame, PackedWords, empty_frame, make_frame, concatenate_frames,
+    pack_words, unpack_words, words_required, CapacityPolicy, SPIKES_PER_WORD,
+)
+from repro.core.routing import (  # noqa: F401
+    RoutingTables, build_fwd_table, build_rev_table, identity_tables,
+    lookup_fwd, lookup_rev, route_outbound, route_inbound,
+    full_route_enables, feedforward_route_enables, fan_in_route_enables,
+    aggregate,
+)
+from repro.core.aggregator import (  # noqa: F401
+    RouterState, identity_router, route_step, star_exchange,
+    hierarchical_exchange, StarInterconnect,
+)
+from repro.core.sync import (  # noqa: F401
+    SyncConfig, barrier, barrier_release_time, refractory_mask,
+)
+from repro.core.latency import (  # noqa: F401
+    LatencyParams, DEFAULT_PARAMS, simulate_fan_in, latency_statistics,
+    biological_latency_ms,
+)
+from repro.core.link import (  # noqa: F401
+    Encoding, LinkConfig, ENC_8B10B, ENC_64B66B,
+    LINK_LATENCY_OPTIMIZED, LINK_BANDWIDTH_OPTIMIZED,
+)
+from repro.core.interconnect import (  # noqa: F401
+    Topology, PROTOTYPE_4CHIP, FULL_BACKPLANE, FULL_RACK, PROJECTED_120CHIP,
+)

@@ -1,0 +1,179 @@
+"""Event-frame representation of sparse spike traffic.
+
+The BSS-2 layer-2 protocol packs up to three spike events (16-bit labels +
+8-bit timestamps) into one link word for bandwidth efficiency; the multi-chip
+extension unpacks them to single events in the 250 MHz MGT clock domain.
+
+JAX requires static shapes, so sparse event streams are carried as
+fixed-capacity ``EventFrame``s: a dense buffer of labels/timestamps plus a
+validity mask.  Capacity overflow drops events and counts them — the same
+semantics as the paper's lossy layer-1 path under continued congestion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LABEL_DTYPE = jnp.int32
+TIME_DTYPE = jnp.int32
+
+# Layer-2 packing factor: up to three spikes per link word (paper §III).
+SPIKES_PER_WORD = 3
+# Layer-2 timestamps carry the lower eight bits of the system time.
+TIMESTAMP_BITS = 8
+TIMESTAMP_MASK = (1 << TIMESTAMP_BITS) - 1
+
+
+class EventFrame(NamedTuple):
+    """A fixed-capacity batch of spike events.
+
+    Attributes:
+      labels: int32[..., capacity] spike labels (16-bit payload range).
+      times:  int32[..., capacity] event timestamps (system-clock cycles).
+      valid:  bool[..., capacity]  validity mask; invalid slots are padding.
+    """
+
+    labels: jax.Array
+    times: jax.Array
+    valid: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.labels.shape[-1]
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid, axis=-1)
+
+
+def empty_frame(capacity: int, batch_shape: tuple[int, ...] = ()) -> EventFrame:
+    shape = (*batch_shape, capacity)
+    return EventFrame(
+        labels=jnp.zeros(shape, LABEL_DTYPE),
+        times=jnp.zeros(shape, TIME_DTYPE),
+        valid=jnp.zeros(shape, jnp.bool_),
+    )
+
+
+def make_frame(labels, times, valid, capacity: int) -> tuple[EventFrame, jax.Array]:
+    """Compact events to the front of a capacity-bounded frame.
+
+    Events beyond ``capacity`` are dropped (layer-1 congestion semantics).
+
+    Returns (frame, dropped_count).
+    """
+    labels = jnp.asarray(labels, LABEL_DTYPE)
+    times = jnp.asarray(times, TIME_DTYPE)
+    valid = jnp.asarray(valid, jnp.bool_)
+    # Stable order: valid events first, preserving arrival order.
+    order = jnp.argsort(~valid, axis=-1, stable=True)
+    labels = jnp.take_along_axis(labels, order, axis=-1)
+    times = jnp.take_along_axis(times, order, axis=-1)
+    valid = jnp.take_along_axis(valid, order, axis=-1)
+
+    n = labels.shape[-1]
+    total = jnp.sum(valid, axis=-1)
+    if n >= capacity:
+        frame = EventFrame(
+            labels=labels[..., :capacity],
+            times=times[..., :capacity],
+            valid=valid[..., :capacity],
+        )
+        dropped = total - jnp.sum(frame.valid, axis=-1)
+    else:
+        pad = capacity - n
+        pad_widths = [(0, 0)] * (labels.ndim - 1) + [(0, pad)]
+        frame = EventFrame(
+            labels=jnp.pad(labels, pad_widths),
+            times=jnp.pad(times, pad_widths),
+            valid=jnp.pad(valid, pad_widths),
+        )
+        dropped = jnp.zeros_like(total)
+    return frame, dropped
+
+
+def concatenate_frames(frames: list[EventFrame], capacity: int) -> tuple[EventFrame, jax.Array]:
+    """Merge several frames into one capacity-bounded frame (drops overflow)."""
+    labels = jnp.concatenate([f.labels for f in frames], axis=-1)
+    times = jnp.concatenate([f.times for f in frames], axis=-1)
+    valid = jnp.concatenate([f.valid for f in frames], axis=-1)
+    return make_frame(labels, times, valid, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Layer-2 word packing (≤3 spikes per word + shared 8-bit timestamp tag)
+# ---------------------------------------------------------------------------
+
+
+class PackedWords(NamedTuple):
+    """Layer-2 packed representation: groups of up to three events per word."""
+
+    labels: jax.Array  # int32[..., n_words, SPIKES_PER_WORD]
+    times: jax.Array   # int32[..., n_words]  (lower 8 bits of system time)
+    valid: jax.Array   # bool[..., n_words, SPIKES_PER_WORD]
+
+
+def pack_words(frame: EventFrame) -> PackedWords:
+    """Pack an event frame into layer-2 words (3 spikes/word).
+
+    The word timestamp is the tag of its first valid slot (the hardware packs
+    temporally adjacent events; frames are already time-ordered here).
+    """
+    cap = frame.capacity
+    n_words = -(-cap // SPIKES_PER_WORD)
+    pad = n_words * SPIKES_PER_WORD - cap
+    pad_widths = [(0, 0)] * (frame.labels.ndim - 1) + [(0, pad)]
+    labels = jnp.pad(frame.labels, pad_widths)
+    times = jnp.pad(frame.times, pad_widths)
+    valid = jnp.pad(frame.valid, pad_widths)
+
+    new_shape = (*frame.labels.shape[:-1], n_words, SPIKES_PER_WORD)
+    labels = labels.reshape(new_shape)
+    times = times.reshape(new_shape)
+    valid = valid.reshape(new_shape)
+    word_time = jnp.bitwise_and(times[..., 0], TIMESTAMP_MASK)
+    return PackedWords(labels=labels, times=word_time, valid=valid)
+
+
+def unpack_words(words: PackedWords, base_time: jax.Array | int = 0) -> EventFrame:
+    """Unpack layer-2 words back into single events.
+
+    ``base_time`` supplies the upper timestamp bits (the receiving FPGA's
+    synchronized system time); the multi-chip extension itself *discards* the
+    timestamp, which callers model by passing 0 and ignoring ``times``.
+    """
+    lead = words.labels.shape[:-2]
+    cap = words.labels.shape[-2] * SPIKES_PER_WORD
+    labels = words.labels.reshape(*lead, cap)
+    valid = words.valid.reshape(*lead, cap)
+    base = jnp.asarray(base_time, TIME_DTYPE)
+    upper = jnp.bitwise_and(base, ~jnp.int32(TIMESTAMP_MASK))
+    times = upper + words.times[..., None]
+    times = jnp.broadcast_to(times, words.labels.shape).reshape(*lead, cap)
+    return EventFrame(labels=labels, times=times, valid=valid)
+
+
+def words_required(n_events: jax.Array) -> jax.Array:
+    """Number of layer-2 words needed for ``n_events`` spikes (ceil div 3)."""
+    return -(-n_events // SPIKES_PER_WORD)
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPolicy:
+    """How event-frame capacity is provisioned.
+
+    ``strict`` mirrors hardware (fixed capacity, silent drop + counter);
+    ``provisioned`` sizes capacity from an expected-rate bound so gradient
+    based training sees loss-free traffic (see DESIGN.md §2).
+    """
+
+    mode: str = "strict"  # "strict" | "provisioned"
+    headroom: float = 2.0
+
+    def capacity_for(self, expected_events: int) -> int:
+        if self.mode == "provisioned":
+            return max(8, int(expected_events * self.headroom))
+        return max(8, int(expected_events))

@@ -1,0 +1,169 @@
+"""Label-LUT spike routing — the paper's §III datapath.
+
+Forward path (Node-FPGA → Aggregator): a full 16 bit → 16 bit Block-RAM
+lookup; one output bit is the routing enable, the remaining 15 bits are the
+on-wire label (the 16-bit MGT word reserves one bit for command messages).
+
+Reverse path (Aggregator → Node-FPGA): a full 15 bit → 17 bit lookup; one
+enable bit plus a 16-bit BSS-2 spike label.
+
+Inside the Aggregator, spikes are broadcast all-to-all with static per-route
+enables.  These tables are exactly reproduced here as gather-based lookups;
+the performance-critical fused path lives in ``repro.kernels.spike_router``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import LABEL_DTYPE, EventFrame, make_frame
+
+FWD_LABEL_BITS = 16          # BSS-2 spike labels entering the fwd LUT
+WIRE_LABEL_BITS = 15         # on-wire label (1 MGT bit reserved for commands)
+FWD_TABLE_SIZE = 1 << FWD_LABEL_BITS
+REV_TABLE_SIZE = 1 << WIRE_LABEL_BITS
+
+FWD_ENABLE_BIT = 15          # fwd LUT output: bit 15 = enable, bits 0..14 = wire label
+REV_ENABLE_BIT = 16          # rev LUT output: bit 16 = enable, bits 0..15 = BSS-2 label
+
+FWD_ENABLE_MASK = 1 << FWD_ENABLE_BIT
+REV_ENABLE_MASK = 1 << REV_ENABLE_BIT
+WIRE_LABEL_MASK = (1 << WIRE_LABEL_BITS) - 1
+CHIP_LABEL_MASK = (1 << FWD_LABEL_BITS) - 1
+
+
+class RoutingTables(NamedTuple):
+    """Per-node forward + reverse LUTs (one pair per Node-FPGA)."""
+
+    fwd: jax.Array  # int32[FWD_TABLE_SIZE]   enable<<15 | wire_label
+    rev: jax.Array  # int32[REV_TABLE_SIZE]   enable<<16 | chip_label
+
+
+# ---------------------------------------------------------------------------
+# Table construction
+# ---------------------------------------------------------------------------
+
+
+def build_fwd_table(chip_labels, wire_labels, enabled=None) -> jax.Array:
+    """Build the 16→16 forward LUT.
+
+    Entries not mentioned are disabled (spikes stay on-chip only).
+    """
+    chip_labels = jnp.asarray(chip_labels, LABEL_DTYPE)
+    wire_labels = jnp.asarray(wire_labels, LABEL_DTYPE) & WIRE_LABEL_MASK
+    if enabled is None:
+        enabled = jnp.ones_like(chip_labels, dtype=jnp.bool_)
+    values = jnp.where(enabled, wire_labels | FWD_ENABLE_MASK, wire_labels)
+    table = jnp.zeros((FWD_TABLE_SIZE,), LABEL_DTYPE)
+    return table.at[chip_labels].set(values)
+
+
+def build_rev_table(wire_labels, chip_labels, enabled=None) -> jax.Array:
+    """Build the 15→17 reverse LUT."""
+    wire_labels = jnp.asarray(wire_labels, LABEL_DTYPE) & WIRE_LABEL_MASK
+    chip_labels = jnp.asarray(chip_labels, LABEL_DTYPE) & CHIP_LABEL_MASK
+    if enabled is None:
+        enabled = jnp.ones_like(wire_labels, dtype=jnp.bool_)
+    values = jnp.where(enabled, chip_labels | REV_ENABLE_MASK, chip_labels)
+    table = jnp.zeros((REV_TABLE_SIZE,), LABEL_DTYPE)
+    return table.at[wire_labels].set(values)
+
+
+def identity_tables(n_labels: int | None = None) -> RoutingTables:
+    """Identity mapping with all routes enabled (for n_labels ≤ 2^15)."""
+    n = REV_TABLE_SIZE if n_labels is None else n_labels
+    if n > REV_TABLE_SIZE:
+        raise ValueError(f"identity mapping needs labels < 2^15, got {n}")
+    ids = jnp.arange(n, dtype=LABEL_DTYPE)
+    fwd = build_fwd_table(ids, ids)
+    rev = build_rev_table(ids, ids)
+    return RoutingTables(fwd=fwd, rev=rev)
+
+
+# ---------------------------------------------------------------------------
+# Lookups
+# ---------------------------------------------------------------------------
+
+
+def lookup_fwd(table: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """16-bit chip labels → (15-bit wire labels, routing enable)."""
+    entry = table[jnp.asarray(labels, LABEL_DTYPE) & CHIP_LABEL_MASK]
+    return entry & WIRE_LABEL_MASK, (entry & FWD_ENABLE_MASK) != 0
+
+
+def lookup_rev(table: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """15-bit wire labels → (16-bit BSS-2 labels, routing enable)."""
+    entry = table[jnp.asarray(labels, LABEL_DTYPE) & WIRE_LABEL_MASK]
+    return entry & CHIP_LABEL_MASK, (entry & REV_ENABLE_MASK) != 0
+
+
+def route_outbound(tables: RoutingTables, frame: EventFrame) -> EventFrame:
+    """Node-FPGA egress: fwd LUT + enable masking (timestamps discarded)."""
+    wire, en = lookup_fwd(tables.fwd, frame.labels)
+    return EventFrame(labels=wire, times=jnp.zeros_like(frame.times),
+                      valid=frame.valid & en)
+
+
+def route_inbound(tables: RoutingTables, frame: EventFrame,
+                  system_time: jax.Array | int = 0) -> EventFrame:
+    """Node-FPGA ingress: rev LUT + enable masking + timestamp re-attach."""
+    chip, en = lookup_rev(tables.rev, frame.labels)
+    times = jnp.full_like(frame.times, jnp.asarray(system_time, frame.times.dtype))
+    return EventFrame(labels=chip, times=times, valid=frame.valid & en)
+
+
+# ---------------------------------------------------------------------------
+# Aggregator route-enable matrix (static all-to-all enables)
+# ---------------------------------------------------------------------------
+
+
+def full_route_enables(n_nodes: int, self_loops: bool = False) -> jax.Array:
+    """All-to-all connectivity with optional self-loop suppression."""
+    m = jnp.ones((n_nodes, n_nodes), jnp.bool_)
+    if not self_loops:
+        m = m & ~jnp.eye(n_nodes, dtype=jnp.bool_)
+    return m
+
+
+def feedforward_route_enables(n_nodes: int) -> jax.Array:
+    """Chain topology: node i feeds node i+1 (layer-per-chip networks, §III)."""
+    m = jnp.zeros((n_nodes, n_nodes), jnp.bool_)
+    idx = jnp.arange(n_nodes - 1)
+    return m.at[idx, idx + 1].set(True)
+
+
+def fan_in_route_enables(n_nodes: int, receiver: int) -> jax.Array:
+    """N:1 fan-in used by the paper's Fig 5 measurement (3 senders, 1 receiver)."""
+    m = jnp.zeros((n_nodes, n_nodes), jnp.bool_)
+    senders = jnp.arange(n_nodes)
+    m = m.at[senders, receiver].set(True)
+    return m.at[receiver, receiver].set(False)
+
+
+def aggregate(frames: EventFrame, route_enables: jax.Array,
+              capacity: int) -> tuple[EventFrame, jax.Array]:
+    """The Aggregator broadcast: all-to-all with static per-route enables.
+
+    Args:
+      frames: stacked per-source frames — arrays shaped [n_src, capacity_in].
+      route_enables: bool[n_src, n_dst] static enables.
+      capacity: per-destination output frame capacity.
+
+    Returns:
+      (frames_out [n_dst, capacity], dropped [n_dst]) — events exceeding the
+      destination capacity are dropped and counted (mux congestion).
+    """
+    n_src, cap_in = frames.labels.shape
+    n_dst = route_enables.shape[1]
+    # Broadcast every source frame to every destination, gated by the enables.
+    labels = jnp.broadcast_to(frames.labels[:, None, :], (n_src, n_dst, cap_in))
+    times = jnp.broadcast_to(frames.times[:, None, :], (n_src, n_dst, cap_in))
+    valid = frames.valid[:, None, :] & route_enables[:, :, None]
+    # Destination-major flattening: [n_dst, n_src*cap_in].
+    labels = jnp.transpose(labels, (1, 0, 2)).reshape(n_dst, n_src * cap_in)
+    times = jnp.transpose(times, (1, 0, 2)).reshape(n_dst, n_src * cap_in)
+    valid = jnp.transpose(valid, (1, 0, 2)).reshape(n_dst, n_src * cap_in)
+    return make_frame(labels, times, valid, capacity)

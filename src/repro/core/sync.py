@@ -1,0 +1,84 @@
+"""Decentralized barrier synchronization (paper §II/§III).
+
+Every participating Node-FPGA sends a readiness command to the Aggregator
+over its MGT link; once requests from *all* participants have arrived, the
+Aggregator toggles an external system-start signal, releasing all playback
+executions within one 8 ns system-clock cycle.  The logic has configurable
+timeout and refractory periods as fault-recovery mechanisms, and is fully
+symmetric — no node is special.
+
+TPU mapping: an all-reduce over the mesh axis *is* this barrier — it is
+decentralized, symmetric and releases all participants together.  The
+timeout/refractory recovery semantics live at two levels:
+
+  * in-graph: ``barrier`` / ``barrier_release_time`` model the logic purely
+    functionally (used by tests + the latency model);
+  * host-level: ``runtime.watchdog`` applies the same timeout → recover →
+    refractory cycle to training steps (checkpoint/restart).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SYSTEM_CLOCK_NS = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """Aggregator barrier configuration (§III)."""
+
+    n_participants: int = 12
+    timeout_cycles: int = 125_000_000      # 1 s at 125 MHz
+    refractory_cycles: int = 12_500        # 100 µs lockout after a release
+
+
+def barrier(ready: jax.Array, axis_name: str) -> jax.Array:
+    """In-graph decentralized barrier across a mesh axis.
+
+    Inside ``shard_map``: every shard contributes its readiness; the return
+    value is True on *all* shards iff all shards were ready — the all-reduce
+    plays the Aggregator's role and the result broadcast plays the external
+    start signal.
+    """
+    ready_i = jnp.asarray(ready, jnp.int32)
+    n_ready = jax.lax.psum(ready_i, axis_name)
+    return n_ready == jax.lax.psum(jnp.ones_like(ready_i), axis_name)
+
+
+def barrier_release_time(ready_times: jax.Array,
+                         cfg: SyncConfig) -> tuple[jax.Array, jax.Array]:
+    """Functional model of the Aggregator's synchronization logic.
+
+    Args:
+      ready_times: int32[n] cycle at which each node's readiness command
+        arrives; a negative value means the node never reports (fault).
+      cfg: timeout / refractory configuration.
+
+    Returns:
+      (release_cycle, timed_out): the cycle at which the start signal toggles
+      and whether the timeout recovery fired.  On timeout the signal is
+      released at ``timeout_cycles`` so healthy nodes can proceed / recover.
+    """
+    ready_times = jnp.asarray(ready_times, jnp.int32)
+    missing = ready_times < 0
+    latest = jnp.max(jnp.where(missing, jnp.iinfo(jnp.int32).max, ready_times))
+    timed_out = jnp.any(missing) | (latest > cfg.timeout_cycles)
+    release = jnp.where(timed_out, jnp.int32(cfg.timeout_cycles), latest)
+    return release, timed_out
+
+
+def refractory_mask(request_times: jax.Array, release_cycle: jax.Array,
+                    cfg: SyncConfig) -> jax.Array:
+    """Requests arriving within the refractory window after a release are
+    ignored (True = accepted)."""
+    request_times = jnp.asarray(request_times, jnp.int32)
+    return request_times >= release_cycle + cfg.refractory_cycles
+
+
+def start_alignment_ns() -> float:
+    """Real-time-section start alignment guarantee: one system clock (§III)."""
+    return SYSTEM_CLOCK_NS

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the performance-critical compute hot spots.
+
+Each kernel directory contains:
+  * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+    VMEM tiling, written for TPU (MXU-aligned tiles, sequential-grid
+    accumulator patterns);
+  * ``ops.py``    — the jit'd public wrapper (padding, head grouping,
+    interpret-mode selection);
+  * ``ref.py``    — the pure-jnp oracle used by the allclose sweep tests.
+
+This container is CPU-only: kernels are validated with ``interpret=True``,
+which executes the kernel body per grid cell on CPU.  The model stack
+selects between the XLA path (used by the CPU dry-run so
+``cost_analysis()`` reflects the real HLO) and the Pallas path via config.
+"""
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret kernels unless running on a real TPU."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,59 @@
+"""Public jit'd wrapper around the flash-attention Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.flash_attention import (
+    DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q, flash_attention_fwd)
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool | None = None) -> jax.Array:
+    """Flash attention with GQA and causal masking.
+
+    q: [batch, q_heads, seq_q, d];  k, v: [batch, kv_heads, seq_kv, d].
+    Sequences are padded to block multiples internally; padded KV positions
+    are masked, padded Q rows are sliced off.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(q.shape[-1])
+
+    seq_q, seq_kv = q.shape[2], k.shape[2]
+    if causal and seq_q != seq_kv:
+        raise ValueError("causal kernel requires seq_q == seq_kv; "
+                         "use the decode path for single-token queries")
+    block_q = min(block_q, max(8, 1 << (seq_q - 1).bit_length()))
+    block_kv = min(block_kv, max(8, 1 << (seq_kv - 1).bit_length()))
+
+    qp = _pad_to(q, 2, block_q)
+    kp = _pad_to(k, 2, block_kv)
+    vp = _pad_to(v, 2, block_kv)
+    # true_kv_len masks the padded KV columns inside the kernel.
+    out = flash_attention_fwd(
+        qp, kp, vp, sm_scale=float(sm_scale), causal=causal,
+        true_kv_len=seq_kv, block_q=block_q, block_kv=block_kv,
+        interpret=interpret)
+    return out[:, :, :seq_q]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (causal + GQA)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, sm_scale: float | None = None,
+                  causal: bool = True):
+    """Reference attention.
+
+    q: [batch, q_heads, seq_q, d];  k, v: [batch, kv_heads, seq_kv, d].
+    GQA: q_heads must be a multiple of kv_heads.
+    """
+    batch, q_heads, seq_q, d = q.shape
+    kv_heads, seq_kv = k.shape[1], k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    group = q_heads // kv_heads
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        # Causal alignment for seq_q != seq_kv (decode): query i attends to
+        # keys [0, seq_kv - seq_q + i].
+        qi = jnp.arange(seq_q)[:, None] + (seq_kv - seq_q)
+        ki = jnp.arange(seq_kv)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Public jit'd wrapper for the fused LIF step."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.lif_step.lif_step import BLOCK_B, BLOCK_N, lif_step_fwd
+from repro.snn import neuron as nrn
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def lif_step(v, i_syn, drive, *, params: nrn.NeuronParams = nrn.LIF,
+             interpret: bool | None = None):
+    """Fused LIF update; pads (batch, neurons) to tile multiples internally."""
+    if interpret is None:
+        interpret = default_interpret()
+    batch, n = v.shape
+    pb, pn = (-batch) % BLOCK_B, (-n) % BLOCK_N
+    pad = lambda x: jnp.pad(x, ((0, pb), (0, pn)))
+    v_new, i_new, spikes = lif_step_fwd(
+        pad(v), pad(i_syn), pad(drive),
+        alpha_mem=params.alpha_mem, alpha_syn=params.alpha_syn,
+        v_leak=params.v_leak, v_th=params.v_th, v_reset=params.v_reset,
+        interpret=interpret)
+    return v_new[:batch, :n], i_new[:batch, :n], spikes[:batch, :n]

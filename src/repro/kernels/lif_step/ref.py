@@ -1,0 +1,15 @@
+"""Oracle for the fused LIF step — delegates to the jnp substrate."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.snn import neuron as nrn
+
+
+def lif_step_ref(v, i_syn, drive, *, params: nrn.NeuronParams = nrn.LIF):
+    state = nrn.NeuronState(v=v, i_syn=i_syn,
+                            w_adapt=jnp.zeros_like(v),
+                            refrac=jnp.zeros(v.shape, jnp.int32))
+    new_state, spikes = nrn.neuron_step(state, drive, params)
+    return new_state.v, new_state.i_syn, spikes

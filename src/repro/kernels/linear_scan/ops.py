@@ -1,0 +1,39 @@
+"""Public jit'd wrapper for the chunked linear recurrence kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.linear_scan.linear_scan import DEFAULT_CHUNK, linear_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "chunk", "interpret"))
+def linear_scan(q, k, v, w, u=None, *, mode: str = "inclusive",
+                chunk: int = DEFAULT_CHUNK,
+                interpret: bool | None = None) -> jax.Array:
+    """Diagonal-decay linear recurrence over a full sequence.
+
+    q, k, w: [batch, heads, T, K]; v: [batch, heads, T, V]; u: [heads, K]
+    (bonus mode only).  T is padded to a chunk multiple internally; padded
+    steps use w=0, k=0, so they do not perturb the carry.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    batch, heads, t, kdim = q.shape
+    chunk = min(chunk, max(8, 1 << (t - 1).bit_length()))
+    pad = (-t) % chunk
+    if pad:
+        padw = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        w = jnp.pad(w, padw)
+    if u is None:
+        u = jnp.zeros((heads, kdim), q.dtype)
+    out = linear_scan_fwd(q, k, v, w, u, mode=mode, chunk=chunk,
+                          interpret=interpret)
+    return out[:, :, :t]

@@ -1,0 +1,124 @@
+"""Sequential (exact) oracle for the chunked linear recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(q, k, v, w, u=None, *, mode: str = "inclusive"):
+    """Step-by-step recurrence via lax.scan.
+
+    q, k, w: [batch, heads, T, K]; v: [batch, heads, T, V]; u: [heads, K].
+    Returns y: [batch, heads, T, V].
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    batch, heads, t, kdim = q.shape
+    vdim = v.shape[-1]
+    if u is None:
+        u = jnp.zeros((heads, kdim), jnp.float32)
+    u = jnp.broadcast_to(u[None], (batch, heads, kdim)).astype(jnp.float32)
+
+    def step(h, xs):
+        q_t, k_t, v_t, w_t = xs                 # [B,H,K] / [B,H,V]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,K,V]
+        if mode == "bonus":
+            y = jnp.einsum("bhk,bhkv->bhv", q_t,
+                           h + u[..., :, None] * kv)
+            h = jnp.exp(w_t)[..., None] * h + kv
+        else:
+            h = jnp.exp(w_t)[..., None] * h + kv
+            y = jnp.einsum("bhk,bhkv->bhv", q_t, h)
+        return h, y
+
+    h0 = jnp.zeros((batch, heads, kdim, vdim), jnp.float32)
+    xs = (jnp.moveaxis(q, 2, 0), jnp.moveaxis(k, 2, 0),
+          jnp.moveaxis(v, 2, 0), jnp.moveaxis(w, 2, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 2)
+
+
+def linear_scan_chunked(q, k, v, w, u=None, *, mode: str = "inclusive",
+                        chunk: int = 16):
+    """Chunked pure-jnp evaluation (the XLA-path production implementation).
+
+    Same math as the Pallas kernel: exact per-(t,s,k) broadcast for the
+    intra-chunk term (unconditionally stable — all exponents ≤ 0), matmuls
+    for the inter-chunk term, ``lax.scan`` over chunks carrying the [K, V]
+    state.  T/chunk scan steps instead of T → fast to compile/partition and
+    MXU-heavy instead of element-serial.
+    """
+    orig_dtype = v.dtype
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    batch, heads, t, kdim = q.shape
+    vdim = v.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        pw = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        q, k, v, w = (jnp.pad(a, pw) for a in (q, k, v, w))
+    nc = (t + pad) // chunk
+
+    def chunks(a, d):
+        return jnp.moveaxis(a.reshape(batch, heads, nc, chunk, d), 2, 0)
+
+    qs, ks, vs, ws = (chunks(a, d) for a, d in
+                      ((q, kdim), (k, kdim), (v, vdim), (w, kdim)))
+
+    strict = mode == "bonus"
+    t_idx = jnp.arange(chunk)
+    mask = (t_idx[:, None] > t_idx[None, :]) if strict \
+        else (t_idx[:, None] >= t_idx[None, :])
+    if u is None:
+        u = jnp.zeros((heads, kdim), jnp.float32)
+    u = u.astype(jnp.float32)
+
+    def body(h, xs):
+        qc, kc, vc, wc = xs                      # [B,H,C,K] / [B,H,C,V]
+        b = jnp.cumsum(wc, axis=2)               # inclusive cumsum
+        beta = b - wc if strict else b
+        # inter-chunk: (q ⊙ e^β) @ h
+        y = jnp.einsum("bhck,bhkv->bhcv", qc * jnp.exp(beta), h)
+        # intra-chunk: exact broadcast.  Valid (s ≤ t) exponents are ≤ 0;
+        # masked ones can overflow, so clamp before exp (exact for valid).
+        expo = beta[:, :, :, None, :] - b[:, :, None, :, :]   # [B,H,C,C,K]
+        a = jnp.einsum("bhtk,bhsk,bhtsk->bhts", qc, kc,
+                       jnp.exp(jnp.minimum(expo, 0.0)))
+        a = a * mask
+        y = y + jnp.einsum("bhts,bhsv->bhtv", a, vc)
+        if strict:
+            diag = jnp.einsum("bhck,hk,bhck->bhc", qc, u, kc)
+            y = y + diag[..., None] * vc
+        # carry update
+        b_last = b[:, :, -1:, :]
+        h = jnp.exp(b_last[:, :, 0])[..., None] * h \
+            + jnp.einsum("bhck,bhcv->bhkv", kc * jnp.exp(b_last - b), vc)
+        return h, y
+
+    h0 = jnp.zeros((batch, heads, kdim, vdim), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (qs, ks, vs, ws))
+    ys = jnp.moveaxis(ys, 0, 2).reshape(batch, heads, t + pad, vdim)
+    return ys[:, :, :t].astype(orig_dtype)
+
+
+def linear_scan_decode_ref(h, q_t, k_t, v_t, w_t, u=None, *,
+                           mode: str = "inclusive"):
+    """Single decode step: returns (new_state, y_t).
+
+    h: [batch, heads, K, V]; q_t/k_t/w_t: [batch, heads, K]; v_t: [batch, heads, V].
+    """
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    if mode == "bonus":
+        if u is None:
+            raise ValueError("bonus mode needs u")
+        y = jnp.einsum("bhk,bhkv->bhv", q_t, h + u[None, :, :, None] * kv)
+        h = jnp.exp(w_t)[..., None] * h + kv
+    else:
+        h = jnp.exp(w_t)[..., None] * h + kv
+        y = jnp.einsum("bhk,bhkv->bhv", q_t, h)
+    return h, y

@@ -1,0 +1,36 @@
+"""Public jit'd wrapper for the spike-router kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.spike_router.spike_router import spike_router_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def route_and_pack(labels: jax.Array, valid: jax.Array, lut: jax.Array, *,
+                   capacity: int, interpret: bool | None = None):
+    """Fused LUT-route + enable-mask + capacity-pack.
+
+    labels: int[..., n_events]; valid: bool/int[..., n_events];
+    lut: int32[65536] forward routing table.
+
+    Returns (out_labels i32[..., capacity], out_valid bool[..., capacity],
+             dropped i32[...]).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    lead = labels.shape[:-1]
+    n = labels.shape[-1]
+    labels2 = labels.reshape(-1, n).astype(jnp.int32)
+    valid2 = valid.reshape(-1, n).astype(jnp.int32)
+    out_l, out_v, dropped = spike_router_fwd(
+        labels2, valid2, lut.astype(jnp.int32), capacity=capacity,
+        interpret=interpret)
+    return (out_l.reshape(*lead, capacity),
+            out_v.reshape(*lead, capacity).astype(jnp.bool_),
+            dropped.reshape(*lead))

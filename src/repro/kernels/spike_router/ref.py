@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused route-and-pack datapath.
+
+Built directly on ``repro.core`` (the semantic implementation) so the kernel
+is validated against the same code the SNN substrate runs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.events import EventFrame, make_frame
+from repro.core.routing import lookup_fwd
+
+
+def spike_router_ref(labels, valid, lut, *, capacity: int):
+    """Returns (out_labels, out_valid, dropped) matching the kernel."""
+    labels = jnp.asarray(labels, jnp.int32)
+    valid = jnp.asarray(valid).astype(jnp.bool_)
+    wire, enabled = lookup_fwd(lut, labels)
+    frame, dropped = make_frame(wire, jnp.zeros_like(wire), valid & enabled,
+                                capacity)
+    out_labels = jnp.where(frame.valid, frame.labels, 0)
+    return (out_labels.astype(jnp.int32),
+            frame.valid.astype(jnp.int32),
+            dropped.astype(jnp.int32)[..., None])

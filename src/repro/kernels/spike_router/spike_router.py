@@ -1,0 +1,88 @@
+"""The paper's Node-FPGA routing datapath as one fused Pallas kernel.
+
+Per frame: 16-bit labels → full 16→16 BRAM-style LUT (one output bit is the
+routing enable, 15 bits the wire label) → enable masking → capacity-bounded
+compaction (congestion drop + count).  This is §III's multi-chip extension:
+"uses a Block-RAM based lookup for 15 bit labels and routing enable".
+
+TPU adaptation: the 64 Ki-entry LUT (256 KiB as int32) fits entirely in
+VMEM — the BRAM of the TPU — so it is mapped as one unblocked input.  Event
+frames are small (≤ a few thousand events); each grid cell routes one frame:
+
+  grid = (batch,) ; per cell:
+    entry  = LUT[label]              (VMEM gather)
+    ok     = valid & enable-bit
+    pos    = exclusive-prefix-sum(ok)   (compaction index)
+    out[pos] = wire-label where ok and pos < capacity
+
+The prefix-sum + masked scatter realizes the hardware's pack unit.  The
+scatter targets a VMEM-resident output row; interpret mode executes it
+directly, on TPU it lowers to a one-hot matmul-style scatter (small C).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WIRE_MASK = 0x7FFF
+ENABLE_BIT = 15
+
+
+def _router_kernel(labels_ref, valid_ref, lut_ref, out_labels_ref,
+                   out_valid_ref, dropped_ref, *, capacity: int):
+    labels = labels_ref[0]                       # [N] int32
+    valid = valid_ref[0]                         # [N] int32 (0/1)
+    lut = lut_ref[...]                           # [65536] int32, fully in VMEM
+
+    entry = jnp.take(lut, labels & 0xFFFF, axis=0)
+    wire = entry & WIRE_MASK
+    enabled = (entry >> ENABLE_BIT) & 1
+    ok = (valid * enabled).astype(jnp.int32)     # [N]
+
+    pos = jnp.cumsum(ok) - ok                    # exclusive prefix sum
+    keep = (ok == 1) & (pos < capacity)
+    # Park rejected events in an overflow slot, then slice it away.
+    idx = jnp.where(keep, pos, capacity)
+
+    out_l = jnp.zeros((capacity + 1,), jnp.int32).at[idx].set(
+        jnp.where(keep, wire, 0))
+    out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(
+        jnp.where(keep, 1, 0))
+    out_labels_ref[0] = out_l[:capacity]
+    out_valid_ref[0] = out_v[:capacity]
+    dropped_ref[0, 0] = jnp.sum(ok) - jnp.sum(jnp.where(keep, 1, 0))
+
+
+def spike_router_fwd(labels: jax.Array, valid: jax.Array, lut: jax.Array, *,
+                     capacity: int, interpret: bool = True):
+    """Core pallas_call.
+
+    labels, valid: int32[batch, n_events]; lut: int32[65536].
+    Returns (out_labels i32[batch, capacity], out_valid i32[batch, capacity],
+             dropped i32[batch, 1]).
+    """
+    batch, n_events = labels.shape
+    grid = (batch,)
+
+    ev_spec = pl.BlockSpec((1, n_events), lambda b: (b, 0))
+    lut_spec = pl.BlockSpec(lut.shape, lambda b: (0,))
+    out_spec = pl.BlockSpec((1, capacity), lambda b: (b, 0))
+    drop_spec = pl.BlockSpec((1, 1), lambda b: (b, 0))
+
+    kernel = functools.partial(_router_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[ev_spec, ev_spec, lut_spec],
+        out_specs=(out_spec, out_spec, drop_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(labels, valid, lut)

@@ -1,0 +1,90 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins per (arch, shape).
+
+LM transformer shapes (assignment):
+    train_4k     seq 4 096 × global batch 256   → train_step
+    prefill_32k  seq 32 768 × global batch 32   → prefill
+    decode_32k   seq 32 768 × global batch 128  → serve_step (1 new token,
+                                                  KV cache of seq_len)
+    long_500k    seq 524 288 × global batch 1   → serve_step; requires
+                 sub-quadratic mixing → runs only for ssm/hybrid archs.
+
+``input_specs`` returns ShapeDtypeStructs only — weak-type-correct,
+shardable, no device allocation (the dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+SHAPE_NAMES = list(SHAPES)
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(supported, reason-if-not) for an (arch, shape) cell."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full quadratic attention — long_500k skipped per "
+                       "assignment (see DESIGN.md §5)")
+    return True, ""
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns {"kind", "batch": {...}} where batch mirrors the runtime batch
+    pytree; decode adds "caches" + "tokens" + "index".
+    """
+    spec = SHAPES[shape_name]
+    b, s = spec["global_batch"], spec["seq_len"]
+    kind = spec["kind"]
+    i32, dt = jnp.int32, jnp.dtype(cfg.dtype)
+
+    def train_batch():
+        if cfg.encoder_layers:
+            dec = max(8, s // cfg.decoder_len_ratio)
+            return {"embeds": _struct((b, s, cfg.d_model), dt),
+                    "tokens": _struct((b, dec + 1), i32)}
+        if cfg.input_mode == "embeddings":
+            return {"embeds": _struct((b, s, cfg.d_model), dt),
+                    "labels": _struct((b, s), i32)}
+        return {"tokens": _struct((b, s + 1), i32)}
+
+    def prefill_batch():
+        if cfg.encoder_layers:
+            dec = max(8, s // cfg.decoder_len_ratio)
+            return {"embeds": _struct((b, s, cfg.d_model), dt),
+                    "tokens": _struct((b, dec), i32)}
+        if cfg.input_mode == "embeddings":
+            return {"embeds": _struct((b, s, cfg.d_model), dt)}
+        return {"tokens": _struct((b, s), i32)}
+
+    if kind == "train":
+        return {"kind": "train", "batch": train_batch()}
+    if kind == "prefill":
+        return {"kind": "prefill", "batch": prefill_batch()}
+
+    # decode: one new token against a cache of seq_len.
+    caches = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    out = {"kind": "decode",
+           "tokens": _struct((b,), i32),
+           "caches": caches,
+           "index": _struct((), i32)}
+    if cfg.encoder_layers:
+        out["encoder_out"] = _struct((b, s, cfg.d_model), dt)
+    return out

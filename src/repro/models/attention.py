@@ -1,0 +1,351 @@
+"""Attention variants: GQA/MQA/MHA, MLA (DeepSeek-V2), cross-attention.
+
+Three entry modes share one parameter set:
+  * ``train``   — full causal self-attention over the sequence;
+  * ``prefill`` — as train, but also returns the populated KV cache;
+  * ``decode``  — one query token against the cache (in-place dynamic
+                  update at ``cache_index``).
+
+MLA decode uses the *absorbed* formulation: queries are projected into the
+kv_lora latent space (q_eff = q_nope · W_uk), scores are taken directly
+against the cached compressed latent, and the attention-weighted latent is
+expanded through W_uv afterwards — the cache stays at
+(kv_lora + rope_dim) per token, the whole point of MLA.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Param, apply_rope, dense_init, rms_norm
+from repro.parallel.sharding import constrain
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # [B, n_kv, S_max, hd]   (MLA: c_kv [B, S_max, kv_lora])
+    v: jax.Array   # [B, n_kv, S_max, hd]   (MLA: k_rope [B, S_max, rope])
+
+
+# ---------------------------------------------------------------------------
+# Scaled dot-product attention (XLA or Pallas path)
+# ---------------------------------------------------------------------------
+
+
+def _chunked_attention(q, k, v, *, causal: bool, sm_scale: float,
+                       block_kv: int, score_dtype=jnp.float32):
+    """Flash-style online-softmax attention in pure jnp (lax.scan over KV
+    blocks) — the XLA-path equivalent of the Pallas kernel.  Materializes
+    only [*, Sq, block_kv] score tiles instead of the full [*, Sq, Skv]
+    matrix: the memory-roofline fix for long-sequence train/prefill
+    (EXPERIMENTS.md §Perf)."""
+    b, hq, sq, d = q.shape
+    dv = v.shape[-1]
+    skv = k.shape[2]
+    pad = (-skv) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nb = (skv + pad) // block_kv
+    kb = jnp.moveaxis(k.reshape(b, hq, nb, block_kv, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hq, nb, block_kv, dv), 2, 0)
+
+    q_pos = jnp.arange(sq) + (skv - sq)        # causal alignment
+
+    neg_big = jnp.asarray(-1e30 if score_dtype == jnp.float32 else -3e38,
+                          score_dtype)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, idx = xs
+        # Score tile in ``score_dtype`` (bf16 halves the dominant HBM
+        # traffic; running max/normalizer stats stay f32 below).
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k_blk,
+                       preferred_element_type=score_dtype) \
+            * jnp.asarray(sm_scale, score_dtype)
+        # Keep the tile on the q sharding (heads or seq split) — without the
+        # constraint the scan carry resharding replicates Sq (§Perf iter 3).
+        s = constrain(s, "bhsk")
+        kv_pos = idx * block_kv + jnp.arange(block_kv)
+        mask = kv_pos[None, :] < skv
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None], s, neg_big)
+        m_cur = jnp.max(s, axis=-1, keepdims=True).astype(jnp.float32)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new.astype(score_dtype))
+        p = jnp.where(mask[None, None], p, 0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(
+            p, axis=-1, keepdims=True).astype(jnp.float32)
+        # No dtype cast on p: a cast materializes a second tile copy in HBM
+        # (§Perf iter 5); mixed-precision dot handles bf16 v directly.
+        acc = acc * alpha + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, v_blk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (constrain(jnp.full((b, hq, sq, 1), -1e30, jnp.float32), "bhsk"),
+            constrain(jnp.zeros((b, hq, sq, 1), jnp.float32), "bhsk"),
+            constrain(jnp.zeros((b, hq, sq, dv), jnp.float32), "bhsk"))
+    (m, l, acc), _ = jax.lax.scan(body, init,
+                                  (kb, vb, jnp.arange(nb)))
+    return (acc / jnp.where(l == 0.0, 1.0, l)).astype(q.dtype)
+
+
+def sdpa(q, k, v, *, causal: bool, impl: str = "xla",
+         sm_scale: float | None = None, decode_index=None,
+         block_kv: int = 0, score_dtype=jnp.float32):
+    """q: [B,Hq,Sq,hd]; k,v: [B,Hkv,Skv,hd].
+
+    ``decode_index``: when set, mask keys at positions > index (decode with a
+    statically sized cache).  ``block_kv`` > 0 selects the chunked
+    online-softmax path for train/prefill.
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    if impl == "pallas" and decode_index is None:
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, sm_scale=sm_scale)
+
+    if decode_index is not None:
+        # Decode: grouped-query attention against the sharded cache.  No
+        # head repetition (that would force a full KV re-shard/gather) and
+        # no f32 cast of the cache — bf16 inputs, ``score_dtype`` accum.
+        b, hq, sq, d = q.shape
+        hkv, skv = k.shape[1], k.shape[2]
+        assert sq == 1, "decode path expects a single query position"
+        g = hq // hkv
+        qg = q.reshape(b, hkv, g, d)
+        s = jnp.einsum("bhgd,bhkd->bhgk", qg, k,
+                       preferred_element_type=score_dtype) \
+            * jnp.asarray(sm_scale, score_dtype)
+        s = constrain(s, "bhks")
+        neg = jnp.asarray(-1e30 if score_dtype == jnp.float32 else -3e38,
+                          score_dtype)
+        kpos = jnp.arange(skv)
+        s = jnp.where(kpos[None, None, None, :] <= decode_index, s, neg)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1) \
+            if score_dtype == jnp.float32 else jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+    group = q.shape[1] // k.shape[1]
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    q = constrain(q, "bhsk")
+    k = constrain(k, "bhsk")
+    v = constrain(v, "bhsk")
+    if block_kv:
+        return _chunked_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                                  block_kv=block_kv, score_dtype=score_dtype)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * sm_scale
+    s = constrain(s, "bhss")
+    sq, skv = q.shape[2], k.shape[2]
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        s = jnp.where(jnp.arange(skv)[None, :] <= qpos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, ("embed", "heads")),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, ("embed", "heads")),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, ("embed", "heads")),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, ("heads", "embed"),
+                         scale=1.0 / (cfg.n_heads * hd) ** 0.5),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = Param(jnp.ones((hd,), jnp.float32), (None,))
+        p["k_norm"] = Param(jnp.ones((hd,), jnp.float32), (None,))
+    return p
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+
+def gqa_forward(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                mode: str = "train", positions: jax.Array | None = None,
+                cache: KVCache | None = None, cache_index=None,
+                kv_source: jax.Array | None = None, use_rope: bool = True):
+    """Returns (out [B,S,D], new_cache | None).
+
+    ``kv_source``: cross-attention source (encoder states); K/V come from it
+    and no causal mask / rope applies.
+    """
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    dt = x.dtype
+    cross = kv_source is not None
+
+    q = _split_heads(x @ params["wq"].value.astype(dt), cfg.n_heads, hd)
+    q = constrain(q, "bhsk")
+    kv_in = kv_source if cross else x
+    if cross and mode == "decode" and cache is not None:
+        # Cross K/V are static after prefill; reuse the cache as-is.
+        k, v = cache.k, cache.v
+    else:
+        k = _split_heads(kv_in @ params["wk"].value.astype(dt),
+                         cfg.n_kv_heads, hd)
+        v = _split_heads(kv_in @ params["wv"].value.astype(dt),
+                         cfg.n_kv_heads, hd)
+
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"].value)
+        if not (cross and mode == "decode"):
+            k = rms_norm(k, params["k_norm"].value)
+
+    if use_rope and not cross:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode" and cache is not None and not cross:
+        # Insert this step's K/V at cache_index, attend over the prefix.
+        k_cache = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, 0, cache_index, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, 0, cache_index, 0))
+        new_cache = KVCache(k=k_cache, v=v_cache)
+        out = sdpa(q, k_cache.astype(dt), v_cache.astype(dt), causal=False,
+                   impl=cfg.attention_impl, decode_index=cache_index,
+                   score_dtype=jnp.dtype(cfg.attn_score_dtype))
+    else:
+        out = sdpa(q, k, v, causal=not cross, impl=cfg.attention_impl,
+                   block_kv=cfg.attn_block_kv,
+                   score_dtype=jnp.dtype(cfg.attn_score_dtype))
+        if mode == "prefill":
+            new_cache = KVCache(k=k, v=v)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    out = constrain(out, "bsh")
+    return out @ params["wo"].value.astype(dt), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], d, cfg.q_lora_rank, ("embed", None))
+        p["q_norm"] = Param(jnp.ones((cfg.q_lora_rank,), jnp.float32), (None,))
+        p["wq_b"] = dense_init(ks[1], cfg.q_lora_rank, h * (nope + rope_d),
+                               (None, "heads"))
+    else:
+        p["wq"] = dense_init(ks[1], d, h * (nope + rope_d), ("embed", "heads"))
+    p["wkv_a"] = dense_init(ks[2], d, cfg.kv_lora_rank + rope_d,
+                            ("embed", None))
+    p["kv_norm"] = Param(jnp.ones((cfg.kv_lora_rank,), jnp.float32), (None,))
+    p["wkv_b"] = dense_init(ks[3], cfg.kv_lora_rank, h * (nope + vd),
+                            (None, "heads"))
+    p["wo"] = dense_init(ks[4], h * vd, d, ("heads", "embed"),
+                         scale=1.0 / (h * vd) ** 0.5)
+    return p
+
+
+def _mla_q(params, x, cfg, positions):
+    b, s, _ = x.shape
+    h, nope, rope_d = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    dt = x.dtype
+    if cfg.q_lora_rank:
+        cq = rms_norm(x @ params["wq_a"].value.astype(dt),
+                      params["q_norm"].value)
+        q = cq @ params["wq_b"].value.astype(dt)
+    else:
+        q = x @ params["wq"].value.astype(dt)
+    q = q.reshape(b, s, h, nope + rope_d).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                mode: str = "train", positions: jax.Array | None = None,
+                cache: KVCache | None = None, cache_index=None):
+    """MLA attention.  Cache layout: KVCache(c_kv [B,S,kv_lora],
+    k_rope [B,S,rope_d]) — the compressed latent, not expanded K/V."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    dt = x.dtype
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)
+
+    kv_a = x @ params["wkv_a"].value.astype(dt)          # [B,S,lora+rope]
+    c_kv = rms_norm(kv_a[..., :lora], params["kv_norm"].value)
+    k_rope = apply_rope(kv_a[..., lora:], positions, cfg.rope_theta)
+
+    sm_scale = 1.0 / ((nope + rope_d) ** 0.5)
+    w_kv_b = params["wkv_b"].value.astype(dt).reshape(lora, h, nope + vd)
+    w_uk, w_uv = w_kv_b[..., :nope], w_kv_b[..., nope:]
+
+    new_cache = None
+    if mode == "decode" and cache is not None:
+        c_cache = jax.lax.dynamic_update_slice(
+            cache.k, c_kv.astype(cache.k.dtype), (0, cache_index, 0))
+        r_cache = jax.lax.dynamic_update_slice(
+            cache.v, k_rope.astype(cache.v.dtype), (0, cache_index, 0))
+        new_cache = KVCache(k=c_cache, v=r_cache)
+        # Absorbed decode: q_eff[b,h,q,lora] = q_nope · W_uk
+        q_eff = jnp.einsum("bhqn,lhn->bhql", q_nope, w_uk)
+        q_eff = constrain(q_eff, "bhsk")
+        scores = (jnp.einsum("bhql,bsl->bhqs", q_eff.astype(jnp.float32),
+                             c_cache.astype(jnp.float32))
+                  + jnp.einsum("bhqr,bsr->bhqs", q_rope.astype(jnp.float32),
+                               r_cache.astype(jnp.float32))) * sm_scale
+        scores = constrain(scores, "bhss")
+        kpos = jnp.arange(c_cache.shape[1])
+        scores = jnp.where(kpos[None, None, None, :] <= cache_index,
+                           scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        latent = jnp.einsum("bhqs,bsl->bhql", p,
+                            c_cache.astype(jnp.float32)).astype(dt)
+        out = jnp.einsum("bhql,lhv->bhqv", latent, w_uv)
+    else:
+        # Train/prefill: expand K/V (compute-rich path, MXU-friendly).
+        kv = jnp.einsum("bsl,lhx->bhsx", c_kv, w_kv_b)   # [B,H,S,nope+vd]
+        kv = constrain(kv, "bhsk")
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, None], (b, h, s, rope_d))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = sdpa(q, k, v, causal=True, impl=cfg.attention_impl,
+                   sm_scale=sm_scale, block_kv=cfg.attn_block_kv,
+                   score_dtype=jnp.dtype(cfg.attn_score_dtype))
+        if mode == "prefill":
+            new_cache = KVCache(k=c_kv, v=k_rope)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vd)
+    out = constrain(out, "bsh")
+    return out @ params["wo"].value.astype(dt), new_cache

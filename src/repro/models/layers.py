@@ -1,0 +1,186 @@
+"""Building blocks: params with logical axes, norms, RoPE, MLPs, embeddings.
+
+Every parameter leaf is a ``Param(value, axes)`` where ``axes`` names the
+logical role of each dimension (``"embed"``, ``"heads"``, ``"ff"``,
+``"experts"``, ``"vocab"``, ``"layers"``, ``None``).  ``repro.parallel.
+sharding`` resolves logical axes to mesh axes; the model code never touches
+mesh names — the same definition runs on 1 CPU device and on the 512-chip
+production mesh.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """A parameter array + static logical-axis annotation.
+
+    Registered as a pytree node whose only child is ``value`` — ``axes`` is
+    aux data, so jit/sharding machinery sees pure array leaves, while
+    ``parallel.sharding`` can still recover the logical axes by walking the
+    tree with ``is_leaf=is_param``.
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def map_params(fn, tree):
+    """tree_map over Param leaves (fn receives the Param)."""
+    return jax.tree.map(fn, tree, is_leaf=is_param)
+
+
+def dense_init(key, in_dim: int, out_dim: int, axes, scale: float | None = None,
+               dtype=jnp.float32) -> Param:
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return Param(jax.random.normal(key, (in_dim, out_dim), dtype) * scale, axes)
+
+
+def norm_init(dim: int, axes=("embed",), zero_centered: bool = False) -> Param:
+    init = jnp.zeros if zero_centered else jnp.ones
+    return Param(init((dim,), jnp.float32), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, params: dict, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params["scale"].value, params["bias"].value)
+    return rms_norm(x, params["scale"].value)
+
+
+def init_norm(cfg: ModelConfig) -> dict:
+    p = {"scale": norm_init(cfg.d_model)}
+    if cfg.norm == "layernorm":
+        p["bias"] = norm_init(cfg.d_model, zero_centered=True)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, head_dim]; positions: [..., seq] (int)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None,
+             ff_axis: str = "ff") -> dict:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("silu", "gelu"):
+        return {
+            "w_gate": dense_init(ks[0], d, d_ff, ("embed", ff_axis)),
+            "w_up": dense_init(ks[1], d, d_ff, ("embed", ff_axis)),
+            "w_down": dense_init(ks[2], d_ff, d, (ff_axis, "embed")),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, d_ff, ("embed", ff_axis)),
+        "w_down": dense_init(ks[1], d_ff, d, (ff_axis, "embed")),
+    }
+
+
+def apply_mlp(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "gelu_plain": jax.nn.gelu}[cfg.mlp_act]
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"].value.astype(x.dtype)) \
+            * (x @ params["w_up"].value.astype(x.dtype))
+    else:
+        h = act(x @ params["w_up"].value.astype(x.dtype))
+    return h @ params["w_down"].value.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig) -> Param:
+    return Param(jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02, ("vocab", "embed"))
+
+
+def embed_tokens(tokens: jax.Array, embedding: Param,
+                 cfg: ModelConfig) -> jax.Array:
+    e = embedding.value.astype(cfg.dtype)
+    return jnp.take(e, tokens, axis=0)
+
+
+def logits_from_hidden(h: jax.Array, head: Param) -> jax.Array:
+    """h: [..., d] → logits [..., vocab] in f32 (stable softmax/CE)."""
+    w = head.value
+    if w.shape[0] != h.shape[-1]:          # tied embedding: [vocab, d]
+        w = w.T
+    return (h.astype(jnp.float32) @ w.astype(jnp.float32))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,420 @@
+"""Model top level: init / train loss / prefill / decode for every arch.
+
+One integration point for all 10 assigned architectures.  The layer stack is
+scanned (``jax.lax.scan`` over a leading 'layers' param axis, optional remat)
+so HLO size is depth-independent; heterogeneous stacks (DeepSeek's first
+dense layer, zamba2's interleaved shared-attention block) decompose into
+homogeneous scanned segments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attnlib
+from repro.models import ssm as ssmlib
+from repro.models.layers import (Param, apply_mlp, apply_norm, cross_entropy,
+                                 embed_tokens, init_embedding, init_mlp,
+                                 init_norm, logits_from_hidden)
+from repro.models.transformer import (_layer_slice, _stack_layers,
+                                      decoder_layer, init_decoder_layer)
+from repro.parallel.sharding import constrain
+
+
+class StackSegment(NamedTuple):
+    """A homogeneous scanned segment of the layer stack."""
+    name: str
+    n_layers: int
+    moe: bool
+
+
+def _segments(cfg: ModelConfig) -> list[StackSegment]:
+    if cfg.n_experts and cfg.first_dense_layers:
+        return [StackSegment("dense", cfg.first_dense_layers, False),
+                StackSegment("moe", cfg.n_layers - cfg.first_dense_layers,
+                             True)]
+    if cfg.n_experts:
+        return [StackSegment("moe", cfg.n_layers, True)]
+    return [StackSegment("layers", cfg.n_layers, False)]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = iter(jax.random.split(key, 16))
+    p: dict[str, Any] = {}
+    # Token embedding always exists: embeddings-mode archs (vlm/audio) still
+    # embed generated tokens during decode.
+    p["embed"] = init_embedding(next(ks), cfg)
+    if not cfg.tie_embeddings:
+        p["head"] = init_embedding(next(ks), cfg)   # [vocab, d], used as h @ W.T
+    p["final_norm"] = init_norm(cfg)
+
+    for seg in _segments(cfg):
+        p[seg.name] = _stack_layers(
+            lambda k, moe=seg.moe: init_decoder_layer(k, cfg, moe),
+            next(ks), seg.n_layers)
+
+    if cfg.attn_every:                      # zamba2 shared block
+        p["shared_attn"] = attnlib.init_gqa(next(ks), cfg)
+        p["shared_mlp"] = init_mlp(next(ks), cfg)
+        p["shared_norm1"] = init_norm(cfg)
+        p["shared_norm2"] = init_norm(cfg)
+
+    if cfg.encoder_layers:                  # whisper encoder
+        enc_cfg = dataclasses.replace(cfg, qk_norm=False)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"norm1": init_norm(cfg),
+                    "attn": attnlib.init_gqa(k1, enc_cfg),
+                    "norm2": init_norm(cfg),
+                    "mlp": init_mlp(k2, cfg)}
+
+        p["encoder"] = _stack_layers(enc_layer, next(ks), cfg.encoder_layers)
+        p["encoder_norm"] = init_norm(cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+def _scan_segment(stacked, x, cfg: ModelConfig, *, moe: bool, mode: str,
+                  positions, caches, cache_index, encoder_out=None):
+    """Scan one homogeneous segment. caches: stacked [L, ...] pytree or None.
+
+    With ``cfg.scan_layers=False`` the loop is unrolled (used by the dry-run
+    cost probes: XLA's cost_analysis counts while-loop bodies once, so
+    per-layer cost slopes come from shallow unrolled compiles)."""
+
+    def body(x, xs):
+        layer_params, cache = xs
+        layer_params = _layer_slice(layer_params)
+        x, new_cache, aux = decoder_layer(
+            layer_params, x, cfg, moe=moe, mode=mode, positions=positions,
+            cache=cache, cache_index=cache_index, encoder_out=encoder_out)
+        return x, (new_cache, aux)
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if not cfg.scan_layers:
+        n_layers = jax.tree.leaves(stacked)[0].shape[0]
+        new_caches, auxes = [], []
+        for i in range(n_layers):
+            xs = jax.tree.map(lambda t: t[i], (stacked, caches))
+            x, (nc, aux) = body(x, xs)
+            new_caches.append(nc)
+            auxes.append(aux)
+        stacked_caches = None if new_caches[0] is None else \
+            jax.tree.map(lambda *cs: jnp.stack(cs), *new_caches)
+        return x, stacked_caches, jnp.sum(jnp.stack(auxes))
+
+    x, (new_caches, aux) = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches, jnp.sum(aux)
+
+
+def _zamba_stack(params, x, cfg: ModelConfig, *, mode: str, positions,
+                 caches, cache_index):
+    """Mamba backbone with a shared attention+MLP block every attn_every
+    layers (zamba2).  Scans over groups; the shared block's params are one
+    set reused by every application (its KV caches are per-application)."""
+    per = cfg.attn_every
+    groups = cfg.n_layers // per
+    rem = cfg.n_layers - groups * per
+
+    stacked = params["layers"]
+    grouped = jax.tree.map(
+        lambda p: Param(p.value[:groups * per].reshape(
+            groups, per, *p.value.shape[1:]), p.axes), stacked,
+        is_leaf=lambda t: isinstance(t, Param))
+    tail = jax.tree.map(
+        lambda p: Param(p.value[groups * per:], p.axes), stacked,
+        is_leaf=lambda t: isinstance(t, Param))
+
+    mamba_caches, attn_caches = caches if caches is not None else (None, None)
+    grouped_caches = None
+    if mamba_caches is not None:
+        grouped_caches = jax.tree.map(
+            lambda c: c[:groups * per].reshape(groups, per, *c.shape[1:]),
+            mamba_caches)
+    tail_caches = None if mamba_caches is None \
+        else jax.tree.map(lambda c: c[groups * per:], mamba_caches)
+
+    shared = {"attn": params["shared_attn"], "mlp": params["shared_mlp"],
+              "norm1": params["shared_norm1"], "norm2": params["shared_norm2"]}
+
+    def group_body(x, xs):
+        gparams, gcaches, a_cache = xs
+        new_gcaches = []
+        for i in range(per):
+            lp = _layer_slice(jax.tree.map(
+                lambda p: Param(p.value[i], p.axes), gparams,
+                is_leaf=lambda t: isinstance(t, Param)))
+            cache_i = None if gcaches is None else \
+                jax.tree.map(lambda c: c[i], gcaches)
+            x, nc, _ = decoder_layer(lp, x, cfg, moe=False, mode=mode,
+                                     positions=positions, cache=cache_i,
+                                     cache_index=cache_index)
+            new_gcaches.append(nc)
+        # Shared attention + MLP block.
+        h, new_a_cache = attnlib.gqa_forward(
+            shared["attn"], apply_norm(x, shared["norm1"], cfg), cfg,
+            mode=mode, positions=positions, cache=a_cache,
+            cache_index=cache_index)
+        x = x + h
+        x = x + apply_mlp(apply_norm(x, shared["norm2"], cfg),
+                          shared["mlp"], cfg)
+        stacked_nc = None
+        if new_gcaches[0] is not None:
+            stacked_nc = jax.tree.map(lambda *cs: jnp.stack(cs), *new_gcaches)
+        return x, (stacked_nc, new_a_cache)
+
+    if cfg.remat and mode == "train":
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+
+    if not cfg.scan_layers:
+        ys = []
+        for gi in range(groups):
+            xs = jax.tree.map(lambda t: t[gi],
+                              (grouped, grouped_caches, attn_caches))
+            x, y = group_body(x, xs)
+            ys.append(y)
+        if ys[0][0] is None:
+            new_mamba_caches, new_attn_caches = None, None
+        else:
+            new_mamba_caches, new_attn_caches = jax.tree.map(
+                lambda *cs: jnp.stack(cs), *ys)
+    else:
+        x, (new_mamba_caches, new_attn_caches) = jax.lax.scan(
+            group_body, x, (grouped, grouped_caches, attn_caches))
+
+    new_tail = []
+    for i in range(rem):
+        lp = _layer_slice(jax.tree.map(
+            lambda p: Param(p.value[i], p.axes), tail,
+            is_leaf=lambda t: isinstance(t, Param)))
+        cache_i = None if tail_caches is None else \
+            jax.tree.map(lambda c: c[i], tail_caches)
+        x, nc, _ = decoder_layer(lp, x, cfg, moe=False, mode=mode,
+                                 positions=positions, cache=cache_i,
+                                 cache_index=cache_index)
+        new_tail.append(nc)
+
+    new_caches = None
+    if mode != "train":
+        flat_group = jax.tree.map(
+            lambda c: c.reshape(groups * per, *c.shape[2:]), new_mamba_caches)
+        if rem:
+            tail_stacked = jax.tree.map(lambda *cs: jnp.stack(cs), *new_tail)
+            flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                flat_group, tail_stacked)
+        else:
+            flat = flat_group
+        new_caches = (flat, new_attn_caches)
+    return x, new_caches, jnp.float32(0.0)
+
+
+def _sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)[:, :d]
+
+
+def _encoder_stack(params, x, cfg: ModelConfig):
+    """Whisper encoder: bidirectional attention over (stub) frame embeddings
+    with sinusoidal positions.  Full attention is expressed through the
+    cross-attention path (kv_source = normed x → no causal mask, no rope)."""
+    x = x + _sinusoidal_positions(x.shape[1], x.shape[-1]).astype(x.dtype)
+
+    def body(x, layer_params):
+        lp = _layer_slice(layer_params)
+        normed = apply_norm(x, lp["norm1"], cfg)
+        h, _ = attnlib.gqa_forward(lp["attn"], normed, cfg, mode="train",
+                                   kv_source=normed)
+        x = x + h
+        x = x + apply_mlp(apply_norm(x, lp["norm2"], cfg), lp["mlp"], cfg)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(params["encoder"])[0].shape[0]
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], params["encoder"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(x, params["encoder_norm"], cfg)
+
+
+def apply_stack(params, x, cfg: ModelConfig, *, mode: str, positions,
+                caches, cache_index, encoder_out=None):
+    """Run the full decoder stack.  caches: dict segment → stacked cache."""
+    if cfg.attn_every:
+        return _zamba_stack(params, x, cfg, mode=mode, positions=positions,
+                            caches=caches, cache_index=cache_index)
+    total_aux = jnp.float32(0.0)
+    new_caches = {}
+    for seg in _segments(cfg):
+        seg_cache = None if caches is None else caches[seg.name]
+        x, nc, aux = _scan_segment(
+            params[seg.name], x, cfg, moe=seg.moe, mode=mode,
+            positions=positions, caches=seg_cache, cache_index=cache_index,
+            encoder_out=encoder_out)
+        total_aux = total_aux + aux
+        if nc is not None:
+            new_caches[seg.name] = nc
+    return x, (new_caches or None), total_aux
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-segment caches for decode."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def kv(n_layers, heads=None, head_dim=None):
+        heads = heads or cfg.n_kv_heads
+        head_dim = head_dim or cfg.head_dim_
+        return attnlib.KVCache(
+            k=jnp.zeros((n_layers, batch, heads, max_len, head_dim), dt),
+            v=jnp.zeros((n_layers, batch, heads, max_len, head_dim), dt))
+
+    def mla(n_layers):
+        return attnlib.KVCache(
+            k=jnp.zeros((n_layers, batch, max_len, cfg.kv_lora_rank), dt),
+            v=jnp.zeros((n_layers, batch, max_len, cfg.qk_rope_head_dim), dt))
+
+    if cfg.attn_every:
+        groups = cfg.n_layers // cfg.attn_every
+        mamba = jax.tree.map(
+            lambda c: jnp.zeros((cfg.n_layers, *c.shape), c.dtype),
+            ssmlib.init_mamba2_cache(cfg, batch, dt))
+        attn_c = kv(groups, heads=cfg.n_kv_heads)
+        return (mamba, attn_c)
+
+    caches = {}
+    for seg in _segments(cfg):
+        if cfg.ssm == "rwkv6":
+            one = ssmlib.init_rwkv6_cache(cfg, batch, dt)
+            caches[seg.name] = jax.tree.map(
+                lambda c: jnp.zeros((seg.n_layers, *c.shape), c.dtype), one)
+        elif cfg.ssm == "mamba2":
+            one = ssmlib.init_mamba2_cache(cfg, batch, dt)
+            caches[seg.name] = jax.tree.map(
+                lambda c: jnp.zeros((seg.n_layers, *c.shape), c.dtype), one)
+        elif cfg.attention == "mla":
+            caches[seg.name] = mla(seg.n_layers)
+        else:
+            caches[seg.name] = kv(seg.n_layers)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _inputs_to_hidden(params, batch: dict, cfg: ModelConfig):
+    if cfg.input_mode == "embeddings":
+        x = batch["embeds"].astype(cfg.dtype)
+        labels = batch.get("labels")
+    else:
+        tokens = batch["tokens"]
+        x = embed_tokens(tokens[:, :-1], params["embed"], cfg)
+        labels = tokens[:, 1:]
+    return x, labels
+
+
+def _head(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]
+    return params["head"]
+
+
+def train_loss(params, batch: dict, cfg: ModelConfig):
+    """Returns (loss, metrics)."""
+    encoder_out = None
+    if cfg.encoder_layers:
+        enc_in = batch["embeds"].astype(cfg.dtype)
+        encoder_out = _encoder_stack(params, enc_in, cfg)
+        dec_tokens = batch["tokens"]
+        x = embed_tokens(dec_tokens[:, :-1], params["embed"], cfg)
+        labels = dec_tokens[:, 1:]
+    else:
+        x, labels = _inputs_to_hidden(params, batch, cfg)
+
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = constrain(x, "bsd")
+    x, _, aux = apply_stack(params, x, cfg, mode="train", positions=positions,
+                            caches=None, cache_index=None,
+                            encoder_out=encoder_out)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = constrain(logits_from_hidden(x, _head(params, cfg)), "bsv")
+    if labels is None:
+        raise ValueError("training batch needs labels")
+    loss = cross_entropy(logits, labels)
+    total = loss + 0.01 * aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def prefill(params, batch: dict, cfg: ModelConfig):
+    """Full-sequence forward building the decode cache.
+
+    Returns (logits_last [B, vocab], caches, encoder_out | None).
+    """
+    encoder_out = None
+    if cfg.encoder_layers:
+        encoder_out = _encoder_stack(params, batch["embeds"].astype(cfg.dtype),
+                                     cfg)
+        x = embed_tokens(batch["tokens"], params["embed"], cfg)
+    elif cfg.input_mode == "embeddings":
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = embed_tokens(batch["tokens"], params["embed"], cfg)
+
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = constrain(x, "bsd")
+    x, caches, _ = apply_stack(params, x, cfg, mode="prefill",
+                               positions=positions, caches=None,
+                               cache_index=None, encoder_out=encoder_out)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = constrain(logits_from_hidden(x[:, -1], _head(params, cfg)), "bv")
+    return logits, caches, encoder_out
+
+
+def decode_step(params, tokens, caches, cache_index, cfg: ModelConfig, *,
+                encoder_out=None):
+    """One decode step.  tokens: [B] int32 (or [B, D] embeds for vlm).
+
+    Returns (logits [B, vocab], new_caches).
+    """
+    if cfg.input_mode == "embeddings" and tokens.ndim == 2 \
+            and not cfg.encoder_layers:
+        x = tokens[:, None, :].astype(cfg.dtype)
+    else:
+        x = embed_tokens(tokens[:, None], params["embed"], cfg)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_index, jnp.int32)
+    x, new_caches, _ = apply_stack(params, x, cfg, mode="decode",
+                                   positions=positions, caches=caches,
+                                   cache_index=cache_index,
+                                   encoder_out=encoder_out)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = constrain(logits_from_hidden(x[:, 0], _head(params, cfg)), "bv")
+    return logits, new_caches

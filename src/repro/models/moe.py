@@ -1,0 +1,158 @@
+"""Mixture-of-Experts with event-frame dispatch — the paper's datapath at LM scale.
+
+The mapping (DESIGN.md §4):
+
+  spike label        ↔ (token, expert) routing assignment
+  fwd LUT + enable   ↔ router top-k (which events leave the chip)
+  layer-2 packing    ↔ capacity-bounded per-expert buffers
+  Aggregator star    ↔ expert-parallel all-to-all (experts sharded on "model")
+  congestion drop    ↔ token dropping beyond expert capacity (counted)
+
+Dispatch is sort-based (compaction by prefix-sum, like the spike_router
+kernel's pack unit) rather than GShard one-hot einsum: the [tokens, experts,
+capacity] dispatch tensor would dwarf the activations for 160-expert
+DeepSeek-V2; sorted gather/scatter keeps memory at O(tokens · top_k).
+
+Shared experts (DeepSeek) bypass routing entirely — the analogue of the
+on-chip layer-1 path that never leaves the chip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Param, dense_init, init_mlp, apply_mlp
+from repro.parallel.sharding import constrain, data_shard_count
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    gates = 3 if cfg.mlp_act in ("silu", "gelu") else 2
+    scale = 1.0 / (d ** 0.5)
+
+    def expert_stack(k, in_dim, out_dim):
+        return Param(jax.random.normal(k, (e, in_dim, out_dim), jnp.float32)
+                     * (1.0 / in_dim ** 0.5), ("experts", "embed", "ff")
+                     if in_dim == d else ("experts", "ff", "embed"))
+
+    p = {
+        "router": dense_init(ks[0], d, e, ("embed", None), scale=scale),
+        "w_up": expert_stack(ks[1], d, d_ff),
+        "w_down": expert_stack(ks[2], d_ff, d),
+    }
+    if gates == 3:
+        p["w_gate"] = expert_stack(ks[3], d, d_ff)
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg,
+                               d_ff=d_ff * cfg.n_shared_experts)
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    """Event-frame capacity per expert (core.events.CapacityPolicy logic)."""
+    per_expert = n_tokens * cfg.top_k / max(cfg.n_experts, 1)
+    cap = int(per_expert * cfg.capacity_factor)
+    return max(8, -(-cap // 8) * 8)   # round up to 8 for TPU-friendly tiles
+
+
+def _dispatch_combine(tokens, top_e, top_p, params, cfg: ModelConfig,
+                      cap: int):
+    """Sort-based event-frame dispatch → expert compute → combine.
+
+    tokens: [N, D]; top_e/top_p: [N, k].  Returns (y [N, D], keep_frac).
+    """
+    n, d = tokens.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = tokens.dtype
+
+    flat_e = top_e.reshape(-1)                                # [N*k]
+    order = jnp.argsort(flat_e, stable=True)                  # sort by expert
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos_in_e = jnp.arange(n * k) - seg_start[sorted_e]
+    keep = pos_in_e < cap                                     # congestion drop
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)
+
+    src_token = order // k                                    # token of event
+    buf = jnp.zeros((e * cap + 1, d), dt)
+    buf = buf.at[slot].set(tokens[src_token].astype(dt))
+    buf = buf[:-1].reshape(e, cap, d)                          # [E, cap, D]
+    # Expert-parallel placement: experts on the model axis, capacity slots on
+    # the data axes — the scatter above becomes the Aggregator's all-to-all.
+    buf = constrain(buf, "ecd")
+
+    if "w_gate" in params:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                   params["w_gate"].value.astype(dt)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf,
+                           params["w_up"].value.astype(dt))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf,
+                                   params["w_up"].value.astype(dt)))
+    out_buf = constrain(jnp.einsum("ecf,efd->ecd", h,
+                                   params["w_down"].value.astype(dt)), "ecd")
+    out_flat = out_buf.reshape(e * cap, d)
+
+    event_out = jnp.where(keep[:, None],
+                          out_flat[jnp.clip(slot, 0, e * cap - 1)],
+                          0.0)                                 # [N*k, D]
+    inv = jnp.argsort(order)                                   # undo the sort
+    event_out = event_out[inv].reshape(n, k, d)
+    y = jnp.sum(event_out * top_p[..., None].astype(dt), axis=1)
+    return y, jnp.sum(keep)
+
+
+def moe_forward(params: dict, x: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, dict]:
+    """x: [B, S, D] → (out [B, S, D], metrics {aux_loss, dropped_frac})."""
+    b, s, d = x.shape
+    dt = x.dtype
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = x.reshape(b * s, d)
+    n = b * s
+
+    # --- Router (the forward LUT: label → destination + enable) -------------
+    logits = (tokens.astype(jnp.float32)
+              @ params["router"].value.astype(jnp.float32))   # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # [N, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)    # renormalize
+
+    # Load-balancing auxiliary loss (Switch/GShard style).
+    me = jnp.mean(probs, axis=0)                              # [E]
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], e), axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+
+    # --- Dispatch/combine ------------------------------------------------------
+    shards = data_shard_count() if cfg.moe_local_dispatch else 1
+    if shards > 1 and n % shards == 0:
+        # §Perf: per-data-shard event frames (the paper's per-node packing):
+        # each shard sorts/packs only its local tokens, so the argsort and
+        # prefix sums never cross the interconnect; only the capacity
+        # buffers do (all-to-all up-link to the expert shards).
+        n_loc = n // shards
+        cap = expert_capacity(n_loc, cfg)
+        tok_s = constrain(tokens.reshape(shards, n_loc, d), "b.d")
+        e_s = top_e.reshape(shards, n_loc, k)
+        p_s = top_p.reshape(shards, n_loc, k)
+        y, kept = jax.vmap(
+            lambda t, te, tp: _dispatch_combine(t, te, tp, params, cfg, cap))(
+                tok_s, e_s, p_s)
+        y = y.reshape(n, d)
+        kept = jnp.sum(kept)
+    else:
+        cap = expert_capacity(n, cfg)
+        y, kept = _dispatch_combine(tokens, top_e, top_p, params, cfg, cap)
+
+    # --- Shared experts: the on-chip (never routed) path ---------------------
+    if "shared" in params:
+        y = y + apply_mlp(tokens.astype(dt), params["shared"], cfg)
+
+    dropped_frac = 1.0 - kept / (n * k)
+    return y.reshape(b, s, d), {"aux_loss": aux_loss,
+                                "dropped_frac": dropped_frac}

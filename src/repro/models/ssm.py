@@ -1,0 +1,289 @@
+"""State-space sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both reduce to the same diagonal-decay linear recurrence executed by
+``repro.kernels.linear_scan`` (chunked, TPU-tiled):
+
+    Mamba2:  h_t = exp(-exp(A)·dt_t) h_{t-1} + (dt_t B_t) ⊗ x_t ;  y = C_t·h_t
+             (scalar decay per head, broadcast over the state dim)
+    RWKV6:   h_t = exp(w_t) ⊙ h_{t-1} + k_t ⊗ v_t ;
+             y_t = r_t · (h_{t-1} + diag(u) k_t ⊗ v_t)
+             (data-dependent per-channel decay w_t via a low-rank projection —
+             Finch's hallmark — and the bonus term u)
+
+Decode carries (conv/shift state, recurrence state) — O(1) per token, which
+is why these archs run the 500k-token long-context shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Param, dense_init, rms_norm
+from repro.parallel.sharding import constrain
+
+W_LORA_RANK = 64
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # mamba2: [B, K-1, d_conv]; rwkv6: [B, 1, d] (shift)
+    state: jax.Array   # [B, H, state_or_hd, hd]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d, di, st, h = cfg.d_model, cfg.d_inner_, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * st + h       # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, ("embed", "ff")),
+        "conv_w": Param(jax.random.normal(ks[1], (cfg.conv_kernel, di + 2 * st),
+                                          jnp.float32)
+                        / math.sqrt(cfg.conv_kernel), (None, "ff")),
+        "a_log": Param(jnp.log(jnp.linspace(1.0, 16.0, h)), (None,)),
+        "d_skip": Param(jnp.ones((h,), jnp.float32), (None,)),
+        "dt_bias": Param(jnp.zeros((h,), jnp.float32), (None,)),
+        "norm": Param(jnp.ones((di,), jnp.float32), (None,)),
+        "out_proj": dense_init(ks[2], di, d, ("ff", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, conv_state=None):
+    """Depthwise causal conv over time. x: [B,S,C]; w: [K,C].
+
+    With ``conv_state`` [B, K-1, C] (decode), prepends it and returns the new
+    state; otherwise zero-pads the left edge (train/prefill).
+    """
+    k = w.shape[0]
+    if conv_state is not None:
+        xx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    else:
+        xx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = jnp.zeros_like(xx[:, k - 1:])
+    for i in range(k):
+        out = out + xx[:, i:i + out.shape[1]] * w[i]
+    new_state = xx[:, -(k - 1):] if k > 1 else xx[:, :0]
+    return out[:, -s:], new_state
+
+
+def mamba2_forward(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                   mode: str = "train", cache: SSMCache | None = None):
+    b, s, d = x.shape
+    di, st, h = cfg.d_inner_, cfg.ssm_state, cfg.n_ssm_heads
+    hd = cfg.ssm_head_dim
+    dt_ = x.dtype
+
+    zxbcdt = x @ params["in_proj"].value.astype(dt_)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * st]
+    dt_raw = zxbcdt[..., -h:]
+
+    conv_state = cache.conv if cache is not None and mode == "decode" else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"].value.astype(dt_),
+                                 conv_state)
+    xbc = jax.nn.silu(xbc)
+    x_ssm = xbc[..., :di]
+    b_mat = xbc[..., di:di + st]
+    c_mat = xbc[..., di + st:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].value)          # [B,S,H]
+    a = -jnp.exp(params["a_log"].value)                      # [H] (negative)
+    w = (dt * a[None, None, :])                              # [B,S,H] log-decay
+
+    # Heads: x_h [B,H,S,hd]; B/C shared across heads (n_groups=1).
+    xh = constrain(x_ssm.reshape(b, s, h, hd).transpose(0, 2, 1, 3), "bhsk")
+    kh = jnp.broadcast_to(b_mat[:, None], (b, h, s, st)) \
+        * dt.transpose(0, 2, 1)[..., None].astype(dt_)       # dt·B
+    kh = constrain(kh, "bhsk")
+    qh = constrain(jnp.broadcast_to(c_mat[:, None], (b, h, s, st)), "bhsk")
+    wh = jnp.broadcast_to(w.transpose(0, 2, 1)[..., None], (b, h, s, st))
+    wh = constrain(wh, "bhsk")
+
+    if mode == "decode" and cache is not None:
+        from repro.kernels.linear_scan.ref import linear_scan_decode_ref
+        state, y = linear_scan_decode_ref(
+            cache.state.astype(jnp.float32), qh[:, :, 0].astype(jnp.float32),
+            kh[:, :, 0].astype(jnp.float32), xh[:, :, 0].astype(jnp.float32),
+            wh[:, :, 0].astype(jnp.float32), mode="inclusive")
+        y = y[:, :, None]                                    # [B,H,1,hd]
+        new_cache = SSMCache(conv=new_conv.astype(cache.conv.dtype),
+                             state=state.astype(cache.state.dtype))
+    else:
+        if cfg.attention_impl == "pallas":
+            from repro.kernels.linear_scan.ops import linear_scan
+            y = linear_scan(qh, kh, xh, wh, mode="inclusive")
+        else:
+            from repro.kernels.linear_scan.ref import linear_scan_chunked
+            y = linear_scan_chunked(qh, kh, xh, wh,
+                                    mode="inclusive").astype(dt_)
+        new_cache = None
+        if mode == "prefill":
+            # Final recurrence state for the cache, via the closed form
+            # h = Σ_s e^{Σ_{r>s} w_r} k_s ⊗ v_s (single weighted contraction).
+            wcum = jnp.cumsum(wh.astype(jnp.float32), axis=2)
+            factor = jnp.exp(wcum[:, :, -1:] - wcum)          # [B,H,S,st]
+            kw = kh.astype(jnp.float32) * factor
+            state = jnp.einsum("bhsk,bhsv->bhkv", kw, xh.astype(jnp.float32))
+            new_cache = SSMCache(conv=new_conv.astype(dt_), state=state)
+
+    y = y.astype(dt_)
+    y = y + params["d_skip"].value[None, :, None, None].astype(y.dtype) * xh
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"].value)
+    return y @ params["out_proj"].value.astype(dt_), new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    di, st, h = cfg.d_inner_, cfg.ssm_state, cfg.n_ssm_heads
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, di + 2 * st), dtype),
+        state=jnp.zeros((batch, h, st, cfg.ssm_head_dim), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = d // cfg.ssm_head_dim
+    ks = jax.random.split(key, 9)
+    mix = lambda i: Param(jnp.full((d,), 0.5, jnp.float32), (None,))
+    return {
+        "mu_r": mix(0), "mu_k": mix(1), "mu_v": mix(2), "mu_g": mix(3),
+        "mu_w": mix(4),
+        "wr": dense_init(ks[0], d, d, ("embed", "heads")),
+        "wk": dense_init(ks[1], d, d, ("embed", "heads")),
+        "wv": dense_init(ks[2], d, d, ("embed", "heads")),
+        "wg": dense_init(ks[3], d, d, ("embed", "heads")),
+        "w_base": Param(jnp.linspace(-6.0, -0.5, d), (None,)),
+        "w_lora_a": dense_init(ks[4], d, W_LORA_RANK, ("embed", None)),
+        "w_lora_b": dense_init(ks[5], W_LORA_RANK, d, (None, "heads"),
+                               scale=0.01),
+        "u": Param(jnp.zeros((h, cfg.ssm_head_dim), jnp.float32),
+                   (None, None)),
+        "ln_scale": Param(jnp.ones((d,), jnp.float32), (None,)),
+        "wo": dense_init(ks[6], d, d, ("heads", "embed")),
+    }
+
+
+def _token_shift(x: jax.Array, shift_state=None):
+    """Returns (x_prev, new_shift_state). x: [B,S,D]."""
+    if shift_state is not None:
+        prev = jnp.concatenate([shift_state.astype(x.dtype),
+                                x[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return prev, x[:, -1:]
+
+
+def rwkv6_time_mix(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                   mode: str = "train", cache: SSMCache | None = None):
+    b, s, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    dt_ = x.dtype
+
+    shift_state = cache.conv[:, :1] if cache is not None and mode == "decode" \
+        else None
+    prev, new_shift = _token_shift(x, shift_state)
+
+    def mixed(mu):
+        m = params[mu].value.astype(dt_)
+        return x + (prev - x) * m
+
+    r = mixed("mu_r") @ params["wr"].value.astype(dt_)
+    k = mixed("mu_k") @ params["wk"].value.astype(dt_)
+    v = mixed("mu_v") @ params["wv"].value.astype(dt_)
+    g = jax.nn.silu(mixed("mu_g") @ params["wg"].value.astype(dt_))
+
+    # Data-dependent decay (Finch): w = -exp(base + tanh(x_w A) B) ≤ 0.
+    xw = mixed("mu_w")
+    w_dyn = jnp.tanh(xw @ params["w_lora_a"].value.astype(dt_)) \
+        @ params["w_lora_b"].value.astype(dt_)
+    w_log = -jnp.exp(params["w_base"].value.astype(jnp.float32)
+                     + w_dyn.astype(jnp.float32))            # [B,S,D], < 0
+
+    heads = lambda t: constrain(
+        t.reshape(b, s, h, hd).transpose(0, 2, 1, 3), "bhsk")
+    rh, kh, vh = heads(r), heads(k), heads(v)
+    wh = heads(w_log.astype(dt_)).astype(jnp.float32)
+
+    if mode == "decode" and cache is not None:
+        from repro.kernels.linear_scan.ref import linear_scan_decode_ref
+        state, y = linear_scan_decode_ref(
+            cache.state.astype(jnp.float32), rh[:, :, 0].astype(jnp.float32),
+            kh[:, :, 0].astype(jnp.float32), vh[:, :, 0].astype(jnp.float32),
+            wh[:, :, 0], params["u"].value, mode="bonus")
+        y = y[:, :, None]
+        new_cache = SSMCache(conv=new_shift.astype(cache.conv.dtype),
+                             state=state.astype(cache.state.dtype))
+    else:
+        if cfg.attention_impl == "pallas":
+            from repro.kernels.linear_scan.ops import linear_scan
+            y = linear_scan(rh, kh, vh, wh.astype(dt_), params["u"].value,
+                            mode="bonus")
+        else:
+            from repro.kernels.linear_scan.ref import linear_scan_chunked
+            y = linear_scan_chunked(rh, kh, vh, wh, params["u"].value,
+                                    mode="bonus").astype(dt_)
+        new_cache = None
+        if mode == "prefill":
+            wcum = jnp.cumsum(wh, axis=2)
+            factor = jnp.exp(wcum[:, :, -1:] - wcum)
+            kw = kh.astype(jnp.float32) * factor
+            state = jnp.einsum("bhsk,bhsv->bhkv", kw, vh.astype(jnp.float32))
+            new_cache = SSMCache(conv=new_shift.astype(dt_), state=state)
+
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    # Per-head group norm (RWKV's ln_x), then output gate.
+    y32 = y.astype(jnp.float32).reshape(b, s, h, hd)
+    mean = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y = ((y32 - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    y = (y * params["ln_scale"].value).astype(dt_) * g
+    return y @ params["wo"].value.astype(dt_), new_cache
+
+
+def init_rwkv6_channel_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": Param(jnp.full((d,), 0.5, jnp.float32), (None,)),
+        "mu_r": Param(jnp.full((d,), 0.5, jnp.float32), (None,)),
+        "wk": dense_init(ks[0], d, cfg.d_ff, ("embed", "ff")),
+        "wv": dense_init(ks[1], cfg.d_ff, d, ("ff", "embed")),
+        "wr": dense_init(ks[2], d, d, ("embed", "heads")),
+    }
+
+
+def rwkv6_channel_mix(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                      shift_state=None):
+    dt_ = x.dtype
+    prev, new_shift = _token_shift(x, shift_state)
+    xk = x + (prev - x) * params["mu_k"].value.astype(dt_)
+    xr = x + (prev - x) * params["mu_r"].value.astype(dt_)
+    k = jnp.square(jax.nn.relu(xk @ params["wk"].value.astype(dt_)))
+    v = k @ params["wv"].value.astype(dt_)
+    r = jax.nn.sigmoid(xr @ params["wr"].value.astype(dt_))
+    return r * v, new_shift
+
+
+def init_rwkv6_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    d = cfg.d_model
+    h = d // cfg.ssm_head_dim
+    # conv slot stores both time-mix and channel-mix shift states: [B, 2, D].
+    return SSMCache(conv=jnp.zeros((batch, 2, d), dtype),
+                    state=jnp.zeros((batch, h, cfg.ssm_head_dim,
+                                     cfg.ssm_head_dim), jnp.float32))

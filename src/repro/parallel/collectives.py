@@ -1,0 +1,50 @@
+"""Hierarchical, pod-aware collectives (the second-layer star, §V).
+
+The paper joins backplane Aggregators through a second-layer node: local
+traffic pays 2 transceiver hops, cross-backplane traffic 4.  The TPU analogue
+schedules gradient reduction the same way: **reduce-scatter inside the pod**
+(fast, star-local), **all-reduce across pods** on the shard only (narrow,
+second-layer), then **all-gather inside the pod**.  Cross-pod bytes shrink by
+the intra-pod shard factor — the same reason the paper aggregates per
+backplane before up-linking.
+
+These helpers run inside ``shard_map``; the pjit training path lets XLA place
+collectives, and the §Perf pass compares both schedules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hierarchical_psum(x: jax.Array, data_axis: str = "data",
+                      pod_axis: str | None = "pod") -> jax.Array:
+    """All-reduce structured as intra-pod RS → inter-pod AR → intra-pod AG."""
+    if pod_axis is None:
+        return jax.lax.psum(x, data_axis)
+    n_local = jax.lax.psum(1, data_axis)
+    # Reduce-scatter along the fast intra-pod axis.
+    scattered = jax.lax.psum_scatter(x, data_axis, scatter_dimension=0,
+                                     tiled=True) \
+        if x.shape[0] % n_local == 0 else jax.lax.psum(x, data_axis)
+    full_rs = x.shape[0] % n_local == 0
+    # Narrow inter-pod exchange (the second-layer hop).
+    reduced = jax.lax.psum(scattered, pod_axis)
+    if full_rs:
+        return jax.lax.all_gather(reduced, data_axis, axis=0, tiled=True)
+    return reduced
+
+
+def hierarchical_pmean(x: jax.Array, data_axis: str = "data",
+                       pod_axis: str | None = "pod") -> jax.Array:
+    total = jax.lax.psum(1, data_axis)
+    if pod_axis is not None:
+        total = total * jax.lax.psum(1, pod_axis)
+    return hierarchical_psum(x, data_axis, pod_axis) / total
+
+
+def cross_pod_bytes(nbytes_per_device: int, data_size: int) -> float:
+    """Bytes each device sends across the pod boundary under the hierarchical
+    schedule (vs. flat all-reduce sending the full buffer)."""
+    return nbytes_per_device / data_size

@@ -1,0 +1,84 @@
+"""Sparse-event gradient exchange: the paper's insight applied to gradients.
+
+BSS-2 communicates *sparse labeled events* instead of dense state; layer-2
+packs them into capacity-bounded frames.  Gradient top-k sparsification with
+error feedback is the same trade: each step, only the k largest-magnitude
+gradient entries (events: ``(index=label, value)``) cross the interconnect,
+packed into a fixed-capacity frame; everything else accumulates locally in
+the error-feedback residual (the retransmit buffer).  [Deep Gradient
+Compression, arXiv:1712.01887 — adapted to the event-frame machinery.]
+
+Also provides int8 stochastic quantization for dense all-reduce (a milder
+bandwidth/precision trade on the same axis).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SparseGrad(NamedTuple):
+    """A capacity-bounded event frame of gradient entries."""
+    indices: jax.Array   # int32[capacity]   (the 'labels')
+    values: jax.Array    # f32[capacity]
+    shape: tuple         # original dense shape (static)
+
+
+def sparsify(grad: jax.Array, capacity: int) -> tuple[SparseGrad, jax.Array]:
+    """Top-|g| event selection.  Returns (frame, residual)."""
+    flat = grad.reshape(-1).astype(jnp.float32)
+    capacity = min(capacity, flat.shape[0])
+    mag = jnp.abs(flat)
+    values, indices = jax.lax.top_k(mag, capacity)
+    picked = flat[indices]
+    residual = flat.at[indices].set(0.0).reshape(grad.shape)
+    return SparseGrad(indices=indices.astype(jnp.int32), values=picked,
+                      shape=grad.shape), residual
+
+
+def densify(frame: SparseGrad) -> jax.Array:
+    n = 1
+    for d in frame.shape:
+        n *= d
+    out = jnp.zeros((n,), jnp.float32).at[frame.indices].add(frame.values)
+    return out.reshape(frame.shape)
+
+
+class FeedbackState(NamedTuple):
+    residual: jax.Array
+
+
+def compress_with_feedback(grad: jax.Array, state: FeedbackState,
+                           frac: float = 0.01
+                           ) -> tuple[SparseGrad, FeedbackState]:
+    """Error-feedback top-k: g' = g + residual; send top-k(g'); keep rest."""
+    g = grad + state.residual
+    capacity = max(1, int(frac * g.size))
+    frame, residual = sparsify(g, capacity)
+    return frame, FeedbackState(residual=residual)
+
+
+def init_feedback(grad_like: jax.Array) -> FeedbackState:
+    return FeedbackState(residual=jnp.zeros_like(grad_like, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized exchange
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array, key: jax.Array | None = None):
+    """Per-tensor stochastic int8 quantization. Returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    scaled = x / scale
+    if key is not None:
+        noise = jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+        scaled = scaled + noise
+    return jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,39 @@
+"""Elastic resume: re-instantiate a checkpointed run on a different mesh.
+
+Checkpoints are mesh-agnostic host arrays; resharding happens on load
+(`ckpt.restore(..., shardings=...)`).  Changing the *data* axis size changes
+only the per-device batch slice — the data pipeline is a pure function of
+(seed, step), so the global batch stream is unchanged and training remains
+deterministic across a resize.  Changing the *model* axis requires the same
+divisibility the sharding rules already check; incompatible dims degrade to
+replication rather than failing.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.ckpt import checkpoint as ckpt
+from repro.parallel import sharding as shardlib
+
+
+def resume_on_mesh(directory: str, state_like, mesh, params_key="params",
+                   step: int | None = None):
+    """Load the latest checkpoint and shard it for ``mesh``.
+
+    ``state_like``: a freshly initialized state tree (shapes/axes source).
+    Returns (state_tree, manifest).
+    """
+    shardings = {
+        key: (shardlib.param_shardings(sub, mesh) if key == params_key
+              else jax.tree.map(lambda _: shardlib.replicated(mesh), sub))
+        for key, sub in state_like.items()
+    }
+    # Optimizer moments mirror parameter shardings where shapes match.
+    if "opt" in state_like and params_key in state_like:
+        pshard = shardlib.param_shardings(state_like[params_key], mesh)
+        shardings["opt"] = type(state_like["opt"])(
+            step=shardlib.replicated(mesh),
+            m=pshard, v=pshard)
+    return ckpt.restore(directory, state_like, step=step,
+                        shardings=shardings)

@@ -1,0 +1,129 @@
+"""Fault-tolerant training loop: checkpoint/restart, watchdog, determinism.
+
+Recovery model (1000+-node posture, DESIGN.md §6):
+  * every N steps: atomic checkpoint (params, optimizer state, data step);
+  * a hung/straggling step trips the watchdog → restore latest checkpoint →
+    refractory window (core.sync semantics at the job level);
+  * the data pipeline is a pure function of (seed, step) → restarts are
+    bit-deterministic;
+  * checkpoints are mesh-agnostic → elastic resume on a different data-axis
+    size (runtime.elastic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, Pipeline, synthetic_batch
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import sharding as shardlib
+from repro.runtime.watchdog import StepWatchdog, WatchdogConfig
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    log_every: int = 10
+    max_restarts: int = 3
+    seed: int = 0
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    mesh=None, donate: bool = True):
+    """Build the jitted train step.  With a mesh, params/opt shardings follow
+    the logical-axis rules (launch.dryrun/train pass them explicitly via
+    device_put; jit then propagates them)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.train_loss(p, batch, cfg), has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw.update(
+            params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, {**metrics, **opt_metrics, "loss": loss}
+
+    kwargs = {"donate_argnums": (0, 1)} if donate else {}
+    return jax.jit(train_step, **kwargs)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 dcfg: DataConfig | None = None,
+                 opt_cfg: adamw.AdamWConfig | None = None, mesh=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.dcfg = dcfg or DataConfig()
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            total_steps=tcfg.steps)
+        self.mesh = mesh
+        self.restarts = 0
+
+        key = jax.random.key(tcfg.seed)
+        self.params = M.init_params(key, cfg)
+        self.opt_state = adamw.init(self.params)
+        self.step = 0
+        self.train_step = make_train_step(cfg, self.opt_cfg, mesh)
+        self.history: list[dict] = []
+
+    # -- checkpointing --------------------------------------------------------
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def save(self):
+        ckpt.save(self.tcfg.ckpt_dir, self.step, self._state_tree(),
+                  metadata={"model": self.cfg.name, "data_step": self.step})
+        ckpt.prune(self.tcfg.ckpt_dir, self.tcfg.keep_ckpts)
+
+    def try_resume(self) -> bool:
+        step = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return False
+        tree, manifest = ckpt.restore(self.tcfg.ckpt_dir, self._state_tree(),
+                                      step)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = manifest["metadata"]["data_step"]
+        return True
+
+    # -- the loop ---------------------------------------------------------------
+    def run(self, steps: int | None = None) -> list[dict]:
+        steps = steps or self.tcfg.steps
+        watchdog = StepWatchdog(WatchdogConfig())
+        while self.step < steps:
+            try:
+                t0 = time.monotonic()
+                batch = synthetic_batch(self.cfg, self.dcfg, self.step)
+                with watchdog:
+                    self.params, self.opt_state, metrics = self.train_step(
+                        self.params, self.opt_state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics["step"] = self.step
+                metrics["step_time_s"] = time.monotonic() - t0
+                self.history.append(metrics)
+                if self.step % self.tcfg.log_every == 0:
+                    print(f"step {self.step:5d}  loss {metrics['loss']:.4f}  "
+                          f"gnorm {metrics['grad_norm']:.3f}  "
+                          f"{metrics['step_time_s']*1e3:.0f} ms")
+                self.step += 1
+                if self.step % self.tcfg.ckpt_every == 0:
+                    self.save()
+            except (RuntimeError, FloatingPointError) as e:
+                # Failure → restore-latest recovery path.
+                self.restarts += 1
+                if self.restarts > self.tcfg.max_restarts:
+                    raise
+                print(f"step {self.step} failed ({e}); restoring latest "
+                      f"checkpoint (restart {self.restarts})")
+                if not self.try_resume():
+                    raise
+        self.save()
+        return self.history

@@ -1,0 +1,71 @@
+"""Step watchdog: the Aggregator's timeout + refractory recovery, host-side.
+
+The barrier logic in hardware (core.sync) releases on timeout so healthy
+nodes recover, then ignores requests for a refractory period.  Training
+steps get the same treatment: a deadline derived from an EMA of recent step
+times detects hangs/stragglers; recovery (checkpoint restore) is followed by
+a refractory window during which the watchdog will not fire again (so a slow
+post-restore step doesn't cascade).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    deadline_factor: float = 5.0     # deadline = factor × EMA(step time)
+    min_deadline_s: float = 10.0
+    ema_alpha: float = 0.2
+    refractory_s: float = 30.0       # suppress triggers after a recovery
+
+
+class StepWatchdog:
+    def __init__(self, cfg: WatchdogConfig = WatchdogConfig(),
+                 on_timeout=None):
+        self.cfg = cfg
+        self.on_timeout = on_timeout
+        self.ema: float | None = None
+        self._timer: threading.Timer | None = None
+        self._last_recovery = 0.0
+        self.timeouts = 0
+
+    @property
+    def deadline_s(self) -> float:
+        if self.ema is None:
+            return self.cfg.min_deadline_s
+        return max(self.cfg.min_deadline_s,
+                   self.cfg.deadline_factor * self.ema)
+
+    def _fire(self):
+        now = time.monotonic()
+        if now - self._last_recovery < self.cfg.refractory_s:
+            return                       # refractory: ignore
+        self.timeouts += 1
+        self._last_recovery = now
+        if self.on_timeout is not None:
+            self.on_timeout()
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        self._timer = threading.Timer(self.deadline_s, self._fire)
+        self._timer.daemon = True
+        self._timer.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        assert self._timer is not None
+        self._timer.cancel()
+        dt = time.monotonic() - self._t0
+        self.ema = dt if self.ema is None else \
+            (1 - self.cfg.ema_alpha) * self.ema + self.cfg.ema_alpha * dt
+        return False
+
+    def observe(self, step_time_s: float):
+        """Feed an externally measured step time into the EMA."""
+        self.ema = step_time_s if self.ema is None else \
+            (1 - self.cfg.ema_alpha) * self.ema \
+            + self.cfg.ema_alpha * step_time_s

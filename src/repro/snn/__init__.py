@@ -1,0 +1,18 @@
+"""BSS-2 substrate emulation: neurons, chips, multi-chip networks, training."""
+
+from repro.snn.neuron import (  # noqa: F401
+    NeuronParams, NeuronState, LIF, ADEX, init_state as init_neuron_state,
+    neuron_step, spike_fn,
+)
+from repro.snn.chip import (  # noqa: F401
+    ChipConfig, ChipParams, ChipState, init_params as init_chip_params,
+    init_state as init_chip_state, chip_step, quantize_ste,
+    spikes_to_labels, labels_to_rows, N_NEURONS, N_SYNAPSE_ROWS,
+)
+from repro.snn.network import (  # noqa: F401
+    NetworkConfig, NetworkParams, NetworkState, init_feedforward,
+    init_state as init_network_state, routing_matrices, step_dense,
+    step_event, run_dense, run_event,
+)
+from repro.snn.encoding import poisson_encode, latency_encode, regular_encode  # noqa: F401
+from repro.snn.plasticity import STDPConfig, STDPState, init_stdp, stdp_step  # noqa: F401

@@ -1,0 +1,134 @@
+"""One BSS-2 SoC: 512 neurons, 131 072 synapse circuits, layer-1 crossbar.
+
+The synapse array is organized as 256 input rows × 512 neuron columns
+(256 × 512 = 131 072 circuits); each row carries one pre-synaptic label and a
+sign (excitatory/inhibitory), each circuit a 6-bit weight — mirrored here by
+straight-through-quantized weights so the substrate's precision limits are
+part of the training loop.
+
+All output spikes pass the layer-1 crossbar, which can feed them back into
+on-chip synapse rows (recurrence) and/or send them to the Node-FPGA via the
+layer-2 link (off-chip routing) — exactly the tap point used by the paper's
+multi-chip extension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.snn import neuron as nrn
+
+N_NEURONS = 512
+N_SYNAPSE_ROWS = 256
+WEIGHT_BITS = 6
+WEIGHT_MAX = (1 << WEIGHT_BITS) - 1   # 63
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipConfig:
+    n_neurons: int = N_NEURONS
+    n_rows: int = N_SYNAPSE_ROWS
+    neuron: nrn.NeuronParams = nrn.LIF
+    quantize_weights: bool = True
+    # Fraction of crossbar outputs routed back on-chip (layer-1 recurrence).
+    recurrent: bool = False
+
+
+class ChipParams(NamedTuple):
+    """Trainable per-chip parameters."""
+
+    weights: jax.Array    # f32[n_rows, n_neurons], logical range [0, 63]
+    row_sign: jax.Array   # f32[n_rows] in {+1, -1} (exc/inh row drivers)
+    w_scale: jax.Array    # f32[] digital→analog weight scale
+
+
+class ChipState(NamedTuple):
+    neurons: nrn.NeuronState
+
+
+def init_params(key: jax.Array, cfg: ChipConfig) -> ChipParams:
+    k_w, k_s = jax.random.split(key)
+    weights = jax.random.uniform(k_w, (cfg.n_rows, cfg.n_neurons),
+                                 minval=0.0, maxval=WEIGHT_MAX / 4)
+    # 20 % inhibitory rows (typical cortical ratio).
+    sign = jnp.where(jax.random.uniform(k_s, (cfg.n_rows,)) < 0.8, 1.0, -1.0)
+    # Digital→analog scale: normalize total drive by fan-in so a chip with a
+    # few dozen active rows sits near threshold (analog calibration's job).
+    return ChipParams(weights=weights, row_sign=sign,
+                      w_scale=jnp.float32(4.0 / (WEIGHT_MAX *
+                                                 math.sqrt(cfg.n_rows))))
+
+
+def init_state(cfg: ChipConfig, batch: int) -> ChipState:
+    return ChipState(neurons=nrn.init_state((batch, cfg.n_neurons), cfg.neuron))
+
+
+def quantize_ste(w: jax.Array) -> jax.Array:
+    """6-bit straight-through quantization: forward rounds, backward is id."""
+    w = jnp.clip(w, 0.0, WEIGHT_MAX)
+    return w + jax.lax.stop_gradient(jnp.round(w) - w)
+
+
+def chip_step(params: ChipParams, state: ChipState, in_spikes: jax.Array,
+              cfg: ChipConfig = ChipConfig()) -> tuple[ChipState, jax.Array]:
+    """One hardware time step of a chip.
+
+    Args:
+      in_spikes: f32[batch, n_rows] spikes driving the synapse rows this step
+        (from the layer-2 link and/or layer-1 recurrence).
+
+    Returns:
+      (new_state, out_spikes f32[batch, n_neurons]).
+    """
+    w = quantize_ste(params.weights) if cfg.quantize_weights else params.weights
+    w_eff = (w * params.w_scale) * params.row_sign[:, None]
+    current = in_spikes @ w_eff                        # [batch, n_neurons]
+    new_neurons, spikes = nrn.neuron_step(state.neurons, current, cfg.neuron)
+    return ChipState(neurons=new_neurons), spikes
+
+
+def crossbar_to_rows(out_spikes: jax.Array, select: jax.Array) -> jax.Array:
+    """Layer-1 crossbar: map neuron outputs onto synapse-row drivers.
+
+    ``select`` is a sparse 0/1 matrix [n_neurons, n_rows] configuring which
+    neuron outputs drive which rows (on-chip recurrence path).
+    """
+    return out_spikes @ select
+
+
+def spikes_to_labels(out_spikes: jax.Array, chip_id: int,
+                     neuron_bits: int = 9) -> tuple[jax.Array, jax.Array]:
+    """Encode dense output spikes as (labels, valid) for the layer-2 tap.
+
+    BSS-2 labels are 16 bit; we use ``chip_id << neuron_bits | neuron_idx``
+    (512 neurons → 9 bits, leaving 7 bits of chip address = 128 chips, which
+    covers the projected 120-chip system).
+    """
+    n = out_spikes.shape[-1]
+    ids = jnp.arange(n, dtype=jnp.int32) + (chip_id << neuron_bits)
+    labels = jnp.broadcast_to(ids, out_spikes.shape).astype(jnp.int32)
+    valid = out_spikes > 0.5
+    return labels, valid
+
+
+def labels_to_rows(labels: jax.Array, valid: jax.Array, row_of_label: jax.Array,
+                   n_rows: int) -> jax.Array:
+    """Decode routed ingress labels into a dense synapse-row drive vector.
+
+    ``row_of_label`` maps a 16-bit label to a synapse row (or -1 = no row).
+    Multiple events onto one row accumulate (synaptic summation).
+    """
+    rows = row_of_label[labels & 0xFFFF]
+    ok = valid & (rows >= 0)
+    rows = jnp.where(ok, rows, n_rows)                  # park invalid in slot n
+    drive = jnp.zeros((*labels.shape[:-1], n_rows + 1), jnp.float32)
+    one = jnp.where(ok, 1.0, 0.0)
+    drive = jax.vmap(lambda d, r, o: d.at[r].add(o))(
+        drive.reshape(-1, n_rows + 1), rows.reshape(-1, rows.shape[-1]),
+        one.reshape(-1, one.shape[-1]))
+    return drive.reshape(*labels.shape[:-1], n_rows + 1)[..., :n_rows]

@@ -1,0 +1,36 @@
+"""Spike encoders: analog values → input spike trains."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def poisson_encode(key: jax.Array, values: jax.Array, n_steps: int,
+                   max_rate_per_step: float = 0.5) -> jax.Array:
+    """Rate coding: values in [0, 1] → Bernoulli spike trains.
+
+    Returns f32[n_steps, *values.shape].
+    """
+    p = jnp.clip(values, 0.0, 1.0) * max_rate_per_step
+    u = jax.random.uniform(key, (n_steps, *values.shape))
+    return (u < p).astype(jnp.float32)
+
+
+def latency_encode(values: jax.Array, n_steps: int) -> jax.Array:
+    """Time-to-first-spike coding: larger value → earlier single spike."""
+    v = jnp.clip(values, 0.0, 1.0)
+    t_spike = jnp.round((1.0 - v) * (n_steps - 1)).astype(jnp.int32)
+    steps = jnp.arange(n_steps, dtype=jnp.int32)
+    shape = (n_steps,) + (1,) * values.ndim
+    return (steps.reshape(shape) == t_spike[None]).astype(jnp.float32)
+
+
+def regular_encode(rate_hz: float, n_steps: int, dt_us: float,
+                   phase_us: float = 0.0, n_channels: int = 1) -> jax.Array:
+    """Regular (deterministic) spike trains — the Fig 5 stimulus."""
+    period_us = 1e6 / rate_hz
+    t = jnp.arange(n_steps, dtype=jnp.float32) * dt_us
+    phase = jnp.mod(t - phase_us, period_us)
+    spikes = (phase < dt_us).astype(jnp.float32)
+    return jnp.tile(spikes[:, None], (1, n_channels))

@@ -1,0 +1,215 @@
+"""Multi-chip SNN: BSS-2 chips joined by the core interconnect.
+
+Two execution modes share one routing configuration:
+
+* ``event`` — the faithful datapath: dense output spikes are tapped from the
+  layer-2 stream, encoded as labels, pushed through the forward LUT, the
+  Aggregator's enabled all-to-all, and the reverse LUT; capacity overflow
+  drops events (congestion).  Integer labels are non-differentiable — this
+  mode is for emulation, routing verification and latency studies.
+
+* ``dense`` — the differentiable surrogate: the identical routing function is
+  compiled into per-(src,dst) connectivity matrices (label permutation ×
+  route enable), so inter-chip traffic is a dense matmul and surrogate
+  gradients flow end-to-end.  ``routing_matrices`` is derived *from the same
+  LUTs*, and ``tests/test_snn.py`` asserts both modes produce identical
+  spike trains.
+
+Inter-chip spikes arrive with a configurable pipeline delay of whole time
+steps, derived from the measured chip-to-chip latency and the simulation
+``dt`` — the paper's fixed routing latency made visible to the model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregator as agg
+from repro.core import routing as rt
+from repro.core.events import EventFrame, make_frame
+from repro.core.latency import DEFAULT_PARAMS, LatencyParams
+from repro.snn import chip as chiplib
+
+NEURON_BITS = 9  # 512 neurons per chip
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    n_chips: int = 4
+    chip: chiplib.ChipConfig = chiplib.ChipConfig()
+    # Per-destination ingress frame capacity per step (layer-2 bandwidth).
+    capacity: int = 256
+    # Simulation step in hardware µs; chip-to-chip latency rounds up to steps.
+    dt_us: float = 1.0
+    latency: LatencyParams = DEFAULT_PARAMS
+
+    @property
+    def delay_steps(self) -> int:
+        return max(1, int(-(-self.latency.chip_to_chip_ns() //
+                            (self.dt_us * 1000.0))))
+
+
+class NetworkParams(NamedTuple):
+    chips: chiplib.ChipParams              # stacked [n_chips, ...]
+    # Static routing: how each destination chip maps ingress labels to rows.
+    row_of_label: jax.Array                # i32[n_chips, 2^16]
+    router: agg.RouterState
+
+
+class NetworkState(NamedTuple):
+    chips: chiplib.ChipState               # stacked [n_chips, ...]
+    # Delay line of in-flight inter-chip spike drives.
+    inflight: jax.Array                    # f32[delay, n_chips, batch, n_rows]
+
+
+def _feedforward_row_map(n_chips: int, n_rows: int) -> jax.Array:
+    """Destination row map: neuron j of the previous chip drives row j%n_rows."""
+    table = jnp.full((n_chips, 1 << 16), -1, jnp.int32)
+    for dst in range(n_chips):
+        src = dst - 1
+        if src < 0:
+            continue
+        labels = (src << NEURON_BITS) + jnp.arange(chiplib.N_NEURONS)
+        rows = jnp.arange(chiplib.N_NEURONS) % n_rows
+        table = table.at[dst, labels].set(rows.astype(jnp.int32))
+    return table
+
+
+def init_feedforward(key: jax.Array, cfg: NetworkConfig) -> NetworkParams:
+    """A feed-forward network: chip i feeds chip i+1 (paper §III: 'map
+    non-recurrent multi-layer networks where every chip encompasses few
+    layers')."""
+    keys = jax.random.split(key, cfg.n_chips)
+    chips = jax.vmap(lambda k: chiplib.init_params(k, cfg.chip))(keys)
+    router = agg.identity_router(
+        cfg.n_chips, rt.feedforward_route_enables(cfg.n_chips))
+    row_map = _feedforward_row_map(cfg.n_chips, cfg.chip.n_rows)
+    return NetworkParams(chips=chips, row_of_label=row_map, router=router)
+
+
+def init_state(cfg: NetworkConfig, batch: int) -> NetworkState:
+    chips = jax.vmap(lambda _: chiplib.init_state(cfg.chip, batch))(
+        jnp.arange(cfg.n_chips))
+    inflight = jnp.zeros((cfg.delay_steps, cfg.n_chips, batch, cfg.chip.n_rows),
+                         jnp.float32)
+    return NetworkState(chips=chips, inflight=inflight)
+
+
+# ---------------------------------------------------------------------------
+# Dense (differentiable) routing derived from the LUT configuration
+# ---------------------------------------------------------------------------
+
+
+def routing_matrices(params: NetworkParams, cfg: NetworkConfig) -> jax.Array:
+    """Compile LUTs + route enables into dense connectivity.
+
+    Returns f32[n_src, n_dst, n_neurons, n_rows]: routed[s, d] maps source
+    chip s's output spikes onto destination chip d's synapse-row drive.
+    """
+    n, rows = cfg.n_chips, cfg.chip.n_rows
+    neurons = cfg.chip.n_neurons
+    out = jnp.zeros((n, n, neurons, rows), jnp.float32)
+    for s in range(n):
+        labels = (s << NEURON_BITS) + jnp.arange(neurons, dtype=jnp.int32)
+        wire, en_f = rt.lookup_fwd(params.router.fwd_tables[s], labels)
+        for d in range(n):
+            chipl, en_r = rt.lookup_rev(params.router.rev_tables[d], wire)
+            dst_rows = params.row_of_label[d, chipl & 0xFFFF]
+            ok = (en_f & en_r & (dst_rows >= 0)
+                  & params.router.route_enables[s, d])
+            mat = jnp.zeros((neurons, rows), jnp.float32)
+            mat = mat.at[jnp.arange(neurons),
+                         jnp.where(ok, dst_rows, 0)].add(
+                             jnp.where(ok, 1.0, 0.0))
+            out = out.at[s, d].set(mat)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def step_dense(params: NetworkParams, state: NetworkState,
+               ext_drive: jax.Array, route_mats: jax.Array,
+               cfg: NetworkConfig) -> tuple[NetworkState, jax.Array]:
+    """One network step, differentiable routing.
+
+    Args:
+      ext_drive: f32[n_chips, batch, n_rows] external input spikes this step
+        (e.g. chip 0's encoded stimulus; zero elsewhere).
+      route_mats: output of ``routing_matrices`` (static per experiment).
+
+    Returns:
+      (new_state, out_spikes f32[n_chips, batch, n_neurons]).
+    """
+    drive = ext_drive + state.inflight[0]
+    new_chip_state, spikes = jax.vmap(
+        lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
+            params.chips, state.chips, drive)
+    # Route: routed[d] = Σ_s spikes[s] @ route_mats[s, d]
+    routed = jnp.einsum("sbn,sdnr->dbr", spikes, route_mats)
+    inflight = jnp.concatenate([state.inflight[1:], routed[None]], axis=0)
+    return NetworkState(chips=new_chip_state, inflight=inflight), spikes
+
+
+def step_event(params: NetworkParams, state: NetworkState,
+               ext_drive: jax.Array,
+               cfg: NetworkConfig) -> tuple[NetworkState, jax.Array, jax.Array]:
+    """One network step through the faithful event datapath.
+
+    Returns (new_state, out_spikes, dropped_per_chip).
+    """
+    drive = ext_drive + state.inflight[0]
+    new_chip_state, spikes = jax.vmap(
+        lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
+            params.chips, state.chips, drive)
+
+    batch = spikes.shape[1]
+
+    def one_batch(spk_b):  # spk_b: [n_chips, n_neurons]
+        labels = jnp.stack([
+            (jnp.arange(cfg.chip.n_neurons, dtype=jnp.int32)
+             + (c << NEURON_BITS)) for c in range(cfg.n_chips)])
+        valid = spk_b > 0.5
+        frames, egress_drop = make_frame(labels, jnp.zeros_like(labels), valid,
+                                         cfg.capacity)
+        ingress, agg_drop = agg.route_step(params.router, frames, cfg.capacity)
+        dropped = egress_drop + agg_drop
+        drives = jax.vmap(
+            lambda lab, val, rmap: chiplib.labels_to_rows(
+                lab[None], val[None], rmap, cfg.chip.n_rows)[0])(
+                    ingress.labels, ingress.valid, params.row_of_label)
+        return drives, dropped
+
+    routed, dropped = jax.vmap(one_batch, in_axes=1, out_axes=(1, 1))(spikes)
+    inflight = jnp.concatenate([state.inflight[1:], routed[None]], axis=0)
+    return (NetworkState(chips=new_chip_state, inflight=inflight),
+            spikes, dropped)
+
+
+def run_dense(params: NetworkParams, state: NetworkState,
+              ext_drives: jax.Array, route_mats: jax.Array,
+              cfg: NetworkConfig) -> tuple[NetworkState, jax.Array]:
+    """Scan ``step_dense`` over time. ext_drives: [T, n_chips, batch, rows]."""
+
+    def body(s, drive):
+        s, spk = step_dense(params, s, drive, route_mats, cfg)
+        return s, spk
+
+    return jax.lax.scan(body, state, ext_drives)
+
+
+def run_event(params: NetworkParams, state: NetworkState,
+              ext_drives: jax.Array,
+              cfg: NetworkConfig) -> tuple[NetworkState, jax.Array, jax.Array]:
+    def body(s, drive):
+        s, spk, dropped = step_event(params, s, drive, cfg)
+        return s, (spk, dropped)
+
+    final, (spikes, dropped) = jax.lax.scan(body, state, ext_drives)
+    return final, spikes, dropped

@@ -1,0 +1,148 @@
+"""Neuron dynamics of the BSS-2 analog substrate, discretized in JAX.
+
+BSS-2 emulates AdEx (adaptive exponential integrate-and-fire) neurons in
+analog circuits running ~1000× faster than biology; the LIF limit (zero
+exponential slope, zero adaptation) is the common operating point.  The
+continuous-time ODEs become exponential-Euler steps at a simulation ``dt``;
+the acceleration factor maps biological time constants onto hardware ones
+(τ_hw = τ_bio / speedup), exactly as Fig 5B trades the speed-up factor
+against the fixed routing latency.
+
+Spike thresholding uses the SuperSpike surrogate gradient so multi-chip
+networks are trainable end-to-end (the paper's stated purpose: "research of
+training methodologies for large-scale analog hardware").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuronParams:
+    """AdEx parameters (LIF when delta_t == 0 and a == b == 0).
+
+    Times are in hardware microseconds (biological ms / speedup · 1e3).
+    """
+
+    tau_mem_us: float = 10.0       # membrane time constant (≙ 10 ms bio @1000×)
+    tau_syn_us: float = 5.0        # synaptic current time constant
+    tau_adapt_us: float = 100.0    # adaptation time constant (AdEx w)
+    v_leak: float = 0.0            # leak / rest potential (normalized units)
+    v_th: float = 1.0              # spike threshold
+    v_reset: float = 0.0           # reset potential
+    v_exp: float = 0.8             # exponential threshold (AdEx)
+    delta_t: float = 0.0           # exponential slope; 0 → pure LIF
+    adapt_a: float = 0.0           # sub-threshold adaptation coupling
+    adapt_b: float = 0.0           # spike-triggered adaptation increment
+    refrac_us: float = 0.0         # refractory period
+    dt_us: float = 1.0             # integration step
+
+    @property
+    def alpha_mem(self) -> float:
+        return math.exp((-self.dt_us / self.tau_mem_us))
+
+    @property
+    def alpha_syn(self) -> float:
+        return math.exp((-self.dt_us / self.tau_syn_us))
+
+    @property
+    def alpha_adapt(self) -> float:
+        return math.exp((-self.dt_us / self.tau_adapt_us))
+
+    @property
+    def refrac_steps(self) -> int:
+        return int(round(self.refrac_us / self.dt_us))
+
+
+LIF = NeuronParams()
+ADEX = NeuronParams(delta_t=0.06, adapt_a=0.02, adapt_b=0.1)
+
+
+class NeuronState(NamedTuple):
+    v: jax.Array          # membrane potential        f32[..., n]
+    i_syn: jax.Array      # synaptic current          f32[..., n]
+    w_adapt: jax.Array    # adaptation current        f32[..., n]
+    refrac: jax.Array     # refractory countdown      i32[..., n]
+
+
+def init_state(shape: tuple[int, ...], params: NeuronParams = LIF) -> NeuronState:
+    return NeuronState(
+        v=jnp.full(shape, params.v_leak, jnp.float32),
+        i_syn=jnp.zeros(shape, jnp.float32),
+        w_adapt=jnp.zeros(shape, jnp.float32),
+        refrac=jnp.zeros(shape, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SuperSpike surrogate gradient (Zenke & Ganguli 2018)
+# ---------------------------------------------------------------------------
+
+SURROGATE_BETA = 10.0
+
+
+@jax.custom_jvp
+def spike_fn(v_minus_th: jax.Array) -> jax.Array:
+    return (v_minus_th > 0.0).astype(v_minus_th.dtype)
+
+
+@spike_fn.defjvp
+def _spike_fn_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    y = spike_fn(x)
+    dy = dx / (SURROGATE_BETA * jnp.abs(x) + 1.0) ** 2
+    return y, dy
+
+
+# ---------------------------------------------------------------------------
+# Dynamics step
+# ---------------------------------------------------------------------------
+
+
+def neuron_step(state: NeuronState, input_current: jax.Array,
+                params: NeuronParams = LIF) -> tuple[NeuronState, jax.Array]:
+    """One exponential-Euler step of AdEx/LIF dynamics.
+
+    Args:
+      state: current neuron state, arrays shaped [..., n_neurons].
+      input_current: synaptic drive accumulated this step, same shape.
+
+    Returns:
+      (new_state, spikes) with spikes in {0, 1} (float, surrogate-diff'able).
+    """
+    p = params
+    i_syn = p.alpha_syn * state.i_syn + input_current
+
+    dv_leak = (1.0 - p.alpha_mem) * (p.v_leak - state.v)
+    if p.delta_t > 0.0:
+        # Exponential spike-initiation current, clipped for numerical safety
+        # (the analog circuit saturates similarly).
+        exp_arg = jnp.clip((state.v - p.v_exp) / p.delta_t, -20.0, 20.0)
+        dv_exp = (1.0 - p.alpha_mem) * p.delta_t * jnp.exp(exp_arg)
+    else:
+        dv_exp = 0.0
+    dv = dv_leak + dv_exp + (1.0 - p.alpha_mem) * (i_syn - state.w_adapt)
+    v = state.v + dv
+
+    in_refrac = state.refrac > 0
+    v = jnp.where(in_refrac, p.v_reset, v)
+
+    spikes = spike_fn(v - p.v_th)
+    spikes = jnp.where(in_refrac, 0.0, spikes)
+
+    # Reset + adaptation. jnp.where on the *already thresholded* value keeps
+    # the surrogate gradient path through spike_fn intact.
+    v = (1.0 - spikes) * v + spikes * p.v_reset
+    w_adapt = (p.alpha_adapt * state.w_adapt
+               + (1.0 - p.alpha_adapt) * p.adapt_a * (state.v - p.v_leak)
+               + spikes * p.adapt_b)
+    refrac = jnp.where(spikes > 0, jnp.int32(p.refrac_steps),
+                       jnp.maximum(state.refrac - 1, 0))
+
+    return NeuronState(v=v, i_syn=i_syn, w_adapt=w_adapt, refrac=refrac), spikes

@@ -1,0 +1,65 @@
+"""PPU-style on-chip plasticity (hybrid plasticity, Pehle et al. 2022).
+
+Each BSS-2 chip carries two embedded SIMD CPUs ("PPUs") that observe
+correlation sensors in the synapse array and rewrite the 6-bit weights while
+the analog network keeps running.  Here that becomes a pure-JAX STDP update
+operating on exponentially filtered pre-/post-synaptic traces — vectorized
+over the whole 256×512 array exactly like the PPU's row-parallel SIMD walk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.snn.chip import WEIGHT_MAX
+
+
+@dataclasses.dataclass(frozen=True)
+class STDPConfig:
+    tau_pre_us: float = 20.0
+    tau_post_us: float = 20.0
+    lr_pot: float = 0.05        # potentiation rate (pre-before-post)
+    lr_dep: float = 0.06        # depression rate  (post-before-pre)
+    dt_us: float = 1.0
+
+    @property
+    def alpha_pre(self) -> float:
+        return math.exp((-self.dt_us / self.tau_pre_us))
+
+    @property
+    def alpha_post(self) -> float:
+        return math.exp((-self.dt_us / self.tau_post_us))
+
+
+class STDPState(NamedTuple):
+    trace_pre: jax.Array    # f32[n_rows]
+    trace_post: jax.Array   # f32[n_neurons]
+
+
+def init_stdp(n_rows: int, n_neurons: int) -> STDPState:
+    return STDPState(trace_pre=jnp.zeros((n_rows,)),
+                     trace_post=jnp.zeros((n_neurons,)))
+
+
+def stdp_step(state: STDPState, weights: jax.Array, pre: jax.Array,
+              post: jax.Array, cfg: STDPConfig = STDPConfig()
+              ) -> tuple[STDPState, jax.Array]:
+    """One plasticity step.
+
+    Args:
+      weights: f32[n_rows, n_neurons] current (digital) weights.
+      pre: f32[n_rows] presynaptic spikes this step.
+      post: f32[n_neurons] postsynaptic spikes this step.
+    """
+    trace_pre = cfg.alpha_pre * state.trace_pre + pre
+    trace_post = cfg.alpha_post * state.trace_post + post
+    # Pre-before-post → potentiate; post-before-pre → depress.
+    dw = (cfg.lr_pot * jnp.outer(trace_pre, post)
+          - cfg.lr_dep * jnp.outer(pre, trace_post))
+    new_w = jnp.clip(weights + dw * WEIGHT_MAX, 0.0, WEIGHT_MAX)
+    return STDPState(trace_pre=trace_pre, trace_post=trace_post), new_w

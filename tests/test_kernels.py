@@ -1,0 +1,184 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.routing import build_fwd_table
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lif_step.ops import lif_step
+from repro.kernels.lif_step.ref import lif_step_ref
+from repro.kernels.linear_scan.ops import linear_scan
+from repro.kernels.linear_scan.ref import linear_scan_ref
+from repro.kernels.spike_router.ops import route_and_pack
+from repro.kernels.spike_router.ref import spike_router_ref
+from repro.snn import neuron as nrn
+
+KEY = jax.random.key(42)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+ATTN_SHAPES = [
+    # (batch, q_heads, kv_heads, seq, head_dim)
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 8, 2, 256, 64),     # GQA 4:1
+    (1, 4, 1, 256, 128),    # MQA
+    (1, 2, 2, 200, 64),     # non-multiple seq (padding path)
+    (1, 16, 16, 128, 256),  # gemma-style head_dim=256
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(shape, causal, dtype):
+    b, hq, hkv, s, d = shape
+    ks = jax.random.split(jax.random.fold_in(KEY, hash(shape) % 2**30), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_size_invariance():
+    b, h, s, d = 1, 2, 256, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, h, s, d))
+    v = jax.random.normal(ks[2], (b, h, s, d))
+    o1 = flash_attention(q, k, v, block_q=64, block_kv=64, interpret=True)
+    o2 = flash_attention(q, k, v, block_q=128, block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear_scan
+# ---------------------------------------------------------------------------
+
+SCAN_SHAPES = [
+    # (batch, heads, T, K, V, mode, w magnitude)
+    (1, 2, 128, 32, 64, "inclusive", 0.1),
+    (2, 2, 96, 16, 32, "bonus", 0.5),
+    (1, 1, 256, 64, 64, "inclusive", 2.0),
+    (1, 2, 200, 32, 32, "bonus", 4.0),     # strong decay, padded T
+    (1, 4, 64, 128, 64, "inclusive", 1.0),
+]
+
+
+@pytest.mark.parametrize("shape", SCAN_SHAPES)
+def test_linear_scan_matches_sequential(shape):
+    b, h, t, kd, vd, mode, wmag = shape
+    ks = jax.random.split(jax.random.fold_in(KEY, hash(shape) % 2**30), 5)
+    q = jax.random.normal(ks[0], (b, h, t, kd)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, t, kd)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, t, vd))
+    w = -jax.random.uniform(ks[3], (b, h, t, kd), minval=0.0, maxval=wmag)
+    u = jax.random.normal(ks[4], (h, kd)) * 0.3
+    out = linear_scan(q, k, v, w, u, mode=mode, interpret=True)
+    ref = linear_scan_ref(q, k, v, w, u, mode=mode)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+    np.testing.assert_allclose(np.asarray(out) / scale,
+                               np.asarray(ref) / scale, atol=5e-5)
+
+
+def test_linear_scan_chunk_invariance():
+    b, h, t, kd, vd = 1, 2, 128, 32, 32
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, h, t, kd))
+    k = jax.random.normal(ks[1], (b, h, t, kd))
+    v = jax.random.normal(ks[2], (b, h, t, vd))
+    w = -jax.random.uniform(ks[3], (b, h, t, kd), maxval=0.3)
+    o1 = linear_scan(q, k, v, w, chunk=32, interpret=True)
+    o2 = linear_scan(q, k, v, w, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# spike_router
+# ---------------------------------------------------------------------------
+
+ROUTER_CASES = [
+    # (batch, n_events, capacity, enable_frac)
+    (1, 128, 256, 1.0),    # no drops, all enabled
+    (2, 256, 64, 0.7),     # capacity drops
+    (4, 128, 16, 0.3),     # heavy congestion
+    (1, 1024, 512, 0.9),
+]
+
+
+@pytest.mark.parametrize("case", ROUTER_CASES)
+def test_spike_router_matches_ref(case):
+    b, n, cap, frac = case
+    n_lab = 4096
+    ids = jnp.arange(n_lab)
+    en = jax.random.uniform(jax.random.fold_in(KEY, 7), (n_lab,)) < frac
+    lut = build_fwd_table(ids, (ids * 7 + 3) % 32768, en)
+    labels = jax.random.randint(jax.random.fold_in(KEY, n), (b, n), 0, n_lab)
+    valid = jax.random.uniform(jax.random.fold_in(KEY, n + 1), (b, n)) < 0.6
+    out_l, out_v, dropped = route_and_pack(labels, valid, lut, capacity=cap,
+                                           interpret=True)
+    ref_l, ref_v, ref_d = spike_router_ref(labels, valid, lut, capacity=cap)
+    assert jnp.array_equal(out_l, ref_l)
+    assert jnp.array_equal(out_v.astype(jnp.int32), ref_v)
+    assert jnp.array_equal(dropped, ref_d[..., 0])
+
+
+def test_spike_router_conservation():
+    """Events are never created: routed + dropped == enabled ∧ valid."""
+    n_lab = 1024
+    ids = jnp.arange(n_lab)
+    en = jax.random.uniform(jax.random.fold_in(KEY, 3), (n_lab,)) < 0.5
+    lut = build_fwd_table(ids, ids, en)
+    labels = jax.random.randint(jax.random.fold_in(KEY, 4), (3, 200), 0, n_lab)
+    valid = jax.random.uniform(jax.random.fold_in(KEY, 5), (3, 200)) < 0.8
+    out_l, out_v, dropped = route_and_pack(labels, valid, lut, capacity=32,
+                                           interpret=True)
+    expected = (valid & en[labels]).sum(-1)
+    got = out_v.sum(-1) + dropped
+    assert jnp.array_equal(expected.astype(jnp.int32), got.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# lif_step
+# ---------------------------------------------------------------------------
+
+LIF_SHAPES = [(8, 128), (5, 300), (16, 512), (1, 64)]
+
+
+@pytest.mark.parametrize("shape", LIF_SHAPES)
+def test_lif_step_matches_substrate(shape):
+    b, n = shape
+    ks = jax.random.split(jax.random.fold_in(KEY, b * n), 3)
+    v = jax.random.uniform(ks[0], (b, n), minval=-0.5, maxval=1.2)
+    i = jax.random.normal(ks[1], (b, n)) * 0.3
+    d = jax.random.uniform(ks[2], (b, n)) * 0.5
+    out = lif_step(v, i, d, interpret=True)
+    ref = lif_step_ref(v, i, d)
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-6)
+
+
+def test_lif_step_multi_step_trajectory():
+    """Iterating the kernel reproduces the substrate's spike train exactly."""
+    params = nrn.LIF
+    b, n, steps = 4, 256, 50
+    key = jax.random.fold_in(KEY, 99)
+    v = jnp.zeros((b, n))
+    i = jnp.zeros((b, n))
+    vr, ir = v, i
+    for t in range(steps):
+        drive = jax.random.uniform(jax.random.fold_in(key, t), (b, n)) * 0.6
+        v, i, s = lif_step(v, i, drive, params=params, interpret=True)
+        vr, ir, sr = lif_step_ref(vr, ir, drive, params=params)
+        assert jnp.array_equal(s, sr), f"spike divergence at step {t}"
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-5)

@@ -1,0 +1,142 @@
+"""Model-component tests: chunked attention, MoE dispatch properties,
+chunked linear scan, encoder bidirectionality."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.kernels.linear_scan.ref import (linear_scan_chunked,
+                                           linear_scan_ref)
+from repro.models import model as M
+from repro.models import moe as moelib
+from repro.models.attention import sdpa
+from repro.models.layers import Param, is_param
+
+KEY = jax.random.key(21)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention (§Perf change) == baseline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(2, 4, 2, 96, 32, 32, True),
+                                   (1, 4, 4, 64, 48, 32, True),
+                                   (2, 2, 2, 100, 32, 32, False)])
+def test_chunked_attention_equals_dense(shape):
+    b, hq, hkv, sq, dk, dv, causal = shape
+    ks = jax.random.split(jax.random.fold_in(KEY, sq + dk), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, dk))
+    k = jax.random.normal(ks[1], (b, hkv, sq, dk))
+    v = jax.random.normal(ks[2], (b, hkv, sq, dv))
+    dense = sdpa(q, k, v, causal=causal)
+    chunk = sdpa(q, k, v, causal=causal, block_kv=32)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunk),
+                               atol=2e-5)
+
+
+def test_chunked_attention_model_loss_identical():
+    cfg = dataclasses.replace(smoke_config(get_config("qwen3-8b")),
+                              dtype="float32")
+    cfg_c = dataclasses.replace(cfg, attn_block_kv=8)
+    params = M.init_params(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (2, 17), 1, cfg.vocab_size)}
+    l1, _ = M.train_loss(params, batch, cfg)
+    l2, _ = M.train_loss(params, batch, cfg_c)
+    assert abs(float(l1) - float(l2)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# MoE event-frame dispatch properties
+# ---------------------------------------------------------------------------
+
+
+def _moe_setup(capacity_factor=8.0):
+    cfg = dataclasses.replace(smoke_config(get_config("grok-1-314b")),
+                              dtype="float32",
+                              capacity_factor=capacity_factor)
+    params = M.init_params(KEY, cfg)
+    one = jax.tree.map(lambda p: Param(p.value[0], p.axes[1:]),
+                       params["moe"], is_leaf=is_param)["moe"]
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32)
+    return cfg, one, x
+
+
+def test_moe_lossless_at_high_capacity():
+    cfg, params, x = _moe_setup(capacity_factor=8.0)
+    y, metrics = moelib.moe_forward(params, x, cfg)
+    assert float(metrics["dropped_frac"]) == 0.0
+    assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_drops_under_tight_capacity():
+    cfg, params, x = _moe_setup(capacity_factor=0.25)
+    y, metrics = moelib.moe_forward(params, x, cfg)
+    assert float(metrics["dropped_frac"]) > 0.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_local_dispatch_flag_is_noop_on_single_shard():
+    cfg, params, x = _moe_setup()
+    cfg_local = dataclasses.replace(cfg, moe_local_dispatch=True)
+    y1, _ = moelib.moe_forward(params, x, cfg)
+    y2, _ = moelib.moe_forward(params, x, cfg_local)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_moe_grad_flows_to_experts_and_router():
+    cfg, params, x = _moe_setup()
+
+    def loss(p):
+        y, m = moelib.moe_forward(p, x, cfg)
+        return jnp.sum(jnp.square(y)) + 0.01 * m["aux_loss"]
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.abs(g["router"].value).sum()) > 0
+    assert float(jnp.abs(g["w_up"].value).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# chunked linear scan == sequential oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,wmag", [("inclusive", 0.5), ("bonus", 3.0),
+                                       ("inclusive", 11.0)])
+def test_linear_scan_chunked_matches_oracle(mode, wmag):
+    ks = jax.random.split(jax.random.fold_in(KEY, int(wmag * 10)), 5)
+    b, h, t, kd, vd = 2, 3, 100, 16, 32
+    q = jax.random.normal(ks[0], (b, h, t, kd)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, t, kd)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, t, vd))
+    w = -jax.random.uniform(ks[3], (b, h, t, kd), maxval=wmag)
+    u = jax.random.normal(ks[4], (h, kd)) * 0.3
+    a = linear_scan_chunked(q, k, v, w, u, mode=mode)
+    r = linear_scan_ref(q, k, v, w, u, mode=mode)
+    scale = float(jnp.max(jnp.abs(r))) + 1e-9
+    np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(r) / scale,
+                               atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder is bidirectional
+# ---------------------------------------------------------------------------
+
+
+def test_encoder_attends_to_future_frames():
+    cfg = dataclasses.replace(smoke_config(get_config("whisper-medium")),
+                              dtype="float32", remat=False)
+    params = M.init_params(KEY, cfg)
+    embeds = jax.random.normal(KEY, (1, 8, cfg.d_model))
+
+    def first_enc_out(e):
+        from repro.models.model import _encoder_stack
+        return jnp.sum(_encoder_stack(params, e, cfg)[0, 0])
+
+    g = jax.grad(first_enc_out)(embeds)
+    # position 0's encoding must depend on later frames (no causal mask)
+    assert float(jnp.abs(g[0, -1]).sum()) > 0.0

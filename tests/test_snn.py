@@ -1,0 +1,148 @@
+"""SNN substrate tests: dynamics, chip, multi-chip routing equivalence,
+plasticity, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.snn import (ADEX, LIF, ChipConfig, STDPConfig, init_chip_params,
+                       init_chip_state, init_feedforward, init_neuron_state,
+                       init_network_state, init_stdp, chip_step, neuron_step,
+                       poisson_encode, latency_encode, regular_encode,
+                       routing_matrices, run_dense, run_event, stdp_step)
+from repro.snn import network as netlib
+from repro.snn import training as trlib
+
+KEY = jax.random.key(3)
+
+
+def test_lif_integrates_and_fires():
+    state = init_neuron_state((1, 4), LIF)
+    fired = False
+    for _ in range(50):
+        state, spikes = neuron_step(state, jnp.full((1, 4), 0.4), LIF)
+        fired = fired or bool(spikes.any())
+    assert fired
+    assert bool(jnp.all(jnp.isfinite(state.v)))
+
+
+def test_lif_silent_without_input():
+    state = init_neuron_state((1, 8), LIF)
+    for _ in range(50):
+        state, spikes = neuron_step(state, jnp.zeros((1, 8)), LIF)
+        assert not bool(spikes.any())
+
+
+def test_adex_adaptation_slows_firing():
+    """With spike-triggered adaptation the inter-spike interval grows."""
+    state = init_neuron_state((1, 1), ADEX)
+    spike_times = []
+    for t in range(200):
+        state, s = neuron_step(state, jnp.full((1, 1), 0.5), ADEX)
+        if bool(s[0, 0] > 0):
+            spike_times.append(t)
+    assert len(spike_times) >= 3
+    isis = np.diff(spike_times)
+    assert isis[-1] >= isis[0]
+
+
+def test_surrogate_gradient_nonzero():
+    def loss(drive):
+        state = init_neuron_state((1, 4), LIF)
+        total = 0.0
+        for _ in range(20):
+            state, s = neuron_step(state, drive, LIF)
+            total = total + s.sum()
+        return total
+
+    g = jax.grad(loss)(jnp.full((1, 4), 0.3))
+    assert float(jnp.abs(g).sum()) > 0.0
+
+
+def test_chip_shapes_and_quantization():
+    cfg = ChipConfig()
+    params = init_chip_params(KEY, cfg)
+    assert params.weights.shape == (256, 512)        # 131 072 synapses
+    state = init_chip_state(cfg, batch=2)
+    spikes_in = (jax.random.uniform(KEY, (2, 256)) < 0.2).astype(jnp.float32)
+    state, out = chip_step(params, state, spikes_in, cfg)
+    assert out.shape == (2, 512)
+    assert bool(jnp.all(jnp.isfinite(state.neurons.v)))
+
+
+def test_event_mode_equals_dense_mode():
+    cfg = netlib.NetworkConfig(n_chips=3, capacity=600)
+    params = init_feedforward(KEY, cfg)
+    mats = routing_matrices(params, cfg)
+    drives = jnp.zeros((10, 3, 2, 256))
+    stim = (jax.random.uniform(KEY, (10, 2, 256)) < 0.3).astype(jnp.float32)
+    drives = drives.at[:, 0].set(stim)
+    state = netlib.init_state(cfg, 2)
+    _, dense_spikes = run_dense(params, state, drives, mats, cfg)
+    _, event_spikes, dropped = run_event(params, state, drives, cfg)
+    assert jnp.array_equal(dense_spikes, event_spikes)
+    assert int(dropped.sum()) == 0
+
+
+def test_event_mode_drops_under_congestion():
+    cfg = netlib.NetworkConfig(n_chips=3, capacity=16)   # tiny frames
+    params = init_feedforward(KEY, cfg)
+    drives = jnp.zeros((10, 3, 2, 256))
+    drives = drives.at[:, 0].set(
+        (jax.random.uniform(KEY, (10, 2, 256)) < 0.8).astype(jnp.float32))
+    state = netlib.init_state(cfg, 2)
+    _, _, dropped = run_event(params, state, drives, cfg)
+    assert int(dropped.sum()) > 0
+
+
+def test_interchip_delay_steps():
+    cfg = netlib.NetworkConfig(n_chips=2)
+    assert cfg.delay_steps == 1          # 0.95 µs latency < 1 µs step
+
+
+def test_encoders():
+    vals = jnp.array([0.0, 0.5, 1.0])
+    sp = poisson_encode(KEY, vals, 100)
+    rates = sp.mean(0)
+    assert float(rates[0]) < 0.05 < float(rates[2])
+    le = latency_encode(vals, 10)
+    assert le.sum() == 3                 # one spike per channel
+    re = regular_encode(1e4, 100, 1.0)   # 10 kHz → one spike per 100 µs
+    assert int(re.sum()) == 1
+
+
+def test_stdp_potentiation_and_depression():
+    cfg = STDPConfig()
+    state = init_stdp(4, 4)
+    w = jnp.full((4, 4), 20.0)
+    # pre fires, then post → potentiation on that synapse
+    state, w = stdp_step(state, w, jnp.array([1., 0, 0, 0]),
+                         jnp.zeros((4,)), cfg)
+    state, w2 = stdp_step(state, w, jnp.zeros((4,)),
+                          jnp.array([1., 0, 0, 0]), cfg)
+    assert float(w2[0, 0]) > float(w[0, 0])
+    # post fires, then pre → depression
+    state = init_stdp(4, 4)
+    w = jnp.full((4, 4), 20.0)
+    state, w = stdp_step(state, w, jnp.zeros((4,)),
+                         jnp.array([0., 1, 0, 0]), cfg)
+    state, w3 = stdp_step(state, w, jnp.array([0., 1, 0, 0]),
+                          jnp.zeros((4,)), cfg)
+    assert float(w3[1, 1]) < 20.0
+
+
+def test_multichip_training_reduces_loss():
+    cfg = trlib.TrainConfig(
+        network=netlib.NetworkConfig(n_chips=2, capacity=600),
+        n_steps=24, n_classes=4, lr=0.2)
+    params = init_feedforward(jax.random.key(0), cfg.network)
+    mats = routing_matrices(params, cfg.network)
+    mom = jax.tree.map(
+        lambda x: jnp.zeros_like(x) if x.dtype == jnp.float32 else x, params)
+    step = jax.jit(lambda p, m, d, l: trlib.train_step(p, m, mats, d, l, cfg))
+    losses = []
+    for i in range(30):
+        drives, labels = trlib.make_batch(jax.random.key(100 + i), cfg, 16)
+        params, mom, loss, aux = step(params, mom, drives, labels)
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
