@@ -1,19 +1,30 @@
 """Event-routing datapath throughput on the 4-chip prototype topology.
 
-Times the full route_step (fwd LUT → Aggregator all-to-all → reverse LUT →
-capacity pack) and the fused Pallas spike_router kernel (interpret mode on
-CPU — wall time is *not* TPU-representative; the derived column carries the
-per-event work, which is).
+Headline before/after for the fused exchange datapath: the seed's argsort
+compaction + broadcast materialization (``route_step_baseline``) against the
+cumsum/scatter route-merge-pack path (``route_step``, fused).  Also times the
+unfused cumsum composition (isolating the compaction-scheme win from the
+kernel fusion) and the Pallas kernel in interpret mode (semantics check —
+wall time is *not* TPU-representative).
+
+Writes ``BENCH_interconnect.json`` (name → us_per_call) next to the CSV
+lines so the perf trajectory is tracked across PRs.
 """
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import identity_router, make_frame, route_step
+from repro.core import identity_router, make_frame, route_step, \
+    route_step_baseline
 from repro.core.routing import build_fwd_table
 from repro.kernels.spike_router.ops import route_and_pack
+
+BENCH_JSON = os.environ.get("BENCH_INTERCONNECT_JSON",
+                            "BENCH_interconnect.json")
 
 
 def _time(fn, *args, reps=20):
@@ -25,6 +36,14 @@ def _time(fn, *args, reps=20):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def write_bench_json(rows, path=BENCH_JSON):
+    """Persist machine-readable ``{name: us_per_call}`` for CI tracking."""
+    payload = {name: round(us, 3) for name, _, us, _ in rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
 def run(verbose: bool = True):
     rows = []
     key = jax.random.key(0)
@@ -34,13 +53,29 @@ def run(verbose: bool = True):
         valid = jax.random.uniform(jax.random.fold_in(key, 1),
                                    (4, n_events)) < 0.5
         frames, _ = make_frame(labels, jnp.zeros_like(labels), valid, n_events)
-        step = jax.jit(lambda f: route_step(state, f, cap))
-        us = _time(step, frames)
-        per_event = us / (4 * n_events)
-        rows.append(("route_step", n_events, us, per_event))
+
+        variants = (
+            ("argsort_baseline",
+             jax.jit(lambda f: route_step_baseline(state, f, cap))),
+            ("cumsum_unfused",
+             jax.jit(lambda f: route_step(state, f, cap, use_fused=False))),
+            ("fused",
+             jax.jit(lambda f: route_step(state, f, cap, use_fused=True))),
+        )
+        timings = {}
+        for variant, step in variants:
+            us = _time(step, frames)
+            timings[variant] = us
+            per_event = us / (4 * n_events)
+            rows.append((f"route_step_{variant}[n={n_events}]",
+                         n_events, us, per_event))
+            if verbose:
+                print(f"interconnect[route_step_{variant} n={n_events}],"
+                      f"{us:.0f},{per_event*1000:.1f}ns/event")
         if verbose:
-            print(f"interconnect[route_step n={n_events}],{us:.0f},"
-                  f"{per_event*1000:.1f}ns/event")
+            speedup = timings["argsort_baseline"] / timings["fused"]
+            print(f"interconnect[speedup n={n_events}],"
+                  f"{timings['fused']:.0f},{speedup:.2f}x vs argsort")
 
     ids = jnp.arange(4096)
     lut = build_fwd_table(ids, ids)
@@ -50,10 +85,15 @@ def run(verbose: bool = True):
         fn = jax.jit(lambda l, v: route_and_pack(l, v, lut, capacity=512,
                                                  interpret=True))
         us = _time(fn, labels, valid, reps=5)
-        rows.append(("spike_router_kernel", n_events, us, us / (4 * n_events)))
+        rows.append((f"spike_router_kernel_interpret[n={n_events}]",
+                     n_events, us, us / (4 * n_events)))
         if verbose:
             print(f"interconnect[pallas_router n={n_events}],{us:.0f},"
                   "interpret-mode (CPU)")
+
+    path = write_bench_json(rows)
+    if verbose:
+        print(f"interconnect[json],0,wrote {path}")
     return rows
 
 

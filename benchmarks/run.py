@@ -1,6 +1,8 @@
 """Benchmark orchestrator — one module per paper table/figure/claim.
 
-Prints ``name,us_per_call,derived`` CSV lines per benchmark.
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, and writes
+``BENCH_interconnect.json`` (name → us_per_call) for the routing datapath so
+the perf trajectory is machine-readable across PRs.
 
   fig5_latency            Fig 5A  latency distributions vs rate (3:1 fan-in)
   fig5_speedup            Fig 5B  speed-up factor vs routing latency
@@ -42,7 +44,8 @@ def main() -> None:
     if failures:
         print(f"\nFAILED benchmarks: {failures}")
         sys.exit(1)
-    print("\nall benchmarks passed")
+    print(f"\nall benchmarks passed "
+          f"(routing datapath timings: {interconnect_throughput.BENCH_JSON})")
 
 
 if __name__ == "__main__":

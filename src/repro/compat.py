@@ -1,0 +1,35 @@
+"""jax version compatibility shims (the container pins jax 0.4.x; the code
+targets the current API).
+
+``make_mesh``  — jax.make_mesh with Auto axis types when supported (the
+                 ``axis_types`` kwarg and ``jax.sharding.AxisType`` only
+                 exist from jax 0.5).
+``shard_map``  — top-level ``jax.shard_map`` when present, otherwise the
+                 ``jax.experimental.shard_map`` original.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:                                       # jax ≥ 0.5 exports it at top level
+    shard_map = jax.shard_map
+except AttributeError:                     # pragma: no cover - version compat
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict (jax < 0.5 returned a
+    one-element list of per-device dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))

@@ -2,18 +2,20 @@
 deterministic-latency sparse-event interconnect (BrainScaleS-2 multi-chip)."""
 
 from repro.core.events import (  # noqa: F401
-    EventFrame, PackedWords, empty_frame, make_frame, concatenate_frames,
-    pack_words, unpack_words, words_required, CapacityPolicy, SPIKES_PER_WORD,
+    EventFrame, PackedWords, empty_frame, make_frame, make_frame_argsort,
+    concatenate_frames, pack_words, unpack_words, words_required,
+    CapacityPolicy, SPIKES_PER_WORD,
 )
 from repro.core.routing import (  # noqa: F401
     RoutingTables, build_fwd_table, build_rev_table, identity_tables,
     lookup_fwd, lookup_rev, route_outbound, route_inbound,
     full_route_enables, feedforward_route_enables, fan_in_route_enables,
-    aggregate,
+    aggregate, aggregate_baseline,
 )
 from repro.core.aggregator import (  # noqa: F401
-    RouterState, identity_router, route_step, star_exchange,
-    hierarchical_exchange, StarInterconnect,
+    RouterState, identity_router, route_step, route_step_baseline,
+    star_exchange, hierarchical_exchange, StarInterconnect,
+    fused_exchange_enabled,
 )
 from repro.core.sync import (  # noqa: F401
     SyncConfig, barrier, barrier_release_time, refractory_mask,

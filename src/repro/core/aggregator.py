@@ -10,21 +10,37 @@ backplane; ``jax.lax.all_gather`` along that axis *is* the star broadcast
 second, outer mesh axis with its own gather — traffic crossing backplanes
 pays the extra hops, exactly like the projected +0.4 µs.
 
-Everything here is pure JAX and works both as a semantic single-device
-reference (``route_step``) and inside ``shard_map`` (``star_exchange``).
+Fused exchange datapath: by default every exchange round runs through
+``repro.kernels.spike_router`` — fwd LUT gather, route-enable masking,
+multi-source merge, cumsum/scatter pack and rev LUT in one fused kernel
+(compiled Pallas on TPU, the XLA-compiled oracle elsewhere).  Set
+``use_fused=False`` or export ``REPRO_FUSED_EXCHANGE=0`` to run the unfused
+pure-JAX composition instead; ``route_step_baseline`` additionally preserves
+the seed's argsort/broadcast datapath for benchmark comparison.  All paths
+agree on (labels·valid, valid, dropped); exchange outputs carry zeroed
+timestamps (the multi-chip extension discards them, §III) and zero labels in
+invalid slots.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map as _shard_map
 from repro.core import routing
 from repro.core.events import EventFrame, make_frame
 from repro.core.routing import RoutingTables
+
+
+def fused_exchange_enabled() -> bool:
+    """Default for ``use_fused`` — env-gated, on unless REPRO_FUSED_EXCHANGE=0."""
+    return os.environ.get("REPRO_FUSED_EXCHANGE", "1").lower() not in (
+        "0", "false", "off")
 
 
 class RouterState(NamedTuple):
@@ -52,18 +68,30 @@ def identity_router(n_nodes: int, route_enables: jax.Array | None = None,
 # ---------------------------------------------------------------------------
 
 
-def route_step(state: RouterState, frames: EventFrame,
-               capacity: int) -> tuple[EventFrame, jax.Array]:
+def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
+               use_fused: bool | None = None) -> tuple[EventFrame, jax.Array]:
     """Full datapath for one exchange round.
 
     Args:
       state: backplane routing state.
       frames: per-node egress frames, arrays shaped [n_nodes, cap_in].
       capacity: ingress frame capacity per node.
+      use_fused: route through the fused exchange kernel (default: the
+        ``REPRO_FUSED_EXCHANGE`` env flag, on).
 
     Returns:
       (ingress frames [n_nodes, capacity], dropped counts [n_nodes]).
     """
+    if use_fused is None:
+        use_fused = fused_exchange_enabled()
+    if use_fused:
+        from repro.kernels.spike_router.ops import fused_exchange
+
+        out_l, out_v, dropped = fused_exchange(
+            frames.labels, frames.valid, state.fwd_tables, state.rev_tables,
+            state.route_enables, capacity=capacity)
+        return EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
+                          valid=out_v), dropped
     # 1. Node egress: forward LUT + enable masking, timestamps dropped (§III).
     wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables, frames.labels)
     egress = EventFrame(labels=wire, times=jnp.zeros_like(frames.times),
@@ -72,8 +100,28 @@ def route_step(state: RouterState, frames: EventFrame,
     mixed, dropped = routing.aggregate(egress, state.route_enables, capacity)
     # 3. Node ingress: reverse LUT + enable masking.
     chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
-    ingress = EventFrame(labels=chip, times=mixed.times,
-                         valid=mixed.valid & rev_en)
+    valid = mixed.valid & rev_en
+    ingress = EventFrame(labels=jnp.where(valid, chip, 0), times=mixed.times,
+                         valid=valid)
+    return ingress, dropped
+
+
+def route_step_baseline(state: RouterState, frames: EventFrame,
+                        capacity: int) -> tuple[EventFrame, jax.Array]:
+    """The seed's datapath: broadcast materialization + stable argsort.
+
+    Retired from the hot path; kept so benchmarks can report before/after
+    and tests can pin drop-count/order semantics against it.
+    """
+    wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables, frames.labels)
+    egress = EventFrame(labels=wire, times=jnp.zeros_like(frames.times),
+                        valid=frames.valid & fwd_en)
+    mixed, dropped = routing.aggregate_baseline(egress, state.route_enables,
+                                                capacity)
+    chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
+    valid = mixed.valid & rev_en
+    ingress = EventFrame(labels=jnp.where(valid, chip, 0), times=mixed.times,
+                         valid=valid)
     return ingress, dropped
 
 
@@ -87,35 +135,47 @@ def star_exchange(frame: EventFrame,
                   fwd_table: jax.Array,
                   rev_table: jax.Array,
                   route_enables: jax.Array,
-                  capacity: int) -> tuple[EventFrame, jax.Array]:
+                  capacity: int,
+                  use_fused: bool | None = None) -> tuple[EventFrame, jax.Array]:
     """One exchange round from the perspective of a single node shard.
 
     Must run inside ``shard_map``.  ``frame`` holds this node's egress events
     with shape [cap_in]; the return value is this node's ingress frame.
 
     The ``all_gather`` along ``axis_name`` is the star's up-link + broadcast;
-    destination-side filtering with ``route_enables[src, me]`` and the
-    reverse LUT happen locally — mirroring the hardware where route enables
-    live in the Aggregator and reverse LUTs in each receiving Node-FPGA.
+    destination-side filtering with ``route_enables[src, me]``, the merge,
+    the capacity pack and the reverse LUT happen locally — mirroring the
+    hardware where route enables live in the Aggregator and reverse LUTs in
+    each receiving Node-FPGA.  The fwd LUT runs on the *sender* before the
+    gather, so only wire labels travel; timestamps are discarded at egress
+    (§III) and never gathered at all.
     """
+    if use_fused is None:
+        use_fused = fused_exchange_enabled()
     me = jax.lax.axis_index(axis_name)
     # Node egress (fwd LUT is local to this node).
     wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
-    egress = EventFrame(labels=wire, times=jnp.zeros_like(frame.times),
-                        valid=frame.valid & fwd_en)
+    egress_valid = frame.valid & fwd_en
     # Star broadcast: every node receives every node's egress frame.
-    gathered = jax.tree.map(
-        lambda x: jax.lax.all_gather(x, axis_name, axis=0), egress)
-    n_src = gathered.labels.shape[0]
-    enables = route_enables[:, me]                           # [n_src]
-    valid = gathered.valid & enables[:, None]
-    flat = lambda x: x.reshape(n_src * x.shape[-1])
-    mixed, dropped = make_frame(flat(gathered.labels), flat(gathered.times),
-                                flat(valid), capacity)
+    g_labels = jax.lax.all_gather(wire, axis_name, axis=0)
+    g_valid = jax.lax.all_gather(egress_valid, axis_name, axis=0)
+    n_src = g_labels.shape[0]
+    valid = g_valid & route_enables[:, me][:, None]          # [n_src, cap_in]
+    flat_labels = g_labels.reshape(n_src * g_labels.shape[-1])
+    flat_valid = valid.reshape(n_src * g_labels.shape[-1])
+    if use_fused:
+        from repro.kernels.spike_router.ops import fused_merge_pack
+
+        out_l, out_v, dropped = fused_merge_pack(
+            flat_labels, flat_valid, rev_table, capacity=capacity)
+        return EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
+                          valid=out_v), dropped
+    mixed, dropped = make_frame(flat_labels, None, flat_valid, capacity)
     # Node ingress (reverse LUT local).
     chip, rev_en = routing.lookup_rev(rev_table, mixed.labels)
-    ingress = EventFrame(labels=chip, times=mixed.times,
-                         valid=mixed.valid & rev_en)
+    out_valid = mixed.valid & rev_en
+    ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
+                         times=mixed.times, valid=out_valid)
     return ingress, dropped
 
 
@@ -126,7 +186,9 @@ def hierarchical_exchange(frame: EventFrame,
                           rev_table: jax.Array,
                           intra_enables: jax.Array,
                           inter_enables: jax.Array,
-                          capacity: int) -> tuple[EventFrame, jax.Array]:
+                          capacity: int,
+                          use_fused: bool | None = None
+                          ) -> tuple[EventFrame, jax.Array]:
     """Two-layer star (§V): backplane aggregators joined by a second-layer node.
 
     ``intra_enables``: bool[n_node, n_node] routes within the backplane.
@@ -137,37 +199,45 @@ def hierarchical_exchange(frame: EventFrame,
     Intra-backplane traffic takes one gather (2 MGT hops); inter-backplane
     traffic takes both gathers (4 hops → the projected extra ≈0.4 µs).
     """
+    if use_fused is None:
+        use_fused = fused_exchange_enabled()
     me_node = jax.lax.axis_index(node_axis)
     me_pod = jax.lax.axis_index(pod_axis)
 
     wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
-    egress = EventFrame(labels=wire, times=jnp.zeros_like(frame.times),
-                        valid=frame.valid & fwd_en)
+    egress_valid = frame.valid & fwd_en
 
-    # Layer 1: backplane-local star.
-    g1 = jax.tree.map(lambda x: jax.lax.all_gather(x, node_axis, axis=0), egress)
-    n_node = g1.labels.shape[0]
-    local_valid = g1.valid & intra_enables[:, me_node][:, None]
+    # Layer 1: backplane-local star (wire labels only — no timestamps).
+    g1_labels = jax.lax.all_gather(wire, node_axis, axis=0)
+    g1_valid = jax.lax.all_gather(egress_valid, node_axis, axis=0)
+    n_node = g1_labels.shape[0]
+    local_valid = g1_valid & intra_enables[:, me_node][:, None]
 
     # Layer 2: second-layer node joins the backplane aggregators.  Each
     # backplane uplinks its full gathered egress; the receiving backplane
     # accepts it if the inter-backplane route is enabled.
-    g2 = jax.tree.map(lambda x: jax.lax.all_gather(x, pod_axis, axis=0), g1)
-    n_pod = g2.labels.shape[0]
+    g2_labels = jax.lax.all_gather(g1_labels, pod_axis, axis=0)
+    g2_valid = jax.lax.all_gather(g1_valid, pod_axis, axis=0)
+    n_pod = g2_labels.shape[0]
     pod_ids = jnp.arange(n_pod)
     pod_en = inter_enables[pod_ids, me_pod] & (pod_ids != me_pod)  # [n_pod]
-    remote_valid = g2.valid & pod_en[:, None, None]
+    remote_valid = g2_valid & pod_en[:, None, None]
 
-    flat2 = lambda x: x.reshape(n_pod * n_node * x.shape[-1])
-    flat1 = lambda x: x.reshape(n_node * x.shape[-1])
-    labels = jnp.concatenate([flat1(g1.labels), flat2(g2.labels)])
-    times = jnp.concatenate([flat1(g1.times), flat2(g2.times)])
-    valid = jnp.concatenate([flat1(local_valid), flat2(remote_valid)])
-    mixed, dropped = make_frame(labels, times, valid, capacity)
+    labels = jnp.concatenate([g1_labels.reshape(-1), g2_labels.reshape(-1)])
+    valid = jnp.concatenate([local_valid.reshape(-1),
+                             remote_valid.reshape(-1)])
+    if use_fused:
+        from repro.kernels.spike_router.ops import fused_merge_pack
 
+        out_l, out_v, dropped = fused_merge_pack(
+            labels, valid, rev_table, capacity=capacity)
+        return EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
+                          valid=out_v), dropped
+    mixed, dropped = make_frame(labels, None, valid, capacity)
     chip, rev_en = routing.lookup_rev(rev_table, mixed.labels)
-    ingress = EventFrame(labels=chip, times=mixed.times,
-                         valid=mixed.valid & rev_en)
+    out_valid = mixed.valid & rev_en
+    ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
+                         times=mixed.times, valid=out_valid)
     return ingress, dropped
 
 
@@ -178,25 +248,33 @@ def hierarchical_exchange(frame: EventFrame,
 
 @dataclasses.dataclass(frozen=True)
 class StarInterconnect:
-    """Builds shard_map'd exchange functions over a device mesh."""
+    """Builds shard_map'd exchange functions over a device mesh.
+
+    ``use_fused=None`` (default) resolves through ``fused_exchange_enabled``
+    at trace time, so the fused route-merge-pack kernel runs inside the
+    shard_map'd exchange unless explicitly disabled.
+    """
 
     mesh: jax.sharding.Mesh
     node_axis: str
     pod_axis: str | None = None
     capacity: int = 256
+    use_fused: bool | None = None
 
     def exchange_fn(self):
         from jax.sharding import PartitionSpec as P
 
         node, pod = self.node_axis, self.pod_axis
         cap = self.capacity
+        fused = self.use_fused
         # Per-node leaves keep a leading size-1 sharded dim inside shard_map;
         # squeeze it on entry and restore it on exit.
         if pod is None:
             def fn(frame, fwd, rev, enables):
                 frame = jax.tree.map(lambda x: x[0], frame)
                 out, dropped = star_exchange(
-                    frame, node, fwd[0], rev[0], enables, cap)
+                    frame, node, fwd[0], rev[0], enables, cap,
+                    use_fused=fused)
                 return (jax.tree.map(lambda x: x[None], out), dropped[None])
             in_specs = (EventFrame(P(node), P(node), P(node)),
                         P(node), P(node), P())
@@ -205,10 +283,11 @@ class StarInterconnect:
             def fn(frame, fwd, rev, intra, inter):
                 frame = jax.tree.map(lambda x: x[0], frame)
                 out, dropped = hierarchical_exchange(
-                    frame, node, pod, fwd[0], rev[0], intra, inter, cap)
+                    frame, node, pod, fwd[0], rev[0], intra, inter, cap,
+                    use_fused=fused)
                 return (jax.tree.map(lambda x: x[None], out), dropped[None])
             spec = P((pod, node))
             in_specs = (EventFrame(spec, spec, spec), spec, spec, P(), P())
             out_specs = (EventFrame(spec, spec, spec), spec)
-        return jax.jit(jax.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
-                                     out_specs=out_specs))
+        return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                  out_specs=out_specs))

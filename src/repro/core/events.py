@@ -8,6 +8,14 @@ JAX requires static shapes, so sparse event streams are carried as
 fixed-capacity ``EventFrame``s: a dense buffer of labels/timestamps plus a
 validity mask.  Capacity overflow drops events and counts them — the same
 semantics as the paper's lossy layer-1 path under continued congestion.
+
+Compaction scheme (fused exchange datapath): frames are packed with an
+exclusive prefix sum over the validity mask plus a masked scatter — the
+hardware's pack unit — rather than a stable sort.  Arrival order and drop
+counts are identical to the retired argsort scheme; the only observable
+difference is that invalid slots are now zero-filled instead of carrying
+sorted garbage.  The Pallas twin of this path lives in
+``repro.kernels.spike_router``.
 """
 
 from __future__ import annotations
@@ -61,9 +69,66 @@ def empty_frame(capacity: int, batch_shape: tuple[int, ...] = ()) -> EventFrame:
 def make_frame(labels, times, valid, capacity: int) -> tuple[EventFrame, jax.Array]:
     """Compact events to the front of a capacity-bounded frame.
 
-    Events beyond ``capacity`` are dropped (layer-1 congestion semantics).
+    This is the hardware pack unit: an inclusive prefix sum over the validity
+    mask ranks each valid event (arrival order preserved), and every output
+    slot j gathers the event with rank j+1 via a vectorized binary search on
+    the monotone prefix sums — the gather-form inverse of the cumsum/scatter
+    compaction (the Pallas kernels in ``repro.kernels.spike_router`` use the
+    literal scatter).  O(C log N) gathers instead of the O(N log N) stable
+    sort plus three payload permutations the seed used
+    (see ``make_frame_argsort``).  Events ranked beyond ``capacity`` are
+    dropped and counted (layer-1 congestion semantics).  Invalid output
+    slots are zero-filled — labels and times of padding are always 0.
+
+    ``times=None`` skips the timestamp gather and emits zeros (the exchange
+    paths discard timestamps at egress, §III).
 
     Returns (frame, dropped_count).
+    """
+    labels = jnp.asarray(labels, LABEL_DTYPE)
+    valid = jnp.asarray(valid, jnp.bool_)
+
+    lead = labels.shape[:-1]
+    n = labels.shape[-1]
+    labels2 = labels.reshape(-1, n)
+    valid2 = valid.reshape(-1, n)
+    b = labels2.shape[0]
+
+    if n == 0:
+        frame = empty_frame(capacity, lead)
+        return frame, jnp.zeros(lead, jnp.int32)
+
+    ok = valid2.astype(jnp.int32)
+    csum = jnp.cumsum(ok, axis=-1)                   # inclusive prefix sum
+    total = csum[:, -1]
+    kept = jnp.minimum(total, capacity)
+    # Slot j holds the event of rank j+1: first index where csum reaches j+1.
+    ranks = jnp.arange(1, capacity + 1, dtype=csum.dtype)
+    src = jax.vmap(lambda c: jnp.searchsorted(c, ranks, side="left"))(csum)
+    src = jnp.minimum(src, n - 1)                    # clamp empty-slot probes
+    out_v = jnp.arange(capacity, dtype=kept.dtype)[None] < kept[:, None]
+    out_l = jnp.where(out_v, jnp.take_along_axis(labels2, src, axis=-1), 0)
+    if times is None:
+        out_t = jnp.zeros((b, capacity), TIME_DTYPE)
+    else:
+        times2 = jnp.asarray(times, TIME_DTYPE).reshape(-1, n)
+        out_t = jnp.where(out_v, jnp.take_along_axis(times2, src, axis=-1), 0)
+
+    frame = EventFrame(
+        labels=out_l.reshape(*lead, capacity).astype(LABEL_DTYPE),
+        times=out_t.reshape(*lead, capacity).astype(TIME_DTYPE),
+        valid=out_v.reshape(*lead, capacity),
+    )
+    dropped = (total - kept).astype(jnp.int32).reshape(lead)
+    return frame, dropped
+
+
+def make_frame_argsort(labels, times, valid,
+                       capacity: int) -> tuple[EventFrame, jax.Array]:
+    """The seed's stable-argsort compaction, kept as the benchmark baseline.
+
+    Semantically equivalent to ``make_frame`` for (labels·valid, times·valid,
+    valid, dropped); invalid slots carry sorted garbage rather than zeros.
     """
     labels = jnp.asarray(labels, LABEL_DTYPE)
     times = jnp.asarray(times, TIME_DTYPE)
@@ -119,8 +184,9 @@ class PackedWords(NamedTuple):
 def pack_words(frame: EventFrame) -> PackedWords:
     """Pack an event frame into layer-2 words (3 spikes/word).
 
-    The word timestamp is the tag of its first valid slot (the hardware packs
-    temporally adjacent events; frames are already time-ordered here).
+    The word timestamp is the tag of its first *valid* slot (the hardware
+    packs temporally adjacent events; frames are already time-ordered here);
+    a word with no valid slot carries tag 0.
     """
     cap = frame.capacity
     n_words = -(-cap // SPIKES_PER_WORD)
@@ -134,7 +200,11 @@ def pack_words(frame: EventFrame) -> PackedWords:
     labels = labels.reshape(new_shape)
     times = times.reshape(new_shape)
     valid = valid.reshape(new_shape)
-    word_time = jnp.bitwise_and(times[..., 0], TIMESTAMP_MASK)
+    first_valid = jnp.argmax(valid, axis=-1)
+    first_time = jnp.take_along_axis(times, first_valid[..., None],
+                                     axis=-1)[..., 0]
+    word_time = jnp.where(jnp.any(valid, axis=-1),
+                          jnp.bitwise_and(first_time, TIMESTAMP_MASK), 0)
     return PackedWords(labels=labels, times=word_time, valid=valid)
 
 

@@ -147,6 +147,13 @@ def aggregate(frames: EventFrame, route_enables: jax.Array,
               capacity: int) -> tuple[EventFrame, jax.Array]:
     """The Aggregator broadcast: all-to-all with static per-route enables.
 
+    Only the *validity* mask is computed per destination; labels and times
+    stay shared across destinations (the broadcast is a lazy view the
+    compaction scatter reads through), so no [n_src, n_dst, cap_in] label or
+    time copies are ever materialized — the hardware broadcasts a wire, not
+    a buffer.  ``aggregate_baseline`` keeps the seed's materializing
+    implementation for benchmark comparison.
+
     Args:
       frames: stacked per-source frames — arrays shaped [n_src, capacity_in].
       route_enables: bool[n_src, n_dst] static enables.
@@ -158,6 +165,29 @@ def aggregate(frames: EventFrame, route_enables: jax.Array,
     """
     n_src, cap_in = frames.labels.shape
     n_dst = route_enables.shape[1]
+    n = n_src * cap_in
+    # Source-major event stream, identical for every destination.
+    flat_labels = frames.labels.reshape(n)
+    flat_times = frames.times.reshape(n)
+    # Per-destination validity only: bool[n_dst, n_src*cap_in].
+    valid = frames.valid[:, None, :] & route_enables[:, :, None]
+    valid = jnp.swapaxes(valid, 0, 1).reshape(n_dst, n)
+    return make_frame(jnp.broadcast_to(flat_labels[None], (n_dst, n)),
+                      jnp.broadcast_to(flat_times[None], (n_dst, n)),
+                      valid, capacity)
+
+
+def aggregate_baseline(frames: EventFrame, route_enables: jax.Array,
+                       capacity: int) -> tuple[EventFrame, jax.Array]:
+    """The seed's Aggregator: materialize the full broadcast, then argsort.
+
+    Retired from the hot path; kept so ``benchmarks/interconnect_throughput``
+    can report the before/after and equivalence tests can pin semantics.
+    """
+    from repro.core.events import make_frame_argsort
+
+    n_src, cap_in = frames.labels.shape
+    n_dst = route_enables.shape[1]
     # Broadcast every source frame to every destination, gated by the enables.
     labels = jnp.broadcast_to(frames.labels[:, None, :], (n_src, n_dst, cap_in))
     times = jnp.broadcast_to(frames.times[:, None, :], (n_src, n_dst, cap_in))
@@ -166,4 +196,4 @@ def aggregate(frames: EventFrame, route_enables: jax.Array,
     labels = jnp.transpose(labels, (1, 0, 2)).reshape(n_dst, n_src * cap_in)
     times = jnp.transpose(times, (1, 0, 2)).reshape(n_dst, n_src * cap_in)
     valid = jnp.transpose(valid, (1, 0, 2)).reshape(n_dst, n_src * cap_in)
-    return make_frame(labels, times, valid, capacity)
+    return make_frame_argsort(labels, times, valid, capacity)

@@ -5,18 +5,30 @@ Each kernel directory contains:
     VMEM tiling, written for TPU (MXU-aligned tiles, sequential-grid
     accumulator patterns);
   * ``ops.py``    — the jit'd public wrapper (padding, head grouping,
-    interpret-mode selection);
+    backend selection);
   * ``ref.py``    — the pure-jnp oracle used by the allclose sweep tests.
 
-This container is CPU-only: kernels are validated with ``interpret=True``,
-which executes the kernel body per grid cell on CPU.  The model stack
-selects between the XLA path (used by the CPU dry-run so
-``cost_analysis()`` reflects the real HLO) and the Pallas path via config.
+Backend selection (fused exchange datapath): ``default_mode()`` picks the
+execution path automatically — the compiled Pallas kernel on TPU, the
+pure-jnp oracle (which XLA compiles well) everywhere else.  Interpret mode —
+executing the kernel body per grid cell on CPU — is reserved for parity
+tests and is never the automatic choice: it validates kernel semantics but
+carries per-cell dispatch overhead that would misrepresent the hot path.
 """
 
 import jax
+
+# Execution paths for the exchange kernels (``mode=`` in the ops wrappers).
+MODE_PALLAS = "pallas"        # compiled pl.pallas_call (TPU)
+MODE_INTERPRET = "interpret"  # pl.pallas_call(interpret=True) — tests only
+MODE_JAX = "jax"              # pure-jnp oracle, XLA-compiled
 
 
 def default_interpret() -> bool:
     """Interpret kernels unless running on a real TPU."""
     return jax.default_backend() != "tpu"
+
+
+def default_mode() -> str:
+    """Automatic interpret-vs-compiled selection for the exchange kernels."""
+    return MODE_PALLAS if jax.default_backend() == "tpu" else MODE_JAX

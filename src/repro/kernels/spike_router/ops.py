@@ -1,4 +1,16 @@
-"""Public jit'd wrapper for the spike-router kernel."""
+"""Public jit'd wrappers for the fused exchange datapath.
+
+``route_and_pack``    egress only: fwd LUT + enable mask + capacity pack.
+``fused_exchange``    the full round (fwd LUT → route enables → merge →
+                      pack → rev LUT), batched over destinations — what
+                      ``repro.core.aggregator.route_step`` runs.
+``fused_merge_pack``  merge + pack + rev LUT for streams whose fwd LUT ran
+                      on the sender (the ``shard_map`` exchange path).
+
+Mode selection is automatic (``mode=None``): the compiled Pallas kernel on
+TPU, the pure-jnp oracle elsewhere; ``mode="interpret"`` forces the Pallas
+interpreter for parity testing.
+"""
 
 from __future__ import annotations
 
@@ -7,8 +19,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import default_interpret
-from repro.kernels.spike_router.spike_router import spike_router_fwd
+from repro.kernels import (MODE_INTERPRET, MODE_JAX, MODE_PALLAS,
+                           default_interpret, default_mode)
+from repro.kernels.spike_router import ref as _ref
+from repro.kernels.spike_router.spike_router import (exchange_fwd,
+                                                     merge_pack_fwd,
+                                                     spike_router_fwd)
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
@@ -34,3 +50,65 @@ def route_and_pack(labels: jax.Array, valid: jax.Array, lut: jax.Array, *,
     return (out_l.reshape(*lead, capacity),
             out_v.reshape(*lead, capacity).astype(jnp.bool_),
             dropped.reshape(*lead))
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "mode"))
+def fused_exchange(labels: jax.Array, valid: jax.Array, fwd_luts: jax.Array,
+                   rev_luts: jax.Array, enables: jax.Array, *,
+                   capacity: int, mode: str | None = None):
+    """One full exchange round for all destinations.
+
+    labels, valid: [n_src, cap_in] per-source egress frames (shared — never
+    copied per destination); fwd_luts: int32[n_src, 2^16];
+    rev_luts: int32[n_dst, 2^15]; enables: bool/int[n_src, n_dst].
+
+    Returns (out_labels i32[n_dst, capacity], out_valid bool[n_dst, capacity],
+             dropped i32[n_dst]).
+    """
+    if mode is None:
+        mode = default_mode()
+    labels = labels.astype(jnp.int32)
+    if mode == MODE_JAX:
+        out_l, out_v, dropped = _ref.exchange_ref(
+            labels, valid, fwd_luts, rev_luts, enables, capacity=capacity)
+    elif mode in (MODE_PALLAS, MODE_INTERPRET):
+        out_l, out_v, dropped = exchange_fwd(
+            labels, valid.astype(jnp.int32), fwd_luts.astype(jnp.int32),
+            rev_luts.astype(jnp.int32), enables.astype(jnp.int32),
+            capacity=capacity, interpret=mode == MODE_INTERPRET)
+        dropped = dropped[:, 0]
+    else:
+        raise ValueError(f"unknown exchange mode: {mode!r}")
+    return out_l, out_v.astype(jnp.bool_), dropped
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "mode"))
+def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
+                     *, capacity: int, mode: str | None = None):
+    """Merge + pack + rev LUT for pre-routed wire-label streams.
+
+    labels, valid: [..., n_events] (fwd LUT + route enables already applied);
+    rev_lut: int32[2^15] shared across the batch.
+
+    Returns (out_labels i32[..., capacity], out_valid bool[..., capacity],
+             dropped i32[...]).
+    """
+    if mode is None:
+        mode = default_mode()
+    labels = labels.astype(jnp.int32)
+    if mode == MODE_JAX:
+        out_l, out_v, dropped = _ref.merge_pack_ref(
+            labels, valid, rev_lut, capacity=capacity)
+    elif mode in (MODE_PALLAS, MODE_INTERPRET):
+        lead = labels.shape[:-1]
+        n = labels.shape[-1]
+        out_l, out_v, dropped = merge_pack_fwd(
+            labels.reshape(-1, n), valid.reshape(-1, n).astype(jnp.int32),
+            rev_lut.astype(jnp.int32), capacity=capacity,
+            interpret=mode == MODE_INTERPRET)
+        out_l = out_l.reshape(*lead, capacity)
+        out_v = out_v.reshape(*lead, capacity)
+        dropped = dropped.reshape(lead)
+    else:
+        raise ValueError(f"unknown exchange mode: {mode!r}")
+    return out_l, out_v.astype(jnp.bool_), dropped

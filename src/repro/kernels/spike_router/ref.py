@@ -1,19 +1,23 @@
-"""Pure-jnp oracle for the fused route-and-pack datapath.
+"""Pure-jnp oracles for the fused exchange datapath.
 
-Built directly on ``repro.core`` (the semantic implementation) so the kernel
-is validated against the same code the SNN substrate runs.
+Built directly on ``repro.core`` (the semantic implementation) so the kernels
+are validated against the same code the SNN substrate runs.  Because
+``repro.core.events.make_frame`` is itself the cumsum/scatter pack unit,
+these oracles are also the *fast compiled path* on non-TPU backends — the
+ops layer dispatches here when Pallas would only be interpreted.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.events import EventFrame, make_frame
-from repro.core.routing import lookup_fwd
+from repro.core.events import make_frame
+from repro.core.routing import lookup_fwd, lookup_rev
 
 
 def spike_router_ref(labels, valid, lut, *, capacity: int):
-    """Returns (out_labels, out_valid, dropped) matching the kernel."""
+    """Egress-only oracle: (out_labels, out_valid, dropped) per frame."""
     labels = jnp.asarray(labels, jnp.int32)
     valid = jnp.asarray(valid).astype(jnp.bool_)
     wire, enabled = lookup_fwd(lut, labels)
@@ -23,3 +27,51 @@ def spike_router_ref(labels, valid, lut, *, capacity: int):
     return (out_labels.astype(jnp.int32),
             frame.valid.astype(jnp.int32),
             dropped.astype(jnp.int32)[..., None])
+
+
+def exchange_ref(labels, valid, fwd_luts, rev_luts, enables, *,
+                 capacity: int):
+    """Full-round oracle matching ``exchange_fwd``.
+
+    labels, valid: [n_src, cap_in]; fwd_luts: [n_src, 2^16];
+    rev_luts: [n_dst, 2^15]; enables: [n_src, n_dst].
+    Returns (out_labels i32[n_dst, capacity], out_valid i32[n_dst, capacity],
+             dropped i32[n_dst]).
+    """
+    labels = jnp.asarray(labels, jnp.int32)
+    valid = jnp.asarray(valid).astype(jnp.bool_)
+    enables = jnp.asarray(enables).astype(jnp.bool_)
+    n_src, cap_in = labels.shape
+    n_dst = enables.shape[1]
+    n = n_src * cap_in
+
+    wire, fwd_en = jax.vmap(lookup_fwd)(fwd_luts, labels)
+    # Shared src-major stream; per-destination validity mask only.
+    flat_wire = wire.reshape(n)
+    ok = (valid & fwd_en)[:, None, :] & enables[:, :, None]
+    ok = jnp.swapaxes(ok, 0, 1).reshape(n_dst, n)
+    frame, dropped = make_frame(jnp.broadcast_to(flat_wire[None], (n_dst, n)),
+                                None, ok, capacity)
+    chip, rev_en = jax.vmap(lookup_rev)(rev_luts, frame.labels)
+    out_valid = frame.valid & rev_en
+    out_labels = jnp.where(out_valid, chip, 0)
+    return (out_labels.astype(jnp.int32), out_valid.astype(jnp.int32),
+            dropped.astype(jnp.int32))
+
+
+def merge_pack_ref(labels, valid, rev_lut, *, capacity: int):
+    """Merge-pack-rev oracle matching ``merge_pack_fwd``.
+
+    labels, valid: [..., n_events] pre-routed wire labels;
+    rev_lut: [2^15] shared.
+    Returns (out_labels i32[..., capacity], out_valid i32[..., capacity],
+             dropped i32[...]).
+    """
+    labels = jnp.asarray(labels, jnp.int32)
+    valid = jnp.asarray(valid).astype(jnp.bool_)
+    frame, dropped = make_frame(labels, None, valid, capacity)
+    chip, rev_en = lookup_rev(rev_lut, frame.labels)
+    out_valid = frame.valid & rev_en
+    out_labels = jnp.where(out_valid, chip, 0)
+    return (out_labels.astype(jnp.int32), out_valid.astype(jnp.int32),
+            dropped.astype(jnp.int32))

@@ -1,23 +1,41 @@
-"""The paper's Node-FPGA routing datapath as one fused Pallas kernel.
+"""Fused exchange datapath — the paper's §III routing as Pallas kernels.
 
-Per frame: 16-bit labels → full 16→16 BRAM-style LUT (one output bit is the
-routing enable, 15 bits the wire label) → enable masking → capacity-bounded
-compaction (congestion drop + count).  This is §III's multi-chip extension:
-"uses a Block-RAM based lookup for 15 bit labels and routing enable".
+Per exchange round the hardware does: fwd LUT (BRAM 16→16 lookup, one output
+bit is the routing enable) → enable masking → Aggregator star broadcast with
+static per-route enables → capacity-bounded pack (prefix-sum pack unit,
+congestion drop + count) → rev LUT (15→17) at the receiving Node-FPGA.
+
+Three kernels cover the datapath at increasing fusion depth:
+
+``_router_kernel``      fwd LUT + mask + pack for one node's egress
+                        (the seed kernel, kept for ``route_and_pack``).
+``_exchange_kernel``    the whole round, batched over destinations: the grid
+                        iterates destinations; each cell reads the *shared*
+                        per-source label/valid buffers (never copied per
+                        destination), applies per-source fwd LUTs, gates with
+                        its enable column, merges all sources src-major,
+                        packs with the cumsum/scatter pack unit, and finishes
+                        with its own rev LUT.  Used by ``route_step``.
+``_merge_pack_kernel``  merge + pack + rev LUT for one already-fwd-routed
+                        event stream.  Used by the ``shard_map`` exchanges
+                        (``star_exchange`` / ``hierarchical_exchange``) where
+                        the fwd LUT runs on the sender before ``all_gather``.
 
 TPU adaptation: the 64 Ki-entry LUT (256 KiB as int32) fits entirely in
-VMEM — the BRAM of the TPU — so it is mapped as one unblocked input.  Event
-frames are small (≤ a few thousand events); each grid cell routes one frame:
+VMEM — the BRAM of the TPU — so tables are mapped as unblocked inputs.
+Event frames are small (≤ a few thousand events); each grid cell routes one
+frame:
 
-  grid = (batch,) ; per cell:
-    entry  = LUT[label]              (VMEM gather)
-    ok     = valid & enable-bit
+    entry  = LUT[label]                 (VMEM gather)
+    ok     = valid & enable-bit & route-enable
     pos    = exclusive-prefix-sum(ok)   (compaction index)
     out[pos] = wire-label where ok and pos < capacity
 
-The prefix-sum + masked scatter realizes the hardware's pack unit.  The
-scatter targets a VMEM-resident output row; interpret mode executes it
-directly, on TPU it lowers to a one-hot matmul-style scatter (small C).
+The prefix-sum + masked scatter realizes the hardware's pack unit: arrival
+order is preserved, overflow events are dropped and counted, and invalid
+output slots are zero-filled.  Interpret mode executes the body directly on
+CPU (parity tests); on TPU the scatter lowers to a one-hot matmul-style
+scatter (small C).
 """
 
 from __future__ import annotations
@@ -28,8 +46,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-WIRE_MASK = 0x7FFF
-ENABLE_BIT = 15
+# Bit layout of the LUT entries is owned by repro.core.routing (the table
+# builders); the kernels decode with the same constants.
+from repro.core.routing import (CHIP_LABEL_MASK as CHIP_MASK,
+                                FWD_ENABLE_BIT as ENABLE_BIT,
+                                FWD_TABLE_SIZE, REV_ENABLE_BIT,
+                                REV_TABLE_SIZE, WIRE_LABEL_MASK as WIRE_MASK)
+
+
+def _pack(ok: jax.Array, payload: jax.Array, capacity: int):
+    """The pack unit: cumsum-compact ``payload`` where ``ok``, bounded by
+    ``capacity``.  Returns (packed_payload [capacity], packed_valid [capacity],
+    dropped scalar)."""
+    pos = jnp.cumsum(ok) - ok                    # exclusive prefix sum
+    keep = (ok == 1) & (pos < capacity)
+    # Park rejected events in an overflow slot, then slice it away.
+    idx = jnp.where(keep, pos, capacity)
+    out_p = jnp.zeros((capacity + 1,), jnp.int32).at[idx].set(
+        jnp.where(keep, payload, 0))
+    out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(
+        jnp.where(keep, 1, 0))
+    dropped = jnp.sum(ok) - jnp.sum(jnp.where(keep, 1, 0))
+    return out_p[:capacity], out_v[:capacity], dropped
 
 
 def _router_kernel(labels_ref, valid_ref, lut_ref, out_labels_ref,
@@ -38,28 +76,73 @@ def _router_kernel(labels_ref, valid_ref, lut_ref, out_labels_ref,
     valid = valid_ref[0]                         # [N] int32 (0/1)
     lut = lut_ref[...]                           # [65536] int32, fully in VMEM
 
-    entry = jnp.take(lut, labels & 0xFFFF, axis=0)
+    entry = jnp.take(lut, labels & CHIP_MASK, axis=0)
     wire = entry & WIRE_MASK
     enabled = (entry >> ENABLE_BIT) & 1
     ok = (valid * enabled).astype(jnp.int32)     # [N]
 
-    pos = jnp.cumsum(ok) - ok                    # exclusive prefix sum
-    keep = (ok == 1) & (pos < capacity)
-    # Park rejected events in an overflow slot, then slice it away.
-    idx = jnp.where(keep, pos, capacity)
+    out_l, out_v, dropped = _pack(ok, wire, capacity)
+    out_labels_ref[0] = out_l
+    out_valid_ref[0] = out_v
+    dropped_ref[0, 0] = dropped
 
-    out_l = jnp.zeros((capacity + 1,), jnp.int32).at[idx].set(
-        jnp.where(keep, wire, 0))
-    out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(
-        jnp.where(keep, 1, 0))
-    out_labels_ref[0] = out_l[:capacity]
-    out_valid_ref[0] = out_v[:capacity]
-    dropped_ref[0, 0] = jnp.sum(ok) - jnp.sum(jnp.where(keep, 1, 0))
+
+def _exchange_kernel(labels_ref, valid_ref, fwd_ref, rev_ref, enables_ref,
+                     out_labels_ref, out_valid_ref, dropped_ref, *,
+                     capacity: int):
+    """One destination per grid cell: full fwd→enable→merge→pack→rev round."""
+    labels = labels_ref[...]                     # [n_src, cap_in] shared
+    valid = valid_ref[...]                       # [n_src, cap_in] int32
+    fwd = fwd_ref[...]                           # [n_src, 2^16] per-source
+    rev = rev_ref[0]                             # [2^15] this destination's
+    en_col = enables_ref[...][:, 0]              # [n_src] int32
+
+    # fwd LUT: per-source table gather from the flattened stacked tables.
+    src = jax.lax.broadcasted_iota(jnp.int32, labels.shape, 0)
+    flat_idx = (src * FWD_TABLE_SIZE + (labels & CHIP_MASK)).reshape(-1)
+    entry = jnp.take(fwd.reshape(-1), flat_idx, axis=0).reshape(labels.shape)
+    wire = entry & WIRE_MASK
+    fwd_en = (entry >> ENABLE_BIT) & 1
+
+    # Aggregator: static route enable for (src, this destination).
+    ok = (valid * fwd_en * en_col[:, None]).astype(jnp.int32)
+
+    # Multi-source merge is src-major flattening (arrival order), then pack.
+    packed_w, packed_v, dropped = _pack(ok.reshape(-1), wire.reshape(-1),
+                                        capacity)
+
+    # rev LUT at the receiving node; rev-disabled events keep their slot but
+    # are invalidated silently (not counted as congestion drops) — §III.
+    rentry = jnp.take(rev, packed_w & WIRE_MASK, axis=0)
+    chip = rentry & CHIP_MASK
+    rev_en = (rentry >> REV_ENABLE_BIT) & 1
+    out_v = packed_v * rev_en
+    out_labels_ref[0] = jnp.where(out_v == 1, chip, 0)
+    out_valid_ref[0] = out_v
+    dropped_ref[0, 0] = dropped
+
+
+def _merge_pack_kernel(labels_ref, valid_ref, rev_ref, out_labels_ref,
+                       out_valid_ref, dropped_ref, *, capacity: int):
+    """Merge + pack + rev LUT for one pre-routed wire-label stream."""
+    labels = labels_ref[0]                       # [N] int32 wire labels
+    ok = valid_ref[0].astype(jnp.int32)          # [N] 0/1
+    rev = rev_ref[...]                           # [2^15]
+
+    packed_w, packed_v, dropped = _pack(ok, labels, capacity)
+
+    rentry = jnp.take(rev, packed_w & WIRE_MASK, axis=0)
+    chip = rentry & CHIP_MASK
+    rev_en = (rentry >> REV_ENABLE_BIT) & 1
+    out_v = packed_v * rev_en
+    out_labels_ref[0] = jnp.where(out_v == 1, chip, 0)
+    out_valid_ref[0] = out_v
+    dropped_ref[0, 0] = dropped
 
 
 def spike_router_fwd(labels: jax.Array, valid: jax.Array, lut: jax.Array, *,
                      capacity: int, interpret: bool = True):
-    """Core pallas_call.
+    """Egress-only pallas_call (fwd LUT + mask + pack).
 
     labels, valid: int32[batch, n_events]; lut: int32[65536].
     Returns (out_labels i32[batch, capacity], out_valid i32[batch, capacity],
@@ -86,3 +169,73 @@ def spike_router_fwd(labels: jax.Array, valid: jax.Array, lut: jax.Array, *,
         ),
         interpret=interpret,
     )(labels, valid, lut)
+
+
+def exchange_fwd(labels: jax.Array, valid: jax.Array, fwd_luts: jax.Array,
+                 rev_luts: jax.Array, enables: jax.Array, *,
+                 capacity: int, interpret: bool = True):
+    """Full-round pallas_call, one grid cell per destination.
+
+    labels, valid: int32[n_src, cap_in] (shared across destinations);
+    fwd_luts: int32[n_src, 2^16]; rev_luts: int32[n_dst, 2^15];
+    enables: int32[n_src, n_dst].
+    Returns (out_labels i32[n_dst, capacity], out_valid i32[n_dst, capacity],
+             dropped i32[n_dst, 1]).
+    """
+    n_src, cap_in = labels.shape
+    n_dst = rev_luts.shape[0]
+    grid = (n_dst,)
+
+    shared = lambda shape: pl.BlockSpec(shape, lambda d: (0,) * len(shape))
+    rev_spec = pl.BlockSpec((1, rev_luts.shape[1]), lambda d: (d, 0))
+    en_spec = pl.BlockSpec((n_src, 1), lambda d: (0, d))
+    out_spec = pl.BlockSpec((1, capacity), lambda d: (d, 0))
+    drop_spec = pl.BlockSpec((1, 1), lambda d: (d, 0))
+
+    kernel = functools.partial(_exchange_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[shared((n_src, cap_in)), shared((n_src, cap_in)),
+                  shared(fwd_luts.shape), rev_spec, en_spec],
+        out_specs=(out_spec, out_spec, drop_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_dst, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((n_dst, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((n_dst, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(labels, valid, fwd_luts, rev_luts, enables)
+
+
+def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
+                   capacity: int, interpret: bool = True):
+    """Merge-pack-rev pallas_call over a batch of pre-routed streams.
+
+    labels, valid: int32[batch, n_events] wire labels (fwd LUT already
+    applied, route enables already folded into ``valid``);
+    rev_lut: int32[2^15] shared across the batch.
+    Returns (out_labels i32[batch, capacity], out_valid i32[batch, capacity],
+             dropped i32[batch, 1]).
+    """
+    batch, n_events = labels.shape
+    grid = (batch,)
+
+    ev_spec = pl.BlockSpec((1, n_events), lambda b: (b, 0))
+    rev_spec = pl.BlockSpec(rev_lut.shape, lambda b: (0,))
+    out_spec = pl.BlockSpec((1, capacity), lambda b: (b, 0))
+    drop_spec = pl.BlockSpec((1, 1), lambda b: (b, 0))
+
+    kernel = functools.partial(_merge_pack_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[ev_spec, ev_spec, rev_spec],
+        out_specs=(out_spec, out_spec, drop_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(labels, valid, rev_lut)

@@ -1,0 +1,177 @@
+"""Fused exchange datapath: equivalence against the seed's argsort scheme.
+
+The compaction rewrite (cumsum pack unit instead of stable argsort) and the
+fused route-merge-pack kernel must agree with the retired baseline on the
+canonical observables — (labels·valid, times·valid, valid, dropped) — for
+every capacity regime: empty, underfull, exactly-at-capacity, overflow.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (EventFrame, aggregate, aggregate_baseline,
+                        identity_router, make_frame, make_frame_argsort,
+                        pack_words, route_step, route_step_baseline)
+from repro.core.events import TIMESTAMP_MASK
+
+KEY = jax.random.key(7)
+
+
+def _random_events(key, shape, valid_frac):
+    labels = jax.random.randint(key, shape, 0, 2**15)
+    times = jax.random.randint(jax.random.fold_in(key, 1), shape, 0, 10_000)
+    valid = jax.random.uniform(jax.random.fold_in(key, 2), shape) < valid_frac
+    return labels, times, valid
+
+
+def _assert_frames_equal(f1, d1, f2, d2):
+    assert jnp.array_equal(f1.valid, f2.valid)
+    assert jnp.array_equal(jnp.where(f1.valid, f1.labels, 0),
+                           jnp.where(f2.valid, f2.labels, 0))
+    assert jnp.array_equal(jnp.where(f1.valid, f1.times, 0),
+                           jnp.where(f2.valid, f2.times, 0))
+    assert jnp.array_equal(d1, d2)
+
+
+# ---------------------------------------------------------------------------
+# make_frame: cumsum pack unit vs stable argsort
+# ---------------------------------------------------------------------------
+
+MAKE_FRAME_CASES = [
+    # (batch, n_events, capacity, valid_frac)
+    ((), 64, 32, 0.5),        # unbatched overflow
+    ((3,), 64, 256, 0.5),     # underfull with padding
+    ((2, 3), 32, 8, 0.9),     # nested batch, heavy overflow
+    ((4,), 16, 16, 1.0),      # exactly at capacity
+    ((2,), 128, 64, 0.0),     # zero valid events
+    ((1,), 1, 4, 1.0),        # single event
+]
+
+
+@pytest.mark.parametrize("case", MAKE_FRAME_CASES)
+def test_make_frame_matches_argsort_baseline(case):
+    batch, n, cap, vfrac = case
+    key = jax.random.fold_in(KEY, hash(case) % 2**30)
+    labels, times, valid = _random_events(key, (*batch, n), vfrac)
+    f1, d1 = make_frame(labels, times, valid, cap)
+    f2, d2 = make_frame_argsort(labels, times, valid, cap)
+    _assert_frames_equal(f1, d1, f2, d2)
+
+
+def test_make_frame_preserves_arrival_order():
+    labels = jnp.arange(100, dtype=jnp.int32)
+    valid = jnp.arange(100) % 3 == 0
+    frame, dropped = make_frame(labels, None, valid, 16)
+    kept = labels[valid][:16]
+    assert jnp.array_equal(frame.labels[:16], kept)
+    assert int(dropped) == int(valid.sum()) - 16
+
+
+def test_make_frame_zero_fills_invalid_slots():
+    labels = jnp.full((8,), 77, jnp.int32)
+    times = jnp.full((8,), 99, jnp.int32)
+    valid = jnp.array([True, False] * 4)
+    frame, _ = make_frame(labels, times, valid, 8)
+    assert jnp.array_equal(frame.labels[4:], jnp.zeros(4, jnp.int32))
+    assert jnp.array_equal(frame.times[4:], jnp.zeros(4, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# aggregate: mask-only broadcast vs materializing baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("caps", [(4, 32, 64), (3, 64, 16), (8, 16, 128)])
+def test_aggregate_matches_baseline(caps):
+    n_nodes, cap_in, cap_out = caps
+    key = jax.random.fold_in(KEY, n_nodes * cap_in)
+    labels, times, valid = _random_events(key, (n_nodes, cap_in), 0.6)
+    frames = EventFrame(labels=labels, times=times, valid=valid)
+    enables = jax.random.uniform(jax.random.fold_in(key, 3),
+                                 (n_nodes, n_nodes)) < 0.7
+    f1, d1 = aggregate(frames, enables, cap_out)
+    f2, d2 = aggregate_baseline(frames, enables, cap_out)
+    _assert_frames_equal(f1, d1, f2, d2)
+
+
+# ---------------------------------------------------------------------------
+# route_step: fused kernel vs unfused vs argsort baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("capacity", [8, 64, 512])
+def test_route_step_fused_matches_unfused_and_baseline(capacity):
+    n_nodes, n_events = 4, 48
+    state = identity_router(n_nodes)
+    key = jax.random.fold_in(KEY, capacity)
+    labels, _, valid = _random_events(key, (n_nodes, n_events), 0.6)
+    frames, _ = make_frame(labels, None, valid, n_events)
+
+    out_f, d_f = route_step(state, frames, capacity, use_fused=True)
+    out_u, d_u = route_step(state, frames, capacity, use_fused=False)
+    out_b, d_b = route_step_baseline(state, frames, capacity)
+
+    assert jnp.array_equal(out_f.labels, out_u.labels)
+    assert jnp.array_equal(out_f.valid, out_u.valid)
+    assert jnp.array_equal(d_f, d_u)
+    _assert_frames_equal(out_f, d_f, out_b, d_b)
+
+
+def test_route_step_fused_conserves_events():
+    n_nodes = 5
+    state = identity_router(n_nodes)
+    labels, _, valid = _random_events(jax.random.fold_in(KEY, 9),
+                                      (n_nodes, 40), 0.7)
+    frames, _ = make_frame(labels, None, valid, 40)
+    out, dropped = route_step(state, frames, 32, use_fused=True)
+    sent = int(frames.valid.sum())            # each event goes to n-1 peers
+    assert int(out.valid.sum()) + int(dropped.sum()) == sent * (n_nodes - 1)
+
+
+def test_star_exchange_fused_matches_unfused_single_device():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import StarInterconnect
+
+    state = identity_router(1)
+    mesh = jax.make_mesh((1,), ("chip",))
+    labels, _, valid = _random_events(jax.random.fold_in(KEY, 11), (1, 32),
+                                      0.8)
+    frames, _ = make_frame(labels, None, valid, 32)
+    enables = jnp.ones((1, 1), bool)          # allow the self-loop
+    outs = {}
+    for fused in (True, False):
+        net = StarInterconnect(mesh=mesh, node_axis="chip", capacity=16,
+                               use_fused=fused)
+        out, dropped = net.exchange_fn()(frames, state.fwd_tables,
+                                         state.rev_tables, enables)
+        outs[fused] = (out, dropped)
+    o1, d1 = outs[True]
+    o2, d2 = outs[False]
+    assert jnp.array_equal(o1.labels, o2.labels)
+    assert jnp.array_equal(o1.valid, o2.valid)
+    assert jnp.array_equal(d1, d2)
+    assert int(o1.valid.sum()) + int(d1.sum()) == int(frames.valid.sum())
+
+
+# ---------------------------------------------------------------------------
+# pack_words: word tag comes from the first *valid* slot
+# ---------------------------------------------------------------------------
+
+def test_pack_words_uses_first_valid_slot_time():
+    # Word 0: slot 0 invalid (time 11), slot 1 valid (time 22) → tag 22.
+    # Word 1: all slots invalid → tag 0.
+    labels = jnp.arange(6, dtype=jnp.int32)
+    times = jnp.array([11, 22, 33, 44, 55, 66], jnp.int32)
+    valid = jnp.array([False, True, True, False, False, False])
+    frame = EventFrame(labels=labels, times=times, valid=valid)
+    words = pack_words(frame)
+    assert int(words.times[0]) == 22
+    assert int(words.times[1]) == 0
+
+
+def test_pack_words_masks_to_eight_bits():
+    labels = jnp.zeros((3,), jnp.int32)
+    times = jnp.array([0x1FF, 0, 0], jnp.int32)   # 9-bit time, tag = lower 8
+    valid = jnp.array([True, False, False])
+    words = pack_words(EventFrame(labels=labels, times=times, valid=valid))
+    assert int(words.times[0]) == 0xFF

@@ -5,15 +5,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.routing import build_fwd_table
+from repro.core.routing import build_fwd_table, build_rev_table
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.lif_step.ops import lif_step
 from repro.kernels.lif_step.ref import lif_step_ref
 from repro.kernels.linear_scan.ops import linear_scan
 from repro.kernels.linear_scan.ref import linear_scan_ref
-from repro.kernels.spike_router.ops import route_and_pack
-from repro.kernels.spike_router.ref import spike_router_ref
+from repro.kernels.spike_router.ops import (fused_exchange, fused_merge_pack,
+                                            route_and_pack)
+from repro.kernels.spike_router.ref import (exchange_ref, merge_pack_ref,
+                                            spike_router_ref)
 from repro.snn import neuron as nrn
 
 KEY = jax.random.key(42)
@@ -131,6 +133,104 @@ def test_spike_router_matches_ref(case):
     assert jnp.array_equal(out_l, ref_l)
     assert jnp.array_equal(out_v.astype(jnp.int32), ref_v)
     assert jnp.array_equal(dropped, ref_d[..., 0])
+
+
+def _exchange_tables(n_nodes, key, enable_frac=1.0):
+    """Stacked per-node fwd/rev LUTs with a label scramble + partial enables."""
+    n_lab = 2048
+    ids = jnp.arange(n_lab)
+    en = jax.random.uniform(key, (n_lab,)) < enable_frac
+    fwd = build_fwd_table(ids, (ids * 5 + 11) % 32768, en)
+    rev = build_rev_table((ids * 5 + 11) % 32768, ids)
+    return (jnp.broadcast_to(fwd, (n_nodes, fwd.shape[0])),
+            jnp.broadcast_to(rev, (n_nodes, rev.shape[0])), n_lab)
+
+
+EXCHANGE_CASES = [
+    # (n_src, cap_in, capacity, valid_frac, enable_frac)
+    (4, 64, 256, 0.5, 1.0),    # all routes on, no drops
+    (4, 64, 16, 0.6, 0.7),     # overflow: capacity drops + fwd-disabled
+    (2, 128, 64, 0.0, 1.0),    # zero valid events anywhere
+    (8, 32, 8, 0.9, 0.4),      # heavy congestion, sparse enables
+]
+
+
+@pytest.mark.parametrize("case", EXCHANGE_CASES)
+def test_fused_exchange_kernel_matches_ref(case):
+    """Pallas exchange kernel (interpret) vs the pure-jnp oracle."""
+    n_src, cap_in, cap, vfrac, efrac = case
+    key = jax.random.fold_in(KEY, hash(case) % 2**30)
+    fwd, rev, n_lab = _exchange_tables(n_src, key, efrac)
+    enables = jax.random.uniform(jax.random.fold_in(key, 1),
+                                 (n_src, n_src)) < 0.8
+    labels = jax.random.randint(jax.random.fold_in(key, 2),
+                                (n_src, cap_in), 0, n_lab)
+    valid = jax.random.uniform(jax.random.fold_in(key, 3),
+                               (n_src, cap_in)) < vfrac
+    out_l, out_v, dropped = fused_exchange(labels, valid, fwd, rev, enables,
+                                           capacity=cap, mode="interpret")
+    ref_l, ref_v, ref_d = exchange_ref(labels, valid, fwd, rev, enables,
+                                       capacity=cap)
+    assert jnp.array_equal(out_l, ref_l)
+    assert jnp.array_equal(out_v.astype(jnp.int32), ref_v)
+    assert jnp.array_equal(dropped, ref_d)
+
+
+def test_fused_exchange_kernel_exactly_at_capacity():
+    """count == capacity: nothing dropped, every slot valid."""
+    n_src, cap_in = 4, 16
+    cap = n_src * cap_in               # every event of every source fits
+    fwd, rev, n_lab = _exchange_tables(n_src, KEY)
+    enables = jnp.ones((n_src, n_src), bool)
+    labels = jax.random.randint(KEY, (n_src, cap_in), 0, n_lab)
+    valid = jnp.ones((n_src, cap_in), bool)
+    out_l, out_v, dropped = fused_exchange(labels, valid, fwd, rev, enables,
+                                           capacity=cap, mode="interpret")
+    ref_l, ref_v, ref_d = exchange_ref(labels, valid, fwd, rev, enables,
+                                       capacity=cap)
+    assert jnp.array_equal(out_l, ref_l)
+    assert jnp.array_equal(out_v.astype(jnp.int32), ref_v)
+    assert bool(jnp.all(out_v)) and int(dropped.sum()) == 0
+    # One more event than capacity drops exactly one per destination.
+    out2_l, out2_v, dropped2 = fused_exchange(
+        labels, valid, fwd, rev, enables, capacity=cap - 1, mode="interpret")
+    assert jnp.array_equal(dropped2, jnp.full((n_src,), 1))
+
+
+@pytest.mark.parametrize("case", [(1, 48, 16, 0.5), (3, 100, 64, 0.9),
+                                  (2, 64, 32, 0.0)])
+def test_merge_pack_kernel_matches_ref(case):
+    b, n, cap, vfrac = case
+    key = jax.random.fold_in(KEY, hash(case) % 2**30)
+    _, rev, _ = _exchange_tables(1, key)
+    labels = jax.random.randint(key, (b, n), 0, 2**15)
+    valid = jax.random.uniform(jax.random.fold_in(key, 1), (b, n)) < vfrac
+    out_l, out_v, dropped = fused_merge_pack(labels, valid, rev[0],
+                                             capacity=cap, mode="interpret")
+    ref_l, ref_v, ref_d = merge_pack_ref(labels, valid, rev[0], capacity=cap)
+    assert jnp.array_equal(out_l, ref_l)
+    assert jnp.array_equal(out_v.astype(jnp.int32), ref_v)
+    assert jnp.array_equal(dropped, ref_d)
+
+
+def test_fused_exchange_conservation():
+    """Routed + dropped == enabled ∧ valid ∧ route-enabled, per destination."""
+    n_src, cap_in, cap = 4, 64, 32
+    key = jax.random.fold_in(KEY, 1234)
+    fwd, rev, n_lab = _exchange_tables(n_src, key, 0.6)
+    enables = jax.random.uniform(jax.random.fold_in(key, 1),
+                                 (n_src, n_src)) < 0.7
+    labels = jax.random.randint(jax.random.fold_in(key, 2),
+                                (n_src, cap_in), 0, n_lab)
+    valid = jax.random.uniform(jax.random.fold_in(key, 3),
+                               (n_src, cap_in)) < 0.8
+    out_l, out_v, dropped = fused_exchange(labels, valid, fwd, rev, enables,
+                                           capacity=cap, mode="interpret")
+    fwd_en = (fwd[0][labels] >> 15) & 1
+    sent = (valid & (fwd_en == 1)).astype(jnp.int32)        # [n_src, cap_in]
+    expected = jnp.einsum("sc,sd->d", sent, enables.astype(jnp.int32))
+    got = out_v.sum(-1) + dropped
+    assert jnp.array_equal(expected, got)
 
 
 def test_spike_router_conservation():

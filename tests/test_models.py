@@ -132,10 +132,14 @@ def test_encoder_attends_to_future_frames():
                               dtype="float32", remat=False)
     params = M.init_params(KEY, cfg)
     embeds = jax.random.normal(KEY, (1, 8, cfg.d_model))
+    # Random readout vector: a plain feature sum of the final LayerNorm
+    # output is constant (zero mean × unit scale), so its grad is 0 even
+    # with full bidirectional attention.
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (cfg.d_model,))
 
     def first_enc_out(e):
         from repro.models.model import _encoder_stack
-        return jnp.sum(_encoder_stack(params, e, cfg)[0, 0])
+        return jnp.vdot(_encoder_stack(params, e, cfg)[0, 0], w)
 
     g = jax.grad(first_enc_out)(embeds)
     # position 0's encoding must depend on later frames (no causal mask)

@@ -14,6 +14,7 @@ def _run(body: str) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro import compat
     """) + textwrap.dedent(body)
     res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                          text=True, timeout=600,
@@ -26,8 +27,7 @@ def _run(body: str) -> str:
 def test_hierarchical_psum_equals_flat():
     out = _run("""
         from repro.parallel.collectives import hierarchical_psum
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("pod", "data"))
         x = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
 
         def flat(v):
@@ -37,9 +37,9 @@ def test_hierarchical_psum_equals_flat():
             return hierarchical_psum(v, "data", "pod")
 
         spec = P(("pod", "data"))
-        f = jax.jit(jax.shard_map(flat, mesh=mesh, in_specs=spec,
+        f = jax.jit(compat.shard_map(flat, mesh=mesh, in_specs=spec,
                                   out_specs=spec))
-        h = jax.jit(jax.shard_map(hier, mesh=mesh, in_specs=spec,
+        h = jax.jit(compat.shard_map(hier, mesh=mesh, in_specs=spec,
                                   out_specs=spec))
         print("MATCH", bool(jnp.allclose(f(x), h(x))))
     """)
@@ -49,8 +49,7 @@ def test_hierarchical_psum_equals_flat():
 def test_star_exchange_on_8_chips():
     out = _run("""
         from repro.core import StarInterconnect, identity_router, make_frame
-        mesh = jax.make_mesh((8,), ("chip",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("chip",))
         ic = StarInterconnect(mesh, "chip", capacity=64)
         fn = ic.exchange_fn()
         st = identity_router(8)
@@ -80,8 +79,7 @@ def test_sharded_train_step_matches_single_device():
                                               cfg.vocab_size)}
         base, _ = M.train_loss(params, batch, cfg)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         pshard = shardlib.param_shardings(params, mesh)
         params_s = jax.device_put(params, pshard)
         batch_s = jax.device_put(batch, {"tokens": NamedSharding(
@@ -111,8 +109,7 @@ def test_elastic_reshard_on_load():
         shutil.rmtree("/tmp/repro_elastic_test", ignore_errors=True)
         ckpt.save("/tmp/repro_elastic_test", 3, state)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         restored, manifest = resume_on_mesh("/tmp/repro_elastic_test", state,
                                             mesh)
         leaf = jax.tree.leaves(restored["params"])[0]

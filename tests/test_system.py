@@ -4,9 +4,26 @@ latency model, synchronization)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import (DEFAULT_PARAMS, LINK_BANDWIDTH_OPTIMIZED,
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip; plain tests still run
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _AnyStrategy()
+
+from repro import compat  # noqa: E402
+from repro.core import (DEFAULT_PARAMS, LINK_BANDWIDTH_OPTIMIZED,  # noqa: E402
                         LINK_LATENCY_OPTIMIZED, PROJECTED_120CHIP, SyncConfig,
                         barrier_release_time, biological_latency_ms,
                         build_fwd_table, build_rev_table, fan_in_route_enables,
@@ -176,9 +193,8 @@ def test_barrier_timeout_recovery():
 def test_barrier_in_graph():
     from repro.core.sync import barrier
 
-    mesh = jax.make_mesh((1,), ("chip",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    fn = jax.jit(jax.shard_map(
+    mesh = compat.make_mesh((1,), ("chip",))
+    fn = jax.jit(compat.shard_map(
         lambda r: barrier(r[0], "chip")[None],
         mesh=mesh, in_specs=jax.sharding.PartitionSpec("chip"),
         out_specs=jax.sharding.PartitionSpec("chip")))
