@@ -1,0 +1,171 @@
+"""Streaming exchange engine vs per-step-jit dispatch.
+
+The continuous-time hot path is the *time* loop: T exchange rounds per
+emulation, every round re-dispatched from Python in the eager path.  This
+benchmark drives the same fused route-merge-pack datapath both ways —
+
+  * ``per_step_loop`` — one jit'd exchange round dispatched T times
+    (route_step / route_step_hierarchical), the pre-streaming behaviour;
+  * ``scan_stream``   — the streaming engine: all T rounds in one compiled
+    program (``fused_exchange_stream`` for the star; ``lax.scan`` over the
+    stacked two-layer round for the hierarchical topology), routing tables
+    staged once.
+
+— at the paper's deployed ``FULL_BACKPLANE`` (12 chips, one star) and the
+§V ``PROJECTED_120CHIP`` (10 backplanes × 12 chips, two-layer) topologies,
+and reports µs/step and routed events/s.  Outputs are asserted identical
+before timing.
+
+Writes ``stream_*`` keys into ``BENCH_interconnect.json`` (merged with the
+single-round keys from ``interconnect_throughput.py``); see that module's
+docstring for the key glossary.
+"""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (FULL_BACKPLANE, PROJECTED_120CHIP, full_route_enables,
+                        identity_router, make_frame, route_step,
+                        route_step_hierarchical)
+from repro.kernels.spike_router.ops import fused_exchange_stream
+
+BENCH_JSON = os.environ.get("BENCH_INTERCONNECT_JSON",
+                            "BENCH_interconnect.json")
+N_STEPS = 64
+
+
+def _merge_bench_json(updates, path=BENCH_JSON):
+    """Merge ``stream_*`` keys into the shared benchmark JSON."""
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload.update({k: round(v, 3) for k, v in updates.items()})
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def _frames_for(n_nodes: int, cap_in: int, n_steps: int, key):
+    labels = jax.random.randint(key, (n_steps, n_nodes, cap_in), 0, 2**15)
+    valid = jax.random.uniform(jax.random.fold_in(key, 1),
+                               (n_steps, n_nodes, cap_in)) < 0.5
+    frames, _ = make_frame(labels, None, valid, cap_in)
+    return frames
+
+
+def _time_loop(step_fn, frames, n_steps, trials=3):
+    """T per-step dispatches, each jit'd but driven from Python.
+
+    Min over ``trials`` — dispatch timing is sensitive to transient host
+    load, and the minimum is the contention-free estimate.
+    """
+    out = [step_fn(jax.tree.map(lambda x: x[t], frames))
+           for t in range(n_steps)]                       # compile + warm
+    jax.block_until_ready(out[-1])
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for t in range(n_steps):
+            out_t = step_fn(jax.tree.map(lambda x: x[t], frames))
+        jax.block_until_ready(out_t)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _time_scan(stream_fn, frames, trials=3):
+    out = stream_fn(frames)                               # compile
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        out = stream_fn(frames)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _check_equal(loop_out, scan_out, n_steps):
+    scan_l, scan_v, scan_d = scan_out
+    for t in range(n_steps):
+        fr_t, d_t = loop_out[t]
+        assert jnp.array_equal(jnp.where(fr_t.valid, fr_t.labels, 0),
+                               jnp.where(scan_v[t], scan_l[t], 0))
+        assert jnp.array_equal(fr_t.valid, scan_v[t])
+        assert jnp.array_equal(d_t, scan_d[t])
+
+
+def run(verbose: bool = True, n_steps: int = N_STEPS):
+    key = jax.random.key(0)
+    results = {}
+    rows = []
+
+    cases = (
+        ("FULL_BACKPLANE", FULL_BACKPLANE, 64, 256),
+        ("PROJECTED_120CHIP", PROJECTED_120CHIP, 32, 128),
+    )
+    for name, topo, cap_in, cap in cases:
+        n = topo.n_chips
+        state = identity_router(n)
+        frames = _frames_for(n, cap_in, n_steps, jax.random.fold_in(key, n))
+        n_events = int(frames.valid.sum())
+
+        if topo.second_layer:
+            n_pods = topo.n_backplanes
+            intra = full_route_enables(topo.chips_per_backplane)
+            inter = full_route_enables(n_pods)
+
+            step_fn = jax.jit(lambda f: route_step_hierarchical(
+                state, f, cap, n_pods=n_pods, intra_enables=intra,
+                inter_enables=inter))
+
+            def _scan(fr):
+                def body(_, fr_t):
+                    from repro.core.events import EventFrame
+                    out, dropped = route_step_hierarchical(
+                        state, EventFrame(*fr_t), cap, n_pods=n_pods,
+                        intra_enables=intra, inter_enables=inter)
+                    return None, (out.labels, out.valid, dropped)
+                _, outs = jax.lax.scan(body, None, tuple(fr))
+                return outs
+
+            stream_fn = jax.jit(_scan)
+        else:
+            step_fn = jax.jit(lambda f: route_step(state, f, cap))
+            stream_fn = jax.jit(lambda fr: fused_exchange_stream(
+                fr.labels, fr.valid, state.fwd_tables, state.rev_tables,
+                state.route_enables, capacity=cap))
+
+        t_loop, loop_out = _time_loop(step_fn, frames, n_steps)
+        t_scan, scan_out = _time_scan(stream_fn, frames)
+        _check_equal(loop_out, scan_out, n_steps)
+
+        speedup = t_loop / t_scan
+        loop_us = t_loop / n_steps * 1e6
+        scan_us = t_scan / n_steps * 1e6
+        ev_s = n_events / t_scan
+        tag = f"[{name},T={n_steps}]"
+        results[f"stream_loop_us_per_step{tag}"] = loop_us
+        results[f"stream_scan_us_per_step{tag}"] = scan_us
+        results[f"stream_speedup{tag}"] = speedup
+        results[f"stream_scan_events_per_s{tag}"] = ev_s
+        rows.append((name, n_steps, loop_us, scan_us, speedup, ev_s))
+        if verbose:
+            print(f"exchange_stream[{name} loop],{loop_us:.0f},us/step")
+            print(f"exchange_stream[{name} scan],{scan_us:.0f},us/step "
+                  f"({ev_s/1e6:.1f}M events/s)")
+            print(f"exchange_stream[{name} speedup],{scan_us:.0f},"
+                  f"{speedup:.2f}x vs per-step dispatch")
+
+    path = _merge_bench_json(results)
+    if verbose:
+        print(f"exchange_stream[json],0,wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,7 @@ the perf trajectory is machine-readable across PRs.
   encoding_tradeoff       §III    8b10b@5G vs 64b66b@8G
   scaling_projection      §V      120-chip second-layer projection
   interconnect_throughput §III    routing datapath throughput
+  exchange_stream         §III    streaming engine vs per-step dispatch
   moe_dispatch            DESIGN §4  event-frame dispatch at LM scale
   roofline_table          §Roofline  all dry-run cells (needs results/)
 """
@@ -16,9 +17,10 @@ the perf trajectory is machine-readable across PRs.
 import sys
 import traceback
 
-from benchmarks import (encoding_tradeoff, fig5_latency, fig5_speedup,
-                        grad_compression, interconnect_throughput,
-                        moe_dispatch, roofline_table, scaling_projection)
+from benchmarks import (encoding_tradeoff, exchange_stream, fig5_latency,
+                        fig5_speedup, grad_compression,
+                        interconnect_throughput, moe_dispatch, roofline_table,
+                        scaling_projection)
 
 ALL = [
     ("fig5_latency", fig5_latency.run),
@@ -26,6 +28,7 @@ ALL = [
     ("encoding_tradeoff", encoding_tradeoff.run),
     ("scaling_projection", scaling_projection.run),
     ("interconnect_throughput", interconnect_throughput.run),
+    ("exchange_stream", exchange_stream.run),
     ("moe_dispatch", moe_dispatch.run),
     ("grad_compression", grad_compression.run),
     ("roofline_table", roofline_table.run),

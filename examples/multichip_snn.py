@@ -1,10 +1,12 @@
 """The paper's 4-chip prototype, end to end.
 
 Builds a feed-forward 3-chip BSS-2 network joined by the Aggregator star,
-verifies the *event* datapath (LUT routing, capacity frames, congestion
-drops) against the differentiable dense mode, measures the Fig 5 latency
-distribution for the same fan-in pattern, and trains the network with
-surrogate gradients through the routed fabric.
+runs it through the streaming emulation engine (the whole time loop as one
+scanned program), verifies the *event* datapath (LUT routing, capacity
+frames, congestion drops) against the differentiable dense mode and against
+the per-step dispatch loop, measures the Fig 5 latency distribution for the
+same fan-in pattern, and trains the network with surrogate gradients through
+the routed fabric.
 
   PYTHONPATH=src python examples/multichip_snn.py [--steps 60]
 """
@@ -18,7 +20,8 @@ import jax.numpy as jnp
 from repro.core import latency_statistics, simulate_fan_in
 from repro.snn import network as netlib
 from repro.snn import training as trlib
-from repro.snn import init_feedforward, routing_matrices, run_dense, run_event
+from repro.snn import (init_feedforward, routing_matrices, run_event_steps,
+                       run_stream)
 
 
 def main():
@@ -34,18 +37,34 @@ def main():
     params = init_feedforward(key, cfg.network)
     mats = routing_matrices(params, cfg.network)
 
-    # --- event datapath == dense surrogate -------------------------------
+    # --- streamed event datapath == dense surrogate == per-step loop ------
     drives, labels = trlib.make_batch(jax.random.key(1), cfg, args.batch)
     state = netlib.init_state(cfg.network, args.batch)
-    _, dense_spikes = jax.jit(
-        lambda p, s, d, m: run_dense(p, s, d, m, cfg.network))(
+    dense = jax.jit(lambda p, s, d, m: run_stream(
+        p, s, d, cfg.network, mode="dense", route_mats=m))(
             params, state, drives, mats)
-    _, event_spikes, dropped = jax.jit(
-        lambda p, s, d: run_event(p, s, d, cfg.network))(
-            params, state, drives)
+    stream_fn = jax.jit(lambda p, s, d: run_stream(p, s, d, cfg.network))
+    event = stream_fn(params, state, drives)
     print(f"event == dense spike trains: "
-          f"{bool(jnp.array_equal(dense_spikes, event_spikes))} "
-          f"(drops: {int(dropped.sum())})")
+          f"{bool(jnp.array_equal(dense.spikes, event.spikes))} "
+          f"(drops: {int(event.dropped.sum())})")
+
+    # The engine runs the T-step loop as one program; compare against T
+    # per-step dispatches of the same datapath.
+    _, loop_spikes, _ = run_event_steps(params, state, drives, cfg.network)
+    jax.block_until_ready(loop_spikes)
+    t0 = time.perf_counter()
+    _, loop_spikes, _ = run_event_steps(params, state, drives, cfg.network)
+    jax.block_until_ready(loop_spikes)
+    t_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = stream_fn(params, state, drives)
+    jax.block_until_ready(out.spikes)
+    t_stream = time.perf_counter() - t0
+    print(f"streaming engine == per-step loop: "
+          f"{bool(jnp.array_equal(loop_spikes, event.spikes))} "
+          f"({cfg.n_steps} steps: {t_loop*1e3:.1f} ms loop → "
+          f"{t_stream*1e3:.1f} ms streamed, {t_loop/t_stream:.1f}x)")
 
     # --- Fig 5: latency of the 3:1 fan-in on this fabric ------------------
     for rate in (10e6, 50e6, 83.3e6):

@@ -14,8 +14,8 @@ from repro.core.routing import (  # noqa: F401
 )
 from repro.core.aggregator import (  # noqa: F401
     RouterState, identity_router, route_step, route_step_baseline,
-    star_exchange, hierarchical_exchange, StarInterconnect,
-    fused_exchange_enabled,
+    route_step_hierarchical, star_exchange, hierarchical_exchange,
+    StarInterconnect, fused_exchange_enabled,
 )
 from repro.core.sync import (  # noqa: F401
     SyncConfig, barrier, barrier_release_time, refractory_mask,

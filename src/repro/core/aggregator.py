@@ -20,6 +20,16 @@ the seed's argsort/broadcast datapath for benchmark comparison.  All paths
 agree on (labels·valid, valid, dropped); exchange outputs carry zeroed
 timestamps (the multi-chip extension discards them, §III) and zero labels in
 invalid slots.
+
+Streaming path: continuous-time experiments exchange spikes every timestep,
+so the hot loop is the *time* loop, not one round.  ``route_step`` /
+``route_step_hierarchical`` stay the single-round semantic references;
+``StarInterconnect.stream_fn`` scans T rounds inside one ``shard_map`` with
+the routing tables hoisted out of the loop, and the closed-loop emulation
+engine (chip step → egress tap → exchange → delay-line ingress per scan
+step) lives in ``repro.snn.stream.run_stream``.  The multi-step kernel
+behind both is ``repro.kernels.spike_router`` (grid over timesteps, LUTs
+resident in VMEM).
 """
 
 from __future__ import annotations
@@ -103,6 +113,84 @@ def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
     valid = mixed.valid & rev_en
     ingress = EventFrame(labels=jnp.where(valid, chip, 0), times=mixed.times,
                          valid=valid)
+    return ingress, dropped
+
+
+def route_step_hierarchical(state: RouterState, frames: EventFrame,
+                            capacity: int, *, n_pods: int,
+                            intra_enables: jax.Array,
+                            inter_enables: jax.Array,
+                            use_fused: bool | None = None
+                            ) -> tuple[EventFrame, jax.Array]:
+    """One two-layer (§V) exchange round with all nodes stacked on one device.
+
+    Semantically identical to ``hierarchical_exchange`` run under
+    ``shard_map`` with nodes laid out pod-major (node ``k`` lives in pod
+    ``k // (n_nodes // n_pods)``): each destination merges its own
+    backplane's egress first (node-major, gated by ``intra_enables``), then
+    every backplane's egress pod-major (gated by ``inter_enables`` with the
+    own pod excluded), packs to ``capacity`` and applies its rev LUT.
+    Like ``aggregate``, only validity masks are per-destination; labels stay
+    shared views.
+
+    Args:
+      state: stacked routing state for all ``n_pods * per_pod`` nodes.
+      frames: per-node egress frames [n_nodes, cap_in], pod-major.
+      capacity: ingress frame capacity per node.
+      n_pods: number of backplanes (must divide n_nodes).
+      intra_enables: bool[per_pod, per_pod] routes within each backplane.
+      inter_enables: bool[n_pods, n_pods] routes between backplanes.
+
+    Returns:
+      (ingress frames [n_nodes, capacity], dropped counts [n_nodes]).
+    """
+    if use_fused is None:
+        use_fused = fused_exchange_enabled()
+    n_nodes, cap_in = frames.labels.shape
+    if n_nodes % n_pods:
+        raise ValueError(f"{n_nodes} nodes do not fill {n_pods} pods evenly")
+    per = n_nodes // n_pods
+
+    wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables,
+                                                frames.labels)
+    ev = frames.valid & fwd_en                           # [n_nodes, cap_in]
+    pod_of = jnp.arange(n_nodes) // per
+    node_of = jnp.arange(n_nodes) % per
+
+    # Layer 1 — own backplane, node-major (== g1 of hierarchical_exchange).
+    wire_pods = wire.reshape(n_pods, per * cap_in)
+    local_labels = wire_pods[pod_of]                     # [n_nodes, per*cap_in]
+    ev_pods = ev.reshape(n_pods, per, cap_in)
+    intra = jnp.asarray(intra_enables).astype(jnp.bool_)
+    local_valid = (ev_pods[pod_of]
+                   & intra.T[node_of][:, :, None]).reshape(n_nodes,
+                                                           per * cap_in)
+
+    # Layer 2 — every backplane pod-major, own pod excluded (== g2).
+    inter = jnp.asarray(inter_enables).astype(jnp.bool_)
+    pod_en = inter.T[pod_of] & (jnp.arange(n_pods)[None, :]
+                                != pod_of[:, None])      # [n_nodes, n_pods]
+    remote_valid = (ev_pods[None] & pod_en[:, :, None, None]
+                    ).reshape(n_nodes, n_nodes * cap_in)
+
+    labels = jnp.concatenate(
+        [local_labels,
+         jnp.broadcast_to(wire.reshape(1, -1), (n_nodes, n_nodes * cap_in))],
+        axis=-1)
+    valid = jnp.concatenate([local_valid, remote_valid], axis=-1)
+
+    if use_fused:
+        from repro.kernels.spike_router.ops import fused_merge_pack
+
+        out_l, out_v, dropped = fused_merge_pack(
+            labels, valid, state.rev_tables, capacity=capacity)
+        return EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
+                          valid=out_v), dropped
+    mixed, dropped = make_frame(labels, None, valid, capacity)
+    chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
+    out_valid = mixed.valid & rev_en
+    ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
+                         times=mixed.times, valid=out_valid)
     return ingress, dropped
 
 
@@ -250,6 +338,11 @@ def hierarchical_exchange(frame: EventFrame,
 class StarInterconnect:
     """Builds shard_map'd exchange functions over a device mesh.
 
+    ``exchange_fn`` dispatches one round; ``stream_fn`` is the streaming
+    engine's sharded entry point — it scans T rounds inside a *single*
+    ``shard_map``, with the routing tables hoisted to loop invariants, so a
+    whole emulation run is one compiled program instead of T dispatches.
+
     ``use_fused=None`` (default) resolves through ``fused_exchange_enabled``
     at trace time, so the fused route-merge-pack kernel runs inside the
     shard_map'd exchange unless explicitly disabled.
@@ -261,33 +354,73 @@ class StarInterconnect:
     capacity: int = 256
     use_fused: bool | None = None
 
-    def exchange_fn(self):
+    def _round(self):
+        """Shared per-shard round: ``(round_fn, frame_spec, table_specs)``.
+
+        ``round_fn(frame, *tables)`` runs one exchange for this shard's
+        [cap_in] frame (tables carry their leading size-1 sharded dim);
+        both ``exchange_fn`` and ``stream_fn`` wrap it, so the two entry
+        points cannot drift apart.
+        """
         from jax.sharding import PartitionSpec as P
 
         node, pod = self.node_axis, self.pod_axis
         cap = self.capacity
         fused = self.use_fused
+        if pod is None:
+            def round_fn(frame, fwd, rev, enables):
+                return star_exchange(frame, node, fwd[0], rev[0], enables,
+                                     cap, use_fused=fused)
+            shard = P(node)
+            table_specs = (P(node), P(node), P())
+        else:
+            def round_fn(frame, fwd, rev, intra, inter):
+                return hierarchical_exchange(frame, node, pod, fwd[0],
+                                             rev[0], intra, inter, cap,
+                                             use_fused=fused)
+            shard = P((pod, node))
+            table_specs = (shard, shard, P(), P())
+        return round_fn, shard, table_specs
+
+    def exchange_fn(self):
+        round_fn, shard, table_specs = self._round()
         # Per-node leaves keep a leading size-1 sharded dim inside shard_map;
         # squeeze it on entry and restore it on exit.
-        if pod is None:
-            def fn(frame, fwd, rev, enables):
-                frame = jax.tree.map(lambda x: x[0], frame)
-                out, dropped = star_exchange(
-                    frame, node, fwd[0], rev[0], enables, cap,
-                    use_fused=fused)
-                return (jax.tree.map(lambda x: x[None], out), dropped[None])
-            in_specs = (EventFrame(P(node), P(node), P(node)),
-                        P(node), P(node), P())
-            out_specs = (EventFrame(P(node), P(node), P(node)), P(node))
-        else:
-            def fn(frame, fwd, rev, intra, inter):
-                frame = jax.tree.map(lambda x: x[0], frame)
-                out, dropped = hierarchical_exchange(
-                    frame, node, pod, fwd[0], rev[0], intra, inter, cap,
-                    use_fused=fused)
-                return (jax.tree.map(lambda x: x[None], out), dropped[None])
-            spec = P((pod, node))
-            in_specs = (EventFrame(spec, spec, spec), spec, spec, P(), P())
-            out_specs = (EventFrame(spec, spec, spec), spec)
+
+        def fn(frame, *tables):
+            out, dropped = round_fn(jax.tree.map(lambda x: x[0], frame),
+                                    *tables)
+            return (jax.tree.map(lambda x: x[None], out), dropped[None])
+
+        in_specs = (EventFrame(shard, shard, shard), *table_specs)
+        out_specs = (EventFrame(shard, shard, shard), shard)
+        return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                  out_specs=out_specs))
+
+    def stream_fn(self):
+        """Multi-step exchange: scan T rounds inside one ``shard_map``.
+
+        The returned function takes frames whose leaves carry a leading time
+        axis ([T, n_nodes, cap_in]) plus the same table arguments as
+        ``exchange_fn``, and returns ([T, n_nodes, capacity] ingress frames,
+        [T, n_nodes] dropped counts).  Tables enter the scan as closed-over
+        invariants — staged into device memory once for the whole stream.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        round_fn, shard, table_specs = self._round()
+
+        def fn(frames, *tables):
+            frames = jax.tree.map(lambda x: x[:, 0], frames)  # [T, cap_in]
+
+            def body(_, fr):
+                return None, round_fn(fr, *tables)
+
+            _, (outs, drops) = jax.lax.scan(body, None, frames)
+            return (jax.tree.map(lambda x: x[:, None], outs), drops[:, None])
+
+        tshard = P(None, *shard)                  # leading time axis
+        in_specs = (EventFrame(tshard, tshard, tshard), *table_specs)
+        out_specs = (EventFrame(tshard, tshard, tshard), tshard)
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                   out_specs=out_specs))

@@ -208,12 +208,20 @@ def pack_words(frame: EventFrame) -> PackedWords:
     return PackedWords(labels=labels, times=word_time, valid=valid)
 
 
-def unpack_words(words: PackedWords, base_time: jax.Array | int = 0) -> EventFrame:
+def unpack_words(words: PackedWords, base_time: jax.Array | int = 0,
+                 capacity: int | None = None) -> EventFrame:
     """Unpack layer-2 words back into single events.
 
     ``base_time`` supplies the upper timestamp bits (the receiving FPGA's
     synchronized system time); the multi-chip extension itself *discards* the
     timestamp, which callers model by passing 0 and ignoring ``times``.
+
+    ``capacity`` restores the original frame capacity: ``pack_words`` pads
+    the frame up to a whole number of 3-spike words, and without this
+    argument the padding slots (always invalid) stay in the frame, silently
+    growing it from ``capacity`` to ``ceil(capacity/3)*3``.  Pass the
+    capacity of the frame that was packed to round-trip exactly; ``None``
+    keeps every slot (the word-aligned view).
     """
     lead = words.labels.shape[:-2]
     cap = words.labels.shape[-2] * SPIKES_PER_WORD
@@ -223,6 +231,14 @@ def unpack_words(words: PackedWords, base_time: jax.Array | int = 0) -> EventFra
     upper = jnp.bitwise_and(base, ~jnp.int32(TIMESTAMP_MASK))
     times = upper + words.times[..., None]
     times = jnp.broadcast_to(times, words.labels.shape).reshape(*lead, cap)
+    if capacity is not None:
+        if not cap - SPIKES_PER_WORD < capacity <= cap:
+            raise ValueError(
+                f"capacity {capacity} does not match {words.labels.shape[-2]} "
+                f"packed words ({cap} slots)")
+        labels = labels[..., :capacity]
+        times = times[..., :capacity]
+        valid = valid[..., :capacity]
     return EventFrame(labels=labels, times=times, valid=valid)
 
 

@@ -28,7 +28,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.link import LinkConfig, LINK_LATENCY_OPTIMIZED, MGT_USER_CLOCK_HZ
+from repro.core.link import (LinkConfig, LINK_LATENCY_OPTIMIZED,
+                             MGT_USER_CLOCK_HZ, cc_interval_words)
 
 SYSTEM_CLOCK_NS = 8.0    # 125 MHz FPGA system clock
 MGT_CLOCK_NS = 4.0       # 250 MHz transceiver user clock
@@ -55,8 +56,10 @@ class LatencyParams:
     # Transceiver clock-compensation pauses: every ``cc_interval`` events the
     # datapath stalls for ``cc_stall_ns`` (§III "with the exception of
     # clock-compensation pauses").  Near link saturation these stalls are the
-    # dominant source of queueing jitter.
-    cc_interval: int = 1000
+    # dominant source of queueing jitter.  The interval derives from the
+    # transceiver ppm budget in ``repro.core.link.cc_interval_words`` — the
+    # single source of truth shared with the bandwidth model.
+    cc_interval: int = cc_interval_words()
     cc_stall_ns: float = 8.0
 
     # ---- fixed path sums ----------------------------------------------------

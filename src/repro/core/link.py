@@ -90,9 +90,32 @@ LINK_LATENCY_OPTIMIZED = LinkConfig(encoding=ENC_8B10B, line_rate_gbps=5.0)
 LINK_BANDWIDTH_OPTIMIZED = LinkConfig(encoding=ENC_64B66B, line_rate_gbps=8.0)
 
 
-def clock_compensation_stall_fraction(ppm: float = 100.0,
-                                      interval_words: int = 5000) -> float:
+# Reference-clock tolerance of the transceiver endpoints (±ppm each side).
+CLOCK_TOLERANCE_PPM = 100.0
+# Compensation sequences cannot preempt event words already queued in the
+# datapath, so they are scheduled several times more often than the
+# theoretical minimum of one word per 1/(2·ppm) words.
+CC_SCHEDULING_MARGIN = 5
+
+
+def cc_interval_words(ppm: float = CLOCK_TOLERANCE_PPM,
+                      margin: int = CC_SCHEDULING_MARGIN) -> int:
+    """Words between clock-compensation pauses, derived from the ppm budget.
+
+    With both endpoint clocks off by up to ±ppm the elastic buffer drifts by
+    one 16-bit word every ``1/(2·ppm·1e-6)`` words; one compensation word per
+    interval recovers it, and ``margin`` schedules it early enough that a
+    pause is always available before the buffer slips (the single source of
+    truth for ``LatencyParams.cc_interval``).
+    """
+    return max(1, int(1.0 / (2.0 * ppm * 1e-6 * margin)))
+
+
+def clock_compensation_stall_fraction(ppm: float = CLOCK_TOLERANCE_PPM,
+                                      interval_words: int | None = None
+                                      ) -> float:
     """Fraction of cycles lost to clock-compensation pauses (§III: spikes can
     be sent every cycle *except* clock-compensation pauses)."""
-    del ppm
+    if interval_words is None:
+        interval_words = cc_interval_words(ppm)
     return 1.0 / interval_words

@@ -1,11 +1,18 @@
 """Public jit'd wrappers for the fused exchange datapath.
 
-``route_and_pack``    egress only: fwd LUT + enable mask + capacity pack.
-``fused_exchange``    the full round (fwd LUT → route enables → merge →
-                      pack → rev LUT), batched over destinations — what
-                      ``repro.core.aggregator.route_step`` runs.
-``fused_merge_pack``  merge + pack + rev LUT for streams whose fwd LUT ran
-                      on the sender (the ``shard_map`` exchange path).
+``route_and_pack``         egress only: fwd LUT + enable mask + capacity
+                           pack.
+``fused_exchange``         the full round (fwd LUT → route enables → merge →
+                           pack → rev LUT), batched over destinations — what
+                           ``repro.core.aggregator.route_step`` runs.
+``fused_exchange_stream``  T full rounds in one program: the multi-step
+                           kernel (grid over timesteps, LUTs resident in
+                           VMEM) on TPU, a ``lax.scan`` over the fused round
+                           elsewhere — what the streaming engine and
+                           ``benchmarks/exchange_stream.py`` run.
+``fused_merge_pack``       merge + pack + rev LUT for streams whose fwd LUT
+                           ran on the sender (the ``shard_map`` exchange
+                           path); accepts a shared or per-stream rev LUT.
 
 Mode selection is automatic (``mode=None``): the compiled Pallas kernel on
 TPU, the pure-jnp oracle elsewhere; ``mode="interpret"`` forces the Pallas
@@ -23,6 +30,7 @@ from repro.kernels import (MODE_INTERPRET, MODE_JAX, MODE_PALLAS,
                            default_interpret, default_mode)
 from repro.kernels.spike_router import ref as _ref
 from repro.kernels.spike_router.spike_router import (exchange_fwd,
+                                                     exchange_stream_fwd,
                                                      merge_pack_fwd,
                                                      spike_router_fwd)
 
@@ -83,12 +91,45 @@ def fused_exchange(labels: jax.Array, valid: jax.Array, fwd_luts: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "mode"))
+def fused_exchange_stream(labels: jax.Array, valid: jax.Array,
+                          fwd_luts: jax.Array, rev_luts: jax.Array,
+                          enables: jax.Array, *, capacity: int,
+                          mode: str | None = None):
+    """T full exchange rounds as one compiled program.
+
+    labels, valid: [n_steps, n_src, cap_in] per-timestep egress frames;
+    fwd_luts: int32[n_src, 2^16]; rev_luts: int32[n_dst, 2^15];
+    enables: bool/int[n_src, n_dst] (static over the stream — routing tables
+    are configuration, not data, §III).
+
+    Returns (out_labels i32[n_steps, n_dst, capacity],
+             out_valid bool[n_steps, n_dst, capacity],
+             dropped i32[n_steps, n_dst]).
+    """
+    if mode is None:
+        mode = default_mode()
+    labels = labels.astype(jnp.int32)
+    if mode == MODE_JAX:
+        out_l, out_v, dropped = _ref.exchange_stream_ref(
+            labels, valid, fwd_luts, rev_luts, enables, capacity=capacity)
+    elif mode in (MODE_PALLAS, MODE_INTERPRET):
+        out_l, out_v, dropped = exchange_stream_fwd(
+            labels, valid.astype(jnp.int32), fwd_luts.astype(jnp.int32),
+            rev_luts.astype(jnp.int32), enables.astype(jnp.int32),
+            capacity=capacity, interpret=mode == MODE_INTERPRET)
+    else:
+        raise ValueError(f"unknown exchange mode: {mode!r}")
+    return out_l, out_v.astype(jnp.bool_), dropped
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "mode"))
 def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
                      *, capacity: int, mode: str | None = None):
     """Merge + pack + rev LUT for pre-routed wire-label streams.
 
     labels, valid: [..., n_events] (fwd LUT + route enables already applied);
-    rev_lut: int32[2^15] shared across the batch.
+    rev_lut: int32[2^15] shared across the batch, or int32[batch, 2^15] with
+    one LUT per stream (the leading label dims must flatten to ``batch``).
 
     Returns (out_labels i32[..., capacity], out_valid bool[..., capacity],
              dropped i32[...]).
@@ -96,6 +137,14 @@ def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
     if mode is None:
         mode = default_mode()
     labels = labels.astype(jnp.int32)
+    if rev_lut.ndim == 2:
+        n_streams = 1
+        for d in labels.shape[:-1]:
+            n_streams *= d
+        if n_streams != rev_lut.shape[0]:
+            raise ValueError(
+                f"per-stream rev LUTs: {rev_lut.shape[0]} tables do not "
+                f"match {n_streams} streams (labels {labels.shape})")
     if mode == MODE_JAX:
         out_l, out_v, dropped = _ref.merge_pack_ref(
             labels, valid, rev_lut, capacity=capacity)

@@ -59,18 +59,48 @@ def exchange_ref(labels, valid, fwd_luts, rev_luts, enables, *,
             dropped.astype(jnp.int32))
 
 
+def exchange_stream_ref(labels, valid, fwd_luts, rev_luts, enables, *,
+                        capacity: int):
+    """Multi-step oracle matching ``exchange_stream_fwd``: one
+    ``lax.scan`` over ``exchange_ref`` — a single compiled program with the
+    LUTs hoisted to loop invariants, not T dispatches.
+
+    labels, valid: [T, n_src, cap_in].
+    Returns (out_labels i32[T, n_dst, capacity],
+             out_valid i32[T, n_dst, capacity], dropped i32[T, n_dst]).
+    """
+    labels = jnp.asarray(labels, jnp.int32)
+    valid = jnp.asarray(valid).astype(jnp.bool_)
+
+    def body(_, frame):
+        lab, val = frame
+        return None, exchange_ref(lab, val, fwd_luts, rev_luts, enables,
+                                  capacity=capacity)
+
+    _, outs = jax.lax.scan(body, None, (labels, valid))
+    return outs
+
+
 def merge_pack_ref(labels, valid, rev_lut, *, capacity: int):
     """Merge-pack-rev oracle matching ``merge_pack_fwd``.
 
     labels, valid: [..., n_events] pre-routed wire labels;
-    rev_lut: [2^15] shared.
+    rev_lut: [2^15] shared, or [batch, 2^15] per-stream (the leading label
+    dims must then flatten to ``batch``).
     Returns (out_labels i32[..., capacity], out_valid i32[..., capacity],
              dropped i32[...]).
     """
     labels = jnp.asarray(labels, jnp.int32)
     valid = jnp.asarray(valid).astype(jnp.bool_)
     frame, dropped = make_frame(labels, None, valid, capacity)
-    chip, rev_en = lookup_rev(rev_lut, frame.labels)
+    if rev_lut.ndim == 2:
+        lead = frame.labels.shape[:-1]
+        flat = frame.labels.reshape(rev_lut.shape[0], capacity)
+        chip, rev_en = jax.vmap(lookup_rev)(rev_lut, flat)
+        chip = chip.reshape(*lead, capacity)
+        rev_en = rev_en.reshape(*lead, capacity)
+    else:
+        chip, rev_en = lookup_rev(rev_lut, frame.labels)
     out_valid = frame.valid & rev_en
     out_labels = jnp.where(out_valid, chip, 0)
     return (out_labels.astype(jnp.int32), out_valid.astype(jnp.int32),

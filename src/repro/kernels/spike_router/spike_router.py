@@ -5,21 +5,33 @@ bit is the routing enable) → enable masking → Aggregator star broadcast with
 static per-route enables → capacity-bounded pack (prefix-sum pack unit,
 congestion drop + count) → rev LUT (15→17) at the receiving Node-FPGA.
 
-Three kernels cover the datapath at increasing fusion depth:
+Four kernels cover the datapath at increasing fusion depth:
 
-``_router_kernel``      fwd LUT + mask + pack for one node's egress
-                        (the seed kernel, kept for ``route_and_pack``).
-``_exchange_kernel``    the whole round, batched over destinations: the grid
-                        iterates destinations; each cell reads the *shared*
-                        per-source label/valid buffers (never copied per
-                        destination), applies per-source fwd LUTs, gates with
-                        its enable column, merges all sources src-major,
-                        packs with the cumsum/scatter pack unit, and finishes
-                        with its own rev LUT.  Used by ``route_step``.
-``_merge_pack_kernel``  merge + pack + rev LUT for one already-fwd-routed
-                        event stream.  Used by the ``shard_map`` exchanges
-                        (``star_exchange`` / ``hierarchical_exchange``) where
-                        the fwd LUT runs on the sender before ``all_gather``.
+``_router_kernel``        fwd LUT + mask + pack for one node's egress
+                          (the seed kernel, kept for ``route_and_pack``).
+``_exchange_kernel``      the whole round, batched over destinations: the
+                          grid iterates destinations; each cell reads the
+                          *shared* per-source label/valid buffers (never
+                          copied per destination), applies per-source fwd
+                          LUTs, gates with its enable column, merges all
+                          sources src-major, packs with the cumsum/scatter
+                          pack unit, and finishes with its own rev LUT.
+                          Used by ``route_step``.
+``_exchange_stream_kernel`` the multi-step variant: the grid is
+                          (destination, timestep) with the timestep as the
+                          fast axis, so each destination's rev LUT (and the
+                          shared fwd LUTs / enables) stays resident in VMEM
+                          while T frames stream through — one kernel launch
+                          routes a whole emulation run instead of T
+                          dispatches.  Used by ``fused_exchange_stream`` /
+                          the streaming engine.
+``_merge_pack_kernel``    merge + pack + rev LUT for one already-fwd-routed
+                          event stream; the rev LUT may be shared across the
+                          batch or per-row (hierarchical stacked routing).
+                          Used by the ``shard_map`` exchanges
+                          (``star_exchange`` / ``hierarchical_exchange``)
+                          where the fwd LUT runs on the sender before
+                          ``all_gather``.
 
 TPU adaptation: the 64 Ki-entry LUT (256 KiB as int32) fits entirely in
 VMEM — the BRAM of the TPU — so tables are mapped as unblocked inputs.
@@ -87,16 +99,13 @@ def _router_kernel(labels_ref, valid_ref, lut_ref, out_labels_ref,
     dropped_ref[0, 0] = dropped
 
 
-def _exchange_kernel(labels_ref, valid_ref, fwd_ref, rev_ref, enables_ref,
-                     out_labels_ref, out_valid_ref, dropped_ref, *,
-                     capacity: int):
-    """One destination per grid cell: full fwd→enable→merge→pack→rev round."""
-    labels = labels_ref[...]                     # [n_src, cap_in] shared
-    valid = valid_ref[...]                       # [n_src, cap_in] int32
-    fwd = fwd_ref[...]                           # [n_src, 2^16] per-source
-    rev = rev_ref[0]                             # [2^15] this destination's
-    en_col = enables_ref[...][:, 0]              # [n_src] int32
+def _exchange_body(labels, valid, fwd, rev, en_col, capacity: int):
+    """Full fwd→enable→merge→pack→rev round for one destination.
 
+    labels, valid: [n_src, cap_in]; fwd: [n_src, 2^16]; rev: [2^15];
+    en_col: [n_src].  Returns (out_labels [capacity], out_valid [capacity],
+    dropped scalar).
+    """
     # fwd LUT: per-source table gather from the flattened stacked tables.
     src = jax.lax.broadcasted_iota(jnp.int32, labels.shape, 0)
     flat_idx = (src * FWD_TABLE_SIZE + (labels & CHIP_MASK)).reshape(-1)
@@ -117,17 +126,53 @@ def _exchange_kernel(labels_ref, valid_ref, fwd_ref, rev_ref, enables_ref,
     chip = rentry & CHIP_MASK
     rev_en = (rentry >> REV_ENABLE_BIT) & 1
     out_v = packed_v * rev_en
-    out_labels_ref[0] = jnp.where(out_v == 1, chip, 0)
+    return jnp.where(out_v == 1, chip, 0), out_v, dropped
+
+
+def _exchange_kernel(labels_ref, valid_ref, fwd_ref, rev_ref, enables_ref,
+                     out_labels_ref, out_valid_ref, dropped_ref, *,
+                     capacity: int):
+    """One destination per grid cell: full fwd→enable→merge→pack→rev round."""
+    out_l, out_v, dropped = _exchange_body(
+        labels_ref[...],                         # [n_src, cap_in] shared
+        valid_ref[...],                          # [n_src, cap_in] int32
+        fwd_ref[...],                            # [n_src, 2^16] per-source
+        rev_ref[0],                              # [2^15] this destination's
+        enables_ref[...][:, 0],                  # [n_src] int32
+        capacity)
+    out_labels_ref[0] = out_l
     out_valid_ref[0] = out_v
     dropped_ref[0, 0] = dropped
 
 
+def _exchange_stream_kernel(labels_ref, valid_ref, fwd_ref, rev_ref,
+                            enables_ref, out_labels_ref, out_valid_ref,
+                            dropped_ref, *, capacity: int):
+    """One (destination, timestep) per grid cell.
+
+    The timestep is the fast grid axis, so the destination-side blocks (rev
+    LUT, enable column) and the shared fwd LUTs keep their VMEM residency
+    across a destination's whole stream; only the per-step frame block moves.
+    """
+    out_l, out_v, dropped = _exchange_body(
+        labels_ref[0],                           # [n_src, cap_in] step frame
+        valid_ref[0],
+        fwd_ref[...],
+        rev_ref[0],
+        enables_ref[...][:, 0],
+        capacity)
+    out_labels_ref[0, 0] = out_l
+    out_valid_ref[0, 0] = out_v
+    dropped_ref[0, 0] = dropped
+
+
 def _merge_pack_kernel(labels_ref, valid_ref, rev_ref, out_labels_ref,
-                       out_valid_ref, dropped_ref, *, capacity: int):
+                       out_valid_ref, dropped_ref, *, capacity: int,
+                       batched_rev: bool = False):
     """Merge + pack + rev LUT for one pre-routed wire-label stream."""
     labels = labels_ref[0]                       # [N] int32 wire labels
     ok = valid_ref[0].astype(jnp.int32)          # [N] 0/1
-    rev = rev_ref[...]                           # [2^15]
+    rev = rev_ref[0] if batched_rev else rev_ref[...]   # [2^15]
 
     packed_w, packed_v, dropped = _pack(ok, labels, capacity)
 
@@ -208,25 +253,70 @@ def exchange_fwd(labels: jax.Array, valid: jax.Array, fwd_luts: jax.Array,
     )(labels, valid, fwd_luts, rev_luts, enables)
 
 
+def exchange_stream_fwd(labels: jax.Array, valid: jax.Array,
+                        fwd_luts: jax.Array, rev_luts: jax.Array,
+                        enables: jax.Array, *, capacity: int,
+                        interpret: bool = True):
+    """Multi-step full-round pallas_call: one grid cell per (dst, timestep).
+
+    labels, valid: int32[T, n_src, cap_in] per-timestep egress frames;
+    fwd_luts: int32[n_src, 2^16]; rev_luts: int32[n_dst, 2^15];
+    enables: int32[n_src, n_dst].  The destination is the *slow* grid axis,
+    so every LUT block stays resident while the T frames stream through.
+    Returns (out_labels i32[T, n_dst, capacity],
+             out_valid i32[T, n_dst, capacity], dropped i32[T, n_dst]).
+    """
+    n_steps, n_src, cap_in = labels.shape
+    n_dst = rev_luts.shape[0]
+    grid = (n_dst, n_steps)
+
+    ev_spec = pl.BlockSpec((1, n_src, cap_in), lambda d, t: (t, 0, 0))
+    fwd_spec = pl.BlockSpec(fwd_luts.shape, lambda d, t: (0, 0))
+    rev_spec = pl.BlockSpec((1, rev_luts.shape[1]), lambda d, t: (d, 0))
+    en_spec = pl.BlockSpec((n_src, 1), lambda d, t: (0, d))
+    out_spec = pl.BlockSpec((1, 1, capacity), lambda d, t: (t, d, 0))
+    drop_spec = pl.BlockSpec((1, 1), lambda d, t: (t, d))
+
+    kernel = functools.partial(_exchange_stream_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[ev_spec, ev_spec, fwd_spec, rev_spec, en_spec],
+        out_specs=(out_spec, out_spec, drop_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_steps, n_dst, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((n_steps, n_dst, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((n_steps, n_dst), jnp.int32),
+        ),
+        interpret=interpret,
+    )(labels, valid, fwd_luts, rev_luts, enables)
+
+
 def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
                    capacity: int, interpret: bool = True):
     """Merge-pack-rev pallas_call over a batch of pre-routed streams.
 
     labels, valid: int32[batch, n_events] wire labels (fwd LUT already
     applied, route enables already folded into ``valid``);
-    rev_lut: int32[2^15] shared across the batch.
+    rev_lut: int32[2^15] shared across the batch, or int32[batch, 2^15] with
+    one reverse LUT per stream (stacked hierarchical routing).
     Returns (out_labels i32[batch, capacity], out_valid i32[batch, capacity],
              dropped i32[batch, 1]).
     """
     batch, n_events = labels.shape
     grid = (batch,)
 
+    batched_rev = rev_lut.ndim == 2
     ev_spec = pl.BlockSpec((1, n_events), lambda b: (b, 0))
-    rev_spec = pl.BlockSpec(rev_lut.shape, lambda b: (0,))
+    if batched_rev:
+        rev_spec = pl.BlockSpec((1, rev_lut.shape[1]), lambda b: (b, 0))
+    else:
+        rev_spec = pl.BlockSpec(rev_lut.shape, lambda b: (0,))
     out_spec = pl.BlockSpec((1, capacity), lambda b: (b, 0))
     drop_spec = pl.BlockSpec((1, 1), lambda b: (b, 0))
 
-    kernel = functools.partial(_merge_pack_kernel, capacity=capacity)
+    kernel = functools.partial(_merge_pack_kernel, capacity=capacity,
+                               batched_rev=batched_rev)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -29,10 +29,28 @@ class ServeStats:
 
 
 def generate(cfg, params, prompts: jax.Array, max_new: int,
-             max_len: int | None = None, greedy: bool = True):
-    """Batched generation.  prompts: int32[B, S]."""
+             max_len: int | None = None, greedy: bool = True,
+             temperature: float = 1.0, key: jax.Array | None = None):
+    """Batched generation.  prompts: int32[B, S].
+
+    ``greedy=True`` (default) picks the argmax at every step —
+    deterministic.  ``greedy=False`` samples from the temperature-scaled
+    softmax with a PRNG ``key`` (defaults to ``jax.random.key(0)``); the
+    same key reproduces the same sequences.  ``temperature <= 0`` is the
+    zero-entropy limit and selects greedily (no division by zero).
+    """
     b, s = prompts.shape
     max_len = max_len or (s + max_new)
+    greedy = greedy or temperature <= 0.0
+    if not greedy and key is None:
+        key = jax.random.key(0)
+
+    def select(logits, step_idx):
+        if greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        step_key = jax.random.fold_in(key, step_idx)
+        return jax.random.categorical(
+            step_key, logits / temperature, axis=-1).astype(jnp.int32)
 
     t0 = time.time()
     logits, caches, enc_out = jax.jit(
@@ -46,12 +64,12 @@ def generate(cfg, params, prompts: jax.Array, max_new: int,
     step = jax.jit(lambda p, t, c, i, e: M.decode_step(
         p, t, c, i, cfg, encoder_out=e))
     out_tokens = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    tok = select(logits, 0)
     t0 = time.time()
     for i in range(max_new):
         out_tokens.append(tok)
         logits, dec_caches = step(params, tok, dec_caches, s + i, enc_out)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok = select(logits, i + 1)
     jax.block_until_ready(logits)
     t_decode = time.time() - t0
     return (jnp.stack(out_tokens, 1),
@@ -83,6 +101,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--sample", action="store_true",
+                    help="sample instead of greedy argmax")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -96,7 +118,10 @@ def main():
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 1,
                                  cfg.vocab_size)
-    tokens, stats = generate(cfg, params, prompts, args.max_new)
+    tokens, stats = generate(cfg, params, prompts, args.max_new,
+                             greedy=not args.sample,
+                             temperature=args.temperature,
+                             key=jax.random.key(args.seed))
     print(f"generated {tokens.shape} tokens")
     print(f"prefill {stats.prefill_s*1e3:.0f} ms, decode "
           f"{stats.decode_s*1e3:.0f} ms, {stats.tokens_per_s:.1f} tok/s")

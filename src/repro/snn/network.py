@@ -18,6 +18,14 @@ Two execution modes share one routing configuration:
 Inter-chip spikes arrive with a configurable pipeline delay of whole time
 steps, derived from the measured chip-to-chip latency and the simulation
 ``dt`` — the paper's fixed routing latency made visible to the model.
+
+Time loops: ``run_event`` / ``run_dense`` are thin wrappers over the
+streaming engine (``repro.snn.stream.run_stream``), which scans the full
+per-timestep pipeline — chip step, egress tap, fused exchange, delay-line
+ingress — as one compiled program with the routing tables hoisted out of the
+loop.  ``run_event_steps`` keeps the per-step-jit dispatch loop as the
+semantic (and benchmark) reference; all paths are bit-exact on
+(spikes, dropped) and the final state.
 """
 
 from __future__ import annotations
@@ -195,21 +203,42 @@ def step_event(params: NetworkParams, state: NetworkState,
 def run_dense(params: NetworkParams, state: NetworkState,
               ext_drives: jax.Array, route_mats: jax.Array,
               cfg: NetworkConfig) -> tuple[NetworkState, jax.Array]:
-    """Scan ``step_dense`` over time. ext_drives: [T, n_chips, batch, rows]."""
+    """Streamed dense run. ext_drives: [T, n_chips, batch, rows]."""
+    from repro.snn import stream
 
-    def body(s, drive):
-        s, spk = step_dense(params, s, drive, route_mats, cfg)
-        return s, spk
-
-    return jax.lax.scan(body, state, ext_drives)
+    out = stream.run_stream(params, state, ext_drives, cfg, mode="dense",
+                            route_mats=route_mats)
+    return out.state, out.spikes
 
 
 def run_event(params: NetworkParams, state: NetworkState,
               ext_drives: jax.Array,
               cfg: NetworkConfig) -> tuple[NetworkState, jax.Array, jax.Array]:
-    def body(s, drive):
-        s, spk, dropped = step_event(params, s, drive, cfg)
-        return s, (spk, dropped)
+    """Streamed event-mode run (star topology, fused exchange default)."""
+    from repro.snn import stream
 
-    final, (spikes, dropped) = jax.lax.scan(body, state, ext_drives)
-    return final, spikes, dropped
+    out = stream.run_stream(params, state, ext_drives, cfg, mode="event")
+    return out.state, out.spikes, out.dropped
+
+
+# Module-level jit so repeated run_event_steps calls hit the trace cache
+# (``cfg`` is a frozen dataclass → hashable static argument; params stay
+# traced arguments rather than baked-in constants).
+_step_event_jit = jax.jit(step_event, static_argnames="cfg")
+
+
+def run_event_steps(params: NetworkParams, state: NetworkState,
+                    ext_drives: jax.Array, cfg: NetworkConfig
+                    ) -> tuple[NetworkState, jax.Array, jax.Array]:
+    """Per-step-jit reference loop: one ``step_event`` dispatch per timestep.
+
+    Semantically identical to ``run_event`` — kept as the parity oracle for
+    the streaming engine and as the dispatch-bound baseline that
+    ``benchmarks/exchange_stream.py`` reports against.
+    """
+    spikes, dropped = [], []
+    for t in range(ext_drives.shape[0]):
+        state, spk, drp = _step_event_jit(params, state, ext_drives[t], cfg)
+        spikes.append(spk)
+        dropped.append(drp)
+    return state, jnp.stack(spikes), jnp.stack(dropped)

@@ -1,0 +1,162 @@
+"""Streaming multi-chip emulation engine — the time loop as one program.
+
+The paper's system is *continuous-time*: spikes flow through the
+Node-FPGA → Aggregator → Node-FPGA star every cycle, not one hand-dispatched
+round at a time.  ``run_stream`` is the software analogue: the full
+per-timestep pipeline —
+
+    LIF/chip step → egress tap (label encode + capacity frame)
+                  → fused exchange (star or two-layer hierarchical)
+                  → delay-line ingress (chip-to-chip latency in steps)
+
+— runs inside a single ``jax.lax.scan``, so a T-step emulation is one
+compiled program instead of T dispatches.  Loop invariants are hoisted out
+of the scan body: the egress label grid is built once, and the routing LUTs
+enter the scan as closed-over constants (staged to device memory once per
+stream, not per step).
+
+The inter-chip delay line is kept as a ring buffer (``dynamic_index`` read +
+``dynamic_update`` write of one slot per step) instead of the per-step
+shift-concatenate of the eager path — for the common ``delay_steps == 2``
+case this is literal double buffering: the frame written this step is the
+frame consumed next step, with no copies of the in-flight buffer.  Outputs
+and final state are bit-exact with the per-step path (the ring is rolled
+back to shift order on exit).
+
+Modes and topologies mirror ``repro.snn.network``:
+
+* ``mode="event"``  — the faithful datapath through ``route_step`` (star)
+  or ``route_step_hierarchical`` (§V two-layer), fused or unfused.
+* ``mode="dense"``  — the differentiable surrogate (routing matrices), so
+  BPTT through ``run_stream`` is the training hot loop.
+
+The sharded twin (exchange scan under one ``shard_map``) is
+``repro.core.aggregator.StarInterconnect.stream_fn``; the multi-step Pallas
+kernel behind the fused exchange is ``repro.kernels.spike_router``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregator as agg
+from repro.core.events import make_frame
+from repro.snn import chip as chiplib
+from repro.snn import network as netlib
+
+
+class StreamOut(NamedTuple):
+    """Result of a streamed emulation run."""
+
+    state: netlib.NetworkState
+    spikes: jax.Array    # f32[T, n_chips, batch, n_neurons]
+    dropped: jax.Array   # i32[T, n_chips, batch] (zeros in dense mode)
+
+
+def _egress_label_grid(cfg: netlib.NetworkConfig) -> jax.Array:
+    """Static per-chip label grid for the layer-2 egress tap, hoisted out of
+    the scan body (labels are configuration, not data)."""
+    neurons = jnp.arange(cfg.chip.n_neurons, dtype=jnp.int32)
+    chips = jnp.arange(cfg.n_chips, dtype=jnp.int32) << netlib.NEURON_BITS
+    return chips[:, None] + neurons[None, :]
+
+
+def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
+               ext_drives: jax.Array, cfg: netlib.NetworkConfig, *,
+               mode: str = "event",
+               topology: str = "star",
+               route_mats: jax.Array | None = None,
+               n_pods: int = 1,
+               intra_enables: jax.Array | None = None,
+               inter_enables: jax.Array | None = None,
+               use_fused: bool | None = None) -> StreamOut:
+    """Scan the full emulation pipeline over ``ext_drives``.
+
+    Args:
+      ext_drives: f32[T, n_chips, batch, n_rows] external input per step.
+      mode: ``"event"`` (faithful datapath) or ``"dense"`` (differentiable
+        surrogate; requires ``route_mats`` from ``routing_matrices``).
+      topology: ``"star"`` (one backplane) or ``"hierarchical"`` (§V
+        two-layer; requires ``n_pods`` / ``intra_enables`` /
+        ``inter_enables``, event mode only — the dense surrogate encodes
+        topology in ``route_mats``).
+      use_fused: event mode only; forwarded to the exchange kernels.
+
+    Returns:
+      ``StreamOut(state, spikes, dropped)`` — bit-exact with the equivalent
+      per-step loop (``run_event_steps`` / ``step_dense`` iterated).
+    """
+    if mode not in ("event", "dense"):
+        raise ValueError(f"unknown mode: {mode!r}")
+    if topology not in ("star", "hierarchical"):
+        raise ValueError(f"unknown topology: {topology!r}")
+    if mode == "dense" and route_mats is None:
+        raise ValueError("dense mode requires route_mats")
+    if mode == "dense" and topology == "hierarchical":
+        raise ValueError("hierarchical topology is event-mode only; dense "
+                         "routing encodes the topology in route_mats")
+    if topology == "hierarchical" and (intra_enables is None
+                                       or inter_enables is None):
+        raise ValueError("hierarchical topology requires intra_enables and "
+                         "inter_enables")
+
+    n_steps = ext_drives.shape[0]
+    delay = state.inflight.shape[0]
+    labels_grid = _egress_label_grid(cfg)
+
+    def exchange(frames):
+        if topology == "star":
+            return agg.route_step(params.router, frames, cfg.capacity,
+                                  use_fused=use_fused)
+        return agg.route_step_hierarchical(
+            params.router, frames, cfg.capacity, n_pods=n_pods,
+            intra_enables=intra_enables, inter_enables=inter_enables,
+            use_fused=use_fused)
+
+    def event_route(spikes):
+        """Egress tap → exchange → ingress decode, vmapped over batch."""
+
+        def one_batch(spk_b):  # [n_chips, n_neurons]
+            frames, egress_drop = make_frame(labels_grid, None, spk_b > 0.5,
+                                             cfg.capacity)
+            ingress, agg_drop = exchange(frames)
+            drives = jax.vmap(
+                lambda lab, val, rmap: chiplib.labels_to_rows(
+                    lab[None], val[None], rmap, cfg.chip.n_rows)[0])(
+                        ingress.labels, ingress.valid, params.row_of_label)
+            return drives, egress_drop + agg_drop
+
+        return jax.vmap(one_batch, in_axes=1, out_axes=(1, 1))(spikes)
+
+    def body(carry, drive_t):
+        chips, inflight, t = carry
+        slot = jax.lax.rem(t, delay)
+        # Ingress: consume the delay-line slot written ``delay`` steps ago.
+        drive = drive_t + jax.lax.dynamic_index_in_dim(inflight, slot, 0,
+                                                       keepdims=False)
+        new_chips, spikes = jax.vmap(
+            lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
+                params.chips, chips, drive)
+        if mode == "dense":
+            routed = jnp.einsum("sbn,sdnr->dbr", spikes, route_mats)
+            dropped = jnp.zeros(spikes.shape[:2], jnp.int32)
+        else:
+            routed, dropped = event_route(spikes)
+        # Egress: the consumed slot is exactly the one due ``delay`` steps
+        # out — overwrite it in place (double buffering, no shift copy).
+        inflight = jax.lax.dynamic_update_index_in_dim(inflight, routed,
+                                                       slot, 0)
+        return (new_chips, inflight, t + 1), (spikes, dropped)
+
+    (chips, inflight, _), (spikes, dropped) = jax.lax.scan(
+        body, (state.chips, state.inflight, jnp.int32(0)), ext_drives)
+    # Restore shift-register order so the final state is bit-exact with the
+    # per-step path (slot ``t % delay`` was written last).
+    if delay > 1 and n_steps % delay:
+        inflight = jnp.roll(inflight, -(n_steps % delay), axis=0)
+    return StreamOut(state=netlib.NetworkState(chips=chips,
+                                               inflight=inflight),
+                     spikes=spikes, dropped=dropped)

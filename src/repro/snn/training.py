@@ -46,7 +46,13 @@ def synthetic_task(key: jax.Array, batch: int, n_rows: int,
 def forward_rates(params: net.NetworkParams, route_mats: jax.Array,
                   drives: jax.Array, cfg: TrainConfig,
                   batch: int) -> jax.Array:
-    """Run the network; return per-class readout rates from the last chip."""
+    """Run the network; return per-class readout rates from the last chip.
+
+    BPTT runs through the streaming engine (``run_dense`` wraps
+    ``repro.snn.stream.run_stream``) — the whole T-step emulation is one
+    scanned program, so each training step differentiates one compiled loop
+    rather than T chained dispatches.
+    """
     state = net.init_state(cfg.network, batch)
     _, spikes = net.run_dense(params, state, drives, route_mats, cfg.network)
     # spikes: [T, n_chips, batch, n_neurons] → rate of last chip's neurons.

@@ -25,6 +25,7 @@ def _batch(cfg, b=2, s=8):
     return {"tokens": toks}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ARCH_NAMES)
 def test_train_step_smoke(name):
     cfg = smoke_config(get_config(name))
@@ -45,6 +46,7 @@ def test_train_step_smoke(name):
         assert jnp.all(jnp.isfinite(g)), f"{name}: non-finite grad"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ARCH_NAMES)
 def test_prefill_decode_equivalence(name):
     cfg = dataclasses.replace(smoke_config(get_config(name)), dtype="float32")

@@ -49,6 +49,7 @@ MAKE_FRAME_CASES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("case", MAKE_FRAME_CASES)
 def test_make_frame_matches_argsort_baseline(case):
     batch, n, cap, vfrac = case
@@ -81,6 +82,7 @@ def test_make_frame_zero_fills_invalid_slots():
 # aggregate: mask-only broadcast vs materializing baseline
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("caps", [(4, 32, 64), (3, 64, 16), (8, 16, 128)])
 def test_aggregate_matches_baseline(caps):
     n_nodes, cap_in, cap_out = caps
@@ -98,6 +100,7 @@ def test_aggregate_matches_baseline(caps):
 # route_step: fused kernel vs unfused vs argsort baseline
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("capacity", [8, 64, 512])
 def test_route_step_fused_matches_unfused_and_baseline(capacity):
     n_nodes, n_events = 4, 48
@@ -116,6 +119,7 @@ def test_route_step_fused_matches_unfused_and_baseline(capacity):
     _assert_frames_equal(out_f, d_f, out_b, d_b)
 
 
+@pytest.mark.slow
 def test_route_step_fused_conserves_events():
     n_nodes = 5
     state = identity_router(n_nodes)
@@ -127,6 +131,7 @@ def test_route_step_fused_conserves_events():
     assert int(out.valid.sum()) + int(dropped.sum()) == sent * (n_nodes - 1)
 
 
+@pytest.mark.slow
 def test_star_exchange_fused_matches_unfused_single_device():
     from jax.sharding import PartitionSpec as P
 

@@ -35,6 +35,7 @@ ATTN_SHAPES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("shape", ATTN_SHAPES)
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -77,6 +78,7 @@ SCAN_SHAPES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("shape", SCAN_SHAPES)
 def test_linear_scan_matches_sequential(shape):
     b, h, t, kd, vd, mode, wmag = shape
@@ -93,6 +95,7 @@ def test_linear_scan_matches_sequential(shape):
                                np.asarray(ref) / scale, atol=5e-5)
 
 
+@pytest.mark.slow
 def test_linear_scan_chunk_invariance():
     b, h, t, kd, vd = 1, 2, 128, 32, 32
     ks = jax.random.split(KEY, 4)
@@ -118,6 +121,7 @@ ROUTER_CASES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("case", ROUTER_CASES)
 def test_spike_router_matches_ref(case):
     b, n, cap, frac = case
@@ -155,6 +159,7 @@ EXCHANGE_CASES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("case", EXCHANGE_CASES)
 def test_fused_exchange_kernel_matches_ref(case):
     """Pallas exchange kernel (interpret) vs the pure-jnp oracle."""
@@ -176,6 +181,7 @@ def test_fused_exchange_kernel_matches_ref(case):
     assert jnp.array_equal(dropped, ref_d)
 
 
+@pytest.mark.slow
 def test_fused_exchange_kernel_exactly_at_capacity():
     """count == capacity: nothing dropped, every slot valid."""
     n_src, cap_in = 4, 16
@@ -199,6 +205,7 @@ def test_fused_exchange_kernel_exactly_at_capacity():
 
 @pytest.mark.parametrize("case", [(1, 48, 16, 0.5), (3, 100, 64, 0.9),
                                   (2, 64, 32, 0.0)])
+@pytest.mark.slow
 def test_merge_pack_kernel_matches_ref(case):
     b, n, cap, vfrac = case
     key = jax.random.fold_in(KEY, hash(case) % 2**30)
@@ -213,6 +220,7 @@ def test_merge_pack_kernel_matches_ref(case):
     assert jnp.array_equal(dropped, ref_d)
 
 
+@pytest.mark.slow
 def test_fused_exchange_conservation():
     """Routed + dropped == enabled ∧ valid ∧ route-enabled, per destination."""
     n_src, cap_in, cap = 4, 64, 32
@@ -233,6 +241,7 @@ def test_fused_exchange_conservation():
     assert jnp.array_equal(expected, got)
 
 
+@pytest.mark.slow
 def test_spike_router_conservation():
     """Events are never created: routed + dropped == enabled ∧ valid."""
     n_lab = 1024

@@ -39,6 +39,7 @@ def test_chunked_attention_equals_dense(shape):
                                atol=2e-5)
 
 
+@pytest.mark.slow
 def test_chunked_attention_model_loss_identical():
     cfg = dataclasses.replace(smoke_config(get_config("qwen3-8b")),
                               dtype="float32")
@@ -66,6 +67,7 @@ def _moe_setup(capacity_factor=8.0):
     return cfg, one, x
 
 
+@pytest.mark.slow
 def test_moe_lossless_at_high_capacity():
     cfg, params, x = _moe_setup(capacity_factor=8.0)
     y, metrics = moelib.moe_forward(params, x, cfg)
@@ -73,6 +75,7 @@ def test_moe_lossless_at_high_capacity():
     assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))
 
 
+@pytest.mark.slow
 def test_moe_drops_under_tight_capacity():
     cfg, params, x = _moe_setup(capacity_factor=0.25)
     y, metrics = moelib.moe_forward(params, x, cfg)
@@ -88,6 +91,7 @@ def test_moe_local_dispatch_flag_is_noop_on_single_shard():
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
 
 
+@pytest.mark.slow
 def test_moe_grad_flows_to_experts_and_router():
     cfg, params, x = _moe_setup()
 
@@ -107,6 +111,7 @@ def test_moe_grad_flows_to_experts_and_router():
 
 @pytest.mark.parametrize("mode,wmag", [("inclusive", 0.5), ("bonus", 3.0),
                                        ("inclusive", 11.0)])
+@pytest.mark.slow
 def test_linear_scan_chunked_matches_oracle(mode, wmag):
     ks = jax.random.split(jax.random.fold_in(KEY, int(wmag * 10)), 5)
     b, h, t, kd, vd = 2, 3, 100, 16, 32
@@ -127,6 +132,7 @@ def test_linear_scan_chunked_matches_oracle(mode, wmag):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_encoder_attends_to_future_frames():
     cfg = dataclasses.replace(smoke_config(get_config("whisper-medium")),
                               dtype="float32", remat=False)

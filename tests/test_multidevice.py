@@ -7,6 +7,9 @@ import textwrap
 
 import pytest
 
+# Every test spawns an 8-device subprocess — slow by construction.
+pytestmark = pytest.mark.slow
+
 
 def _run(body: str) -> str:
     prog = textwrap.dedent("""
@@ -62,6 +65,69 @@ def test_star_exchange_on_8_chips():
         print("COUNTS", out.count().tolist(), int(dropped.sum()))
     """)
     assert "COUNTS [56, 56, 56, 56, 56, 56, 56, 56] 0" in out
+
+
+def test_stream_fn_matches_per_step_exchange_on_8_chips():
+    """The scanned shard_map stream equals T per-step exchange dispatches."""
+    out = _run("""
+        from repro.core import StarInterconnect, identity_router, make_frame
+        mesh = compat.make_mesh((8,), ("chip",))
+        ic = StarInterconnect(mesh, "chip", capacity=32)
+        st = identity_router(8)
+        key = jax.random.key(0)
+        T = 5
+        labels = jax.random.randint(key, (T, 8, 16), 0, 2**15)
+        valid = jax.random.uniform(jax.random.fold_in(key, 1),
+                                   (T, 8, 16)) < 0.6
+        frames, _ = make_frame(labels, None, valid, 16)
+        outs, drops = ic.stream_fn()(frames, st.fwd_tables, st.rev_tables,
+                                     st.route_enables)
+        ex = ic.exchange_fn()
+        ok = True
+        for t in range(T):
+            o, d = ex(jax.tree.map(lambda x: x[t], frames), st.fwd_tables,
+                      st.rev_tables, st.route_enables)
+            ok &= bool(jnp.array_equal(outs.labels[t], o.labels))
+            ok &= bool(jnp.array_equal(outs.valid[t], o.valid))
+            ok &= bool(jnp.array_equal(drops[t], d))
+        print("STREAM_MATCH", ok)
+    """)
+    assert "STREAM_MATCH True" in out
+
+
+def test_hierarchical_stacked_matches_shard_map():
+    """route_step_hierarchical (one device, stacked) is bit-exact with the
+    shard_map'd hierarchical_exchange on a 2x4 pod/chip mesh, and the
+    scanned hierarchical stream_fn agrees with both."""
+    out = _run("""
+        from repro.core import (StarInterconnect, identity_router, make_frame,
+                                route_step_hierarchical, full_route_enables)
+        n_pods, per = 2, 4
+        N = n_pods * per
+        st = identity_router(N)
+        intra = full_route_enables(per)
+        inter = full_route_enables(n_pods)
+        key = jax.random.key(3)
+        T = 3
+        labels = jax.random.randint(key, (T, N, 16), 0, 2**15)
+        valid = jax.random.uniform(jax.random.fold_in(key, 2),
+                                   (T, N, 16)) < 0.7
+        frames, _ = make_frame(labels, None, valid, 16)
+        mesh = compat.make_mesh((n_pods, per), ("pod", "chip"))
+        ic = StarInterconnect(mesh, "chip", pod_axis="pod", capacity=24)
+        outs, drops = ic.stream_fn()(frames, st.fwd_tables, st.rev_tables,
+                                     intra, inter)
+        ok = True
+        for t in range(T):
+            ref, d_ref = route_step_hierarchical(
+                st, jax.tree.map(lambda x: x[t], frames), 24, n_pods=n_pods,
+                intra_enables=intra, inter_enables=inter)
+            ok &= bool(jnp.array_equal(outs.labels[t], ref.labels))
+            ok &= bool(jnp.array_equal(outs.valid[t], ref.valid))
+            ok &= bool(jnp.array_equal(drops[t], d_ref))
+        print("HIER_MATCH", ok)
+    """)
+    assert "HIER_MATCH True" in out
 
 
 def test_sharded_train_step_matches_single_device():

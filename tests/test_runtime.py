@@ -80,6 +80,7 @@ def _trainer(steps=8):
     return Trainer(cfg, tcfg, dcfg)
 
 
+@pytest.mark.slow
 def test_resume_is_bit_deterministic():
     t1 = _trainer()
     hist = t1.run()

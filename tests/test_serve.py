@@ -13,6 +13,7 @@ from repro.models import model as M
 KEY = jax.random.key(5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["smollm-135m", "rwkv6-7b", "zamba2-7b"])
 def test_generate_runs_and_is_deterministic(arch):
     cfg = dataclasses.replace(smoke_config(get_config(arch)),
@@ -26,6 +27,7 @@ def test_generate_runs_and_is_deterministic(arch):
     assert stats.tokens == 8
 
 
+@pytest.mark.slow
 def test_generate_matches_teacher_forced_argmax():
     """Greedy generation step 0 equals the argmax of prefill logits."""
     cfg = dataclasses.replace(smoke_config(get_config("qwen3-8b")),
@@ -35,3 +37,40 @@ def test_generate_matches_teacher_forced_argmax():
     logits, _, _ = M.prefill(params, {"tokens": prompts}, cfg)
     toks, _ = generate(cfg, params, prompts, max_new=1)
     assert jnp.array_equal(toks[:, 0], jnp.argmax(logits, -1))
+
+
+def _smoke_setup(max_new=8):
+    cfg = dataclasses.replace(smoke_config(get_config("smollm-135m")),
+                              dtype="float32")
+    params = M.init_params(KEY, cfg)
+    prompts = jax.random.randint(KEY, (2, 6), 1, cfg.vocab_size)
+    return cfg, params, prompts
+
+
+@pytest.mark.slow
+def test_generate_greedy_flag_selects_sampling():
+    """greedy=False actually samples: reproducible under one key, different
+    across keys, and different from the greedy argmax path (regression for
+    the flag being accepted but ignored)."""
+    cfg, params, prompts = _smoke_setup()
+    greedy_toks, _ = generate(cfg, params, prompts, max_new=8, greedy=True)
+    s1, _ = generate(cfg, params, prompts, max_new=8, greedy=False,
+                     key=jax.random.key(1), temperature=5.0)
+    s1_again, _ = generate(cfg, params, prompts, max_new=8, greedy=False,
+                           key=jax.random.key(1), temperature=5.0)
+    s2, _ = generate(cfg, params, prompts, max_new=8, greedy=False,
+                     key=jax.random.key(2), temperature=5.0)
+    assert jnp.array_equal(s1, s1_again)          # same key → same sample
+    assert not jnp.array_equal(s1, greedy_toks)   # the flag changes the path
+    assert not jnp.array_equal(s1, s2)            # different keys differ
+    assert bool((s1 >= 0).all()) and bool((s1 < cfg.vocab_size).all())
+
+
+def test_generate_greedy_equals_zero_entropy_limit():
+    """Greedy and sampling agree when the temperature collapses the softmax
+    onto the argmax."""
+    cfg, params, prompts = _smoke_setup()
+    greedy_toks, _ = generate(cfg, params, prompts, max_new=4, greedy=True)
+    cold, _ = generate(cfg, params, prompts, max_new=4, greedy=False,
+                       key=jax.random.key(3), temperature=1e-4)
+    assert jnp.array_equal(greedy_toks, cold)

@@ -2,6 +2,7 @@
 plasticity, training."""
 
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
@@ -46,6 +47,7 @@ def test_adex_adaptation_slows_firing():
     assert isis[-1] >= isis[0]
 
 
+@pytest.mark.slow
 def test_surrogate_gradient_nonzero():
     def loss(drive):
         state = init_neuron_state((1, 4), LIF)
@@ -59,6 +61,7 @@ def test_surrogate_gradient_nonzero():
     assert float(jnp.abs(g).sum()) > 0.0
 
 
+@pytest.mark.slow
 def test_chip_shapes_and_quantization():
     cfg = ChipConfig()
     params = init_chip_params(KEY, cfg)
@@ -70,6 +73,7 @@ def test_chip_shapes_and_quantization():
     assert bool(jnp.all(jnp.isfinite(state.neurons.v)))
 
 
+@pytest.mark.slow
 def test_event_mode_equals_dense_mode():
     cfg = netlib.NetworkConfig(n_chips=3, capacity=600)
     params = init_feedforward(KEY, cfg)
@@ -84,6 +88,7 @@ def test_event_mode_equals_dense_mode():
     assert int(dropped.sum()) == 0
 
 
+@pytest.mark.slow
 def test_event_mode_drops_under_congestion():
     cfg = netlib.NetworkConfig(n_chips=3, capacity=16)   # tiny frames
     params = init_feedforward(KEY, cfg)
@@ -131,6 +136,7 @@ def test_stdp_potentiation_and_depression():
     assert float(w3[1, 1]) < 20.0
 
 
+@pytest.mark.slow
 def test_multichip_training_reduces_loss():
     cfg = trlib.TrainConfig(
         network=netlib.NetworkConfig(n_chips=2, capacity=600),

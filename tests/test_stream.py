@@ -1,0 +1,243 @@
+"""Streaming engine parity: the scanned time loop must be bit-exact with
+per-step dispatch on every observable — (labels·valid, valid, dropped) for
+the exchange streams, (spikes, dropped, final state) for the closed-loop
+emulation — across topologies (star / hierarchical) and datapaths
+(fused / unfused), per ISSUE 2."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (EventFrame, StarInterconnect, full_route_enables,
+                        identity_router, make_frame, route_step,
+                        route_step_hierarchical)
+from repro.kernels.spike_router.ops import fused_exchange, fused_exchange_stream
+from repro.snn import network as netlib
+from repro.snn import stream as stlib
+from repro.snn import init_feedforward, routing_matrices
+
+KEY = jax.random.key(11)
+
+
+def _stim_drives(key, n_steps, n_chips, batch, n_rows, p=0.3):
+    drives = jnp.zeros((n_steps, n_chips, batch, n_rows))
+    stim = (jax.random.uniform(key, (n_steps, batch, n_rows)) < p).astype(
+        jnp.float32)
+    return drives.at[:, 0].set(stim)
+
+
+def _stream_frames(key, n_steps, n_nodes, cap_in, p=0.6):
+    labels = jax.random.randint(key, (n_steps, n_nodes, cap_in), 0, 2**15)
+    valid = jax.random.uniform(jax.random.fold_in(key, 1),
+                               (n_steps, n_nodes, cap_in)) < p
+    frames, _ = make_frame(labels, None, valid, cap_in)
+    return frames
+
+
+# ---------------------------------------------------------------------------
+# Exchange-only streams: multi-step kernel / scan vs per-step dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["jax", "interpret"])
+def test_exchange_stream_matches_per_step_rounds(mode):
+    state = identity_router(4)
+    frames = _stream_frames(KEY, 6, 4, 16)
+    out_l, out_v, dropped = fused_exchange_stream(
+        frames.labels, frames.valid, state.fwd_tables, state.rev_tables,
+        state.route_enables, capacity=24, mode=mode)
+    for t in range(6):
+        l_t, v_t, d_t = fused_exchange(
+            frames.labels[t], frames.valid[t], state.fwd_tables,
+            state.rev_tables, state.route_enables, capacity=24)
+        assert jnp.array_equal(out_l[t], l_t)
+        assert jnp.array_equal(out_v[t], v_t)
+        assert jnp.array_equal(dropped[t], d_t)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_route_step_hierarchical_fused_unfused_agree(use_fused):
+    n_pods, per = 2, 3
+    state = identity_router(n_pods * per)
+    frames = _stream_frames(jax.random.fold_in(KEY, 2), 1, n_pods * per,
+                            20)
+    frames = jax.tree.map(lambda x: x[0], frames)
+    out, dropped = route_step_hierarchical(
+        state, frames, 16, n_pods=n_pods,
+        intra_enables=full_route_enables(per),
+        inter_enables=full_route_enables(n_pods), use_fused=use_fused)
+    ref, d_ref = route_step_hierarchical(
+        state, frames, 16, n_pods=n_pods,
+        intra_enables=full_route_enables(per),
+        inter_enables=full_route_enables(n_pods), use_fused=not use_fused)
+    assert jnp.array_equal(out.labels, ref.labels)
+    assert jnp.array_equal(out.valid, ref.valid)
+    assert jnp.array_equal(dropped, d_ref)
+
+
+@pytest.mark.slow
+def test_hierarchical_conserves_events():
+    """Σ delivered + Σ dropped == Σ events enabled onto each destination."""
+    n_pods, per = 2, 2
+    n = n_pods * per
+    state = identity_router(n)
+    frames = _stream_frames(jax.random.fold_in(KEY, 3), 1, n, 24)
+    frames = jax.tree.map(lambda x: x[0], frames)
+    out, dropped = route_step_hierarchical(
+        state, frames, 16, n_pods=n_pods,
+        intra_enables=full_route_enables(per),
+        inter_enables=full_route_enables(n_pods))
+    sent = int(frames.valid.sum(-1).sum())
+    per_node = frames.valid.sum(-1)
+    pods = per_node.reshape(n_pods, per)
+    expected = 0
+    for q in range(n_pods):
+        for j in range(per):
+            local = int(pods[q].sum() - pods[q, j])      # intra minus self
+            remote = int(pods.sum() - pods[q].sum())     # other pods, all
+            expected += local + remote
+    assert int(out.valid.sum()) + int(dropped.sum()) == expected
+
+
+@pytest.mark.slow
+def test_merge_pack_batched_rev_kernel_matches_oracle():
+    """Per-stream rev LUTs (hierarchical stacked path): Pallas interpret
+    mode vs the pure-jnp oracle."""
+    from repro.kernels.spike_router.ops import fused_merge_pack
+
+    state = identity_router(3)
+    key = jax.random.fold_in(KEY, 12)
+    labels = jax.random.randint(key, (3, 40), 0, 2**15)
+    valid = jax.random.uniform(jax.random.fold_in(key, 1), (3, 40)) < 0.7
+    out = fused_merge_pack(labels, valid, state.rev_tables, capacity=16,
+                           mode="jax")
+    out_i = fused_merge_pack(labels, valid, state.rev_tables, capacity=16,
+                             mode="interpret")
+    for a, b in zip(out, out_i):
+        assert jnp.array_equal(a, b)
+    with pytest.raises(ValueError):              # streams ≠ LUT rows
+        fused_merge_pack(labels[:2], valid[:2], state.rev_tables,
+                         capacity=16, mode="jax")
+
+
+def test_stream_fn_matches_exchange_fn_single_device():
+    state = identity_router(1)
+    mesh = jax.make_mesh((1,), ("chip",))
+    ic = StarInterconnect(mesh=mesh, node_axis="chip", capacity=16)
+    frames = _stream_frames(jax.random.fold_in(KEY, 4), 5, 1, 32, p=0.8)
+    enables = jnp.ones((1, 1), bool)
+    outs, drops = ic.stream_fn()(frames, state.fwd_tables, state.rev_tables,
+                                 enables)
+    ex = ic.exchange_fn()
+    for t in range(5):
+        out_t, d_t = ex(jax.tree.map(lambda x: x[t], frames),
+                        state.fwd_tables, state.rev_tables, enables)
+        assert jnp.array_equal(outs.labels[t], out_t.labels)
+        assert jnp.array_equal(outs.valid[t], out_t.valid)
+        assert jnp.array_equal(drops[t], d_t)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop emulation: run_stream vs per-step dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_run_stream_event_star_matches_per_step_loop(use_fused):
+    cfg = netlib.NetworkConfig(n_chips=3, capacity=64)   # tight → drops
+    params = init_feedforward(KEY, cfg)
+    drives = _stim_drives(jax.random.fold_in(KEY, 5), 8, 3, 2,
+                          cfg.chip.n_rows, p=0.5)
+    state = netlib.init_state(cfg, 2)
+    out = stlib.run_stream(params, state, drives, cfg, mode="event",
+                           use_fused=use_fused)
+    s_ref, spk_ref, drp_ref = netlib.run_event_steps(params, state, drives,
+                                                     cfg)
+    assert jnp.array_equal(out.spikes, spk_ref)
+    assert jnp.array_equal(out.dropped, drp_ref)
+    assert jnp.array_equal(out.state.inflight, s_ref.inflight)
+    assert jnp.array_equal(out.state.chips.neurons.v, s_ref.chips.neurons.v)
+    assert int(out.dropped.sum()) > 0                    # congestion exercised
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_run_stream_event_hierarchical_matches_per_step(use_fused):
+    n_pods, per = 2, 2
+    cfg = netlib.NetworkConfig(n_chips=n_pods * per, capacity=600)
+    params = init_feedforward(KEY, cfg)
+    drives = _stim_drives(jax.random.fold_in(KEY, 6), 6, cfg.n_chips, 2,
+                          cfg.chip.n_rows, p=0.4)
+    intra = full_route_enables(per)
+    inter = full_route_enables(n_pods)
+    kw = dict(mode="event", topology="hierarchical", n_pods=n_pods,
+              intra_enables=intra, inter_enables=inter, use_fused=use_fused)
+    state = netlib.init_state(cfg, 2)
+    out = stlib.run_stream(params, state, drives, cfg, **kw)
+    # Per-step dispatch of the identical pipeline: one-step streams chained
+    # from Python.
+    s = state
+    spikes, dropped = [], []
+    step = jax.jit(lambda st, d: stlib.run_stream(params, st, d, cfg, **kw))
+    for t in range(drives.shape[0]):
+        o = step(s, drives[t:t + 1])
+        s = o.state
+        spikes.append(o.spikes[0])
+        dropped.append(o.dropped[0])
+    assert jnp.array_equal(out.spikes, jnp.stack(spikes))
+    assert jnp.array_equal(out.dropped, jnp.stack(dropped))
+    assert jnp.array_equal(out.state.inflight, s.inflight)
+
+
+@pytest.mark.slow
+def test_run_stream_dense_matches_step_dense_loop():
+    cfg = netlib.NetworkConfig(n_chips=3, capacity=600)
+    params = init_feedforward(KEY, cfg)
+    mats = routing_matrices(params, cfg)
+    drives = _stim_drives(jax.random.fold_in(KEY, 7), 8, 3, 2,
+                          cfg.chip.n_rows)
+    state = netlib.init_state(cfg, 2)
+    out = stlib.run_stream(params, state, drives, cfg, mode="dense",
+                           route_mats=mats)
+    s = state
+    spikes = []
+    for t in range(drives.shape[0]):
+        s, spk = netlib.step_dense(params, s, drives[t], mats, cfg)
+        spikes.append(spk)
+    assert jnp.array_equal(out.spikes, jnp.stack(spikes))
+    assert jnp.array_equal(out.state.inflight, s.inflight)
+    assert int(out.dropped.sum()) == 0
+
+
+@pytest.mark.slow
+def test_run_stream_ring_delay_line_matches_shift_register():
+    """delay_steps > 1 exercises the double-buffered ring; final state must
+    come back in shift-register order."""
+    cfg = netlib.NetworkConfig(n_chips=2, capacity=600, dt_us=0.4)
+    assert cfg.delay_steps > 1
+    params = init_feedforward(KEY, cfg)
+    drives = _stim_drives(jax.random.fold_in(KEY, 8), 7, 2, 2,
+                          cfg.chip.n_rows, p=0.5)
+    state = netlib.init_state(cfg, 2)
+    out = stlib.run_stream(params, state, drives, cfg, mode="event")
+    s_ref, spk_ref, drp_ref = netlib.run_event_steps(params, state, drives,
+                                                     cfg)
+    assert jnp.array_equal(out.spikes, spk_ref)
+    assert jnp.array_equal(out.dropped, drp_ref)
+    assert jnp.array_equal(out.state.inflight, s_ref.inflight)
+
+
+def test_run_stream_rejects_bad_configs():
+    cfg = netlib.NetworkConfig(n_chips=2)
+    params = init_feedforward(KEY, cfg)
+    state = netlib.init_state(cfg, 1)
+    drives = jnp.zeros((2, 2, 1, cfg.chip.n_rows))
+    with pytest.raises(ValueError):
+        stlib.run_stream(params, state, drives, cfg, mode="dense")
+    with pytest.raises(ValueError):
+        stlib.run_stream(params, state, drives, cfg, topology="hierarchical")
+    with pytest.raises(ValueError):
+        stlib.run_stream(params, state, drives, cfg, mode="nope")

@@ -106,6 +106,38 @@ def test_pack_unpack_words_roundtrip(n_events):
     assert int(back.valid.sum()) == m
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.floats(0.0, 1.0))
+def test_pack_unpack_words_restores_capacity(capacity, valid_frac):
+    """Round-trip preserves the frame *capacity*, not just the events —
+    regression for unpack silently growing frames to ceil(cap/3)*3 slots
+    whenever capacity % 3 != 0."""
+    key = jax.random.fold_in(KEY, capacity * 101 + int(valid_frac * 97))
+    labels = jax.random.randint(key, (capacity,), 0, 2**16)
+    valid = jax.random.uniform(jax.random.fold_in(key, 1),
+                               (capacity,)) < valid_frac
+    frame, _ = make_frame(labels, jnp.zeros_like(labels), valid, capacity)
+    back = unpack_words(pack_words(frame), capacity=capacity)
+    assert back.labels.shape == frame.labels.shape
+    assert jnp.array_equal(back.labels, frame.labels)
+    assert jnp.array_equal(back.valid, frame.valid)
+
+
+def test_pack_unpack_capacity_roundtrip_regression():
+    """capacity=4 (not a multiple of 3) round-trips to exactly 4 slots."""
+    frame, _ = make_frame(jnp.array([7, 8, 9, 10], jnp.int32),
+                          jnp.zeros((4,), jnp.int32),
+                          jnp.array([True, True, True, True]), 4)
+    back = unpack_words(pack_words(frame), capacity=4)
+    assert back.capacity == 4
+    assert jnp.array_equal(back.labels, frame.labels)
+    assert jnp.array_equal(back.valid, frame.valid)
+    # Without the capacity the word-aligned view keeps the padding slots.
+    assert unpack_words(pack_words(frame)).capacity == 6
+    with pytest.raises(ValueError):
+        unpack_words(pack_words(frame), capacity=3)      # wrong word count
+
+
 # ---------------------------------------------------------------------------
 # Latency model — the paper's §IV/§V claims
 # ---------------------------------------------------------------------------
@@ -115,6 +147,23 @@ def test_mgt_path_is_0p3us():
     assert abs(DEFAULT_PARAMS.mgt_path_ns() - 300.0) < 15.0
 
 
+def test_cc_interval_single_source_of_truth():
+    """The clock-compensation interval derives from the transceiver ppm
+    budget in one place (link.py) and LatencyParams defaults from it —
+    regression for the 1000-vs-5000 constant disagreement."""
+    from repro.core.link import (cc_interval_words,
+                                 clock_compensation_stall_fraction)
+
+    assert DEFAULT_PARAMS.cc_interval == cc_interval_words()
+    assert clock_compensation_stall_fraction() == pytest.approx(
+        1.0 / DEFAULT_PARAMS.cc_interval)
+    # The interval actually responds to the ppm budget (the old stub
+    # del'd the argument).
+    assert cc_interval_words(200.0) == cc_interval_words(100.0) // 2
+    assert clock_compensation_stall_fraction(200.0) == pytest.approx(
+        2.0 * clock_compensation_stall_fraction(100.0))
+
+
 def test_cdc_is_60pct_of_non_mgt_delay():
     p = DEFAULT_PARAMS
     extra = p.fpga_to_fpga_ns() - p.mgt_path_ns()
@@ -122,6 +171,7 @@ def test_cdc_is_60pct_of_non_mgt_delay():
     assert 0.55 < cdc / extra < 0.65
 
 
+@pytest.mark.slow
 def test_chip_to_chip_latency_within_paper_band():
     """All rates: 0.9 µs ≤ median ≤ 1.3 µs (paper abstract / Fig 5)."""
     for rate in [1e6, 10e6, 50e6, 75e6, 83.3e6]:
@@ -131,12 +181,14 @@ def test_chip_to_chip_latency_within_paper_band():
         assert float(stats["p99_ns"]) <= 1350.0, rate
 
 
+@pytest.mark.slow
 def test_worst_regime_jitter_about_15pct():
     lats = simulate_fan_in(83.3e6, 32768, KEY)
     stats = latency_statistics(lats)
     assert 0.08 < float(stats["jitter_frac"]) < 0.30
 
 
+@pytest.mark.slow
 def test_latency_discretized_to_8ns():
     lats = simulate_fan_in(10e6, 1024, KEY)
     assert jnp.allclose(jnp.mod(lats, 8.0), 0.0)
