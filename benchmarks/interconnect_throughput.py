@@ -8,25 +8,9 @@ kernel fusion) and the Pallas kernel in interpret mode (semantics check —
 wall time is *not* TPU-representative).
 
 Writes ``BENCH_interconnect.json`` next to the CSV lines so the perf
-trajectory is tracked across PRs.  Key glossary (this module +
-``benchmarks/exchange_stream.py``, which merges its keys into the same
-file):
-
-  ``route_step_argsort_baseline[n=N]``   µs/call, seed datapath (argsort
-                                         compaction + broadcast copies).
-  ``route_step_cumsum_unfused[n=N]``     µs/call, cumsum pack unit, unfused
-                                         composition.
-  ``route_step_fused[n=N]``              µs/call, fused route-merge-pack.
-  ``spike_router_kernel_interpret[n=N]`` µs/call, Pallas interpret mode
-                                         (semantics check, not perf).
-  ``stream_loop_us_per_step[T,T=K]``     µs/step, one jit'd exchange round
-                                         dispatched K times from Python at
-                                         topology T.
-  ``stream_scan_us_per_step[T,T=K]``     µs/step, the streaming engine: all
-                                         K rounds in one compiled program.
-  ``stream_speedup[T,T=K]``              ratio loop/scan (×, not µs).
-  ``stream_scan_events_per_s[T,T=K]``    routed egress events per second
-                                         through the scanned engine.
+trajectory is tracked across PRs.  ``benchmarks/exchange_stream.py`` merges
+its ``stream_*`` keys into the same file; the full key glossary lives in the
+top-level README.md.
 """
 
 import json

@@ -14,6 +14,7 @@ the perf trajectory is machine-readable across PRs.
   roofline_table          §Roofline  all dry-run cells (needs results/)
 """
 
+import argparse
 import sys
 import traceback
 
@@ -35,9 +36,26 @@ ALL = [
 ]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(
+        description="Run the paper benchmarks (all nine modules by default).")
+    parser.add_argument(
+        "--only", action="append", metavar="NAME",
+        help="run only the named benchmark (repeatable); one of: "
+             + ", ".join(name for name, _ in ALL))
+    args = parser.parse_args(argv)
+
+    selected = ALL
+    if args.only:
+        known = {name for name, _ in ALL}
+        unknown = [n for n in args.only if n not in known]
+        if unknown:
+            parser.error(f"unknown benchmark(s) {unknown}; "
+                         f"choose from {sorted(known)}")
+        selected = [(name, fn) for name, fn in ALL if name in set(args.only)]
+
     failures = []
-    for name, fn in ALL:
+    for name, fn in selected:
         print(f"\n=== {name} ===")
         try:
             fn(verbose=True)

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# CI entry point: fast suite first (quick signal), then the full tier-1
+# suite — both with the repo's src/ on PYTHONPATH, as documented in README.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== fast suite (-m 'not slow') ==="
+python -m pytest -q -m "not slow"
+
+echo "=== full tier-1 suite ==="
+python -m pytest -x -q

@@ -3,8 +3,9 @@ deterministic-latency sparse-event interconnect (BrainScaleS-2 multi-chip)."""
 
 from repro.core.events import (  # noqa: F401
     EventFrame, PackedWords, empty_frame, make_frame, make_frame_argsort,
-    concatenate_frames, pack_words, unpack_words, words_required,
-    CapacityPolicy, SPIKES_PER_WORD,
+    make_frame_segmented, concatenate_frames, pack_words, unpack_words,
+    pack_wire16, unpack_wire16, words_required,
+    CapacityPolicy, SPIKES_PER_WORD, WIRE_VALID_BIT,
 )
 from repro.core.routing import (  # noqa: F401
     RoutingTables, build_fwd_table, build_rev_table, identity_tables,
@@ -13,9 +14,9 @@ from repro.core.routing import (  # noqa: F401
     aggregate, aggregate_baseline,
 )
 from repro.core.aggregator import (  # noqa: F401
-    RouterState, identity_router, route_step, route_step_baseline,
-    route_step_hierarchical, star_exchange, hierarchical_exchange,
-    StarInterconnect, fused_exchange_enabled,
+    RouterState, ExchangeDrops, identity_router, route_step,
+    route_step_baseline, route_step_hierarchical, star_exchange,
+    hierarchical_exchange, StarInterconnect, fused_exchange_enabled,
 )
 from repro.core.sync import (  # noqa: F401
     SyncConfig, barrier, barrier_release_time, refractory_mask,

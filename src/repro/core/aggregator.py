@@ -30,6 +30,22 @@ engine (chip step → egress tap → exchange → delay-line ingress per scan
 step) lives in ``repro.snn.stream.run_stream``.  The multi-step kernel
 behind both is ``repro.kernels.spike_router`` (grid over timesteps, LUTs
 resident in VMEM).
+
+Sparsity-aware datapath: the hardware never moves dense frames — only
+valid, packed events cross an MGT lane, as 16-bit words.  The software
+mirrors all three properties.  (1) ``link_capacity`` packs each sender's
+egress *before* the gather and ``pod_capacity`` packs each backplane's
+aggregated egress before the layer-2 gather, so gathered traffic is
+proportional to the provisioned event budget, not the frame capacity;
+overflow at these stages is an *uplink* drop, reported in
+``ExchangeDrops.uplink`` separately from destination congestion.  (2) The
+merges run the segmented pack unit (``events.make_frame_segmented`` /
+``_pack_segmented``), which on packed streams reduces per-destination work
+to a count reduction plus a bounded per-segment gather.  (3) Gathered
+streams travel as int16 wire words (``events.pack_wire16``: 15-bit label +
+valid bit), halving gather bandwidth; the merge kernel unpacks in place.
+With the capacities unset (or ≥ the raw sizes) every path is bit-exact
+with the dense datapath.
 """
 
 from __future__ import annotations
@@ -43,7 +59,9 @@ import jax.numpy as jnp
 
 from repro.compat import shard_map as _shard_map
 from repro.core import routing
-from repro.core.events import EventFrame, make_frame
+from repro.core.events import (EventFrame, make_frame, make_frame_segmented,
+                               pack_wire16, unpack_wire16)
+from repro.core.link import LinkConfig
 from repro.core.routing import RoutingTables
 
 
@@ -51,6 +69,26 @@ def fused_exchange_enabled() -> bool:
     """Default for ``use_fused`` — env-gated, on unless REPRO_FUSED_EXCHANGE=0."""
     return os.environ.get("REPRO_FUSED_EXCHANGE", "1").lower() not in (
         "0", "false", "off")
+
+
+class ExchangeDrops(NamedTuple):
+    """Loss accounting of one exchange round, split by drop point.
+
+    ``congestion``: destination pack-unit overflow (the receiving mux drops
+    under continued congestion — the paper's layer-1 loss semantics).
+    ``uplink``: sender-side overflow of the compact-before-gather stages —
+    events exceeding ``link_capacity`` on the Node-FPGA→Aggregator lane, or
+    ``pod_capacity`` on the backplane's second-layer uplink (attributed to
+    every node of the pod, whose gathered view loses the same events).
+    Both are 0-filled int32 arrays of matching shape; ``total`` sums them.
+    """
+
+    congestion: jax.Array
+    uplink: jax.Array
+
+    @property
+    def total(self) -> jax.Array:
+        return self.congestion + self.uplink
 
 
 class RouterState(NamedTuple):
@@ -91,6 +129,9 @@ def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
 
     Returns:
       (ingress frames [n_nodes, capacity], dropped counts [n_nodes]).
+      ``dropped`` is the plain congestion counter — the stacked single-star
+      round has no uplink stage (see ``route_step_hierarchical`` /
+      ``star_exchange`` for the ``ExchangeDrops``-returning paths).
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
@@ -120,8 +161,10 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
                             capacity: int, *, n_pods: int,
                             intra_enables: jax.Array,
                             inter_enables: jax.Array,
-                            use_fused: bool | None = None
-                            ) -> tuple[EventFrame, jax.Array]:
+                            use_fused: bool | None = None,
+                            link_capacity: int | None = None,
+                            pod_capacity: int | None = None
+                            ) -> tuple[EventFrame, ExchangeDrops]:
     """One two-layer (§V) exchange round with all nodes stacked on one device.
 
     Semantically identical to ``hierarchical_exchange`` run under
@@ -133,6 +176,15 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
     Like ``aggregate``, only validity masks are per-destination; labels stay
     shared views.
 
+    Sparsity-aware datapath: ``link_capacity`` packs every node's egress to
+    that many slots before any merging (only valid, packed events cross an
+    MGT lane); ``pod_capacity`` additionally packs each backplane's
+    aggregated egress before the pod-major layer-2 merge, shrinking
+    inter-backplane traffic from ``per·cap_in`` to ``pod_capacity`` per pod.
+    Overflow at either stage is an *uplink* drop, counted separately from
+    destination congestion.  With both ``None`` (or ≥ the raw stream sizes)
+    the round is bit-exact with the dense datapath.
+
     Args:
       state: stacked routing state for all ``n_pods * per_pod`` nodes.
       frames: per-node egress frames [n_nodes, cap_in], pod-major.
@@ -140,9 +192,12 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
       n_pods: number of backplanes (must divide n_nodes).
       intra_enables: bool[per_pod, per_pod] routes within each backplane.
       inter_enables: bool[n_pods, n_pods] routes between backplanes.
+      link_capacity: per-lane egress pack size (``None`` = dense frames).
+      pod_capacity: per-pod layer-2 uplink pack size (``None`` = dense).
 
     Returns:
-      (ingress frames [n_nodes, capacity], dropped counts [n_nodes]).
+      (ingress frames [n_nodes, capacity],
+       ExchangeDrops(congestion [n_nodes], uplink [n_nodes])).
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
@@ -157,41 +212,71 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
     pod_of = jnp.arange(n_nodes) // per
     node_of = jnp.arange(n_nodes) % per
 
+    # Uplink stage 1 — pack each node's egress to its MGT lane capacity.
+    if link_capacity is not None:
+        packed, link_drop = make_frame(wire, None, ev, link_capacity)
+        wire, ev = packed.labels, packed.valid           # [n_nodes, L]
+        lane = link_capacity
+    else:
+        link_drop = jnp.zeros((n_nodes,), jnp.int32)
+        lane = cap_in
+
     # Layer 1 — own backplane, node-major (== g1 of hierarchical_exchange).
-    wire_pods = wire.reshape(n_pods, per * cap_in)
-    local_labels = wire_pods[pod_of]                     # [n_nodes, per*cap_in]
-    ev_pods = ev.reshape(n_pods, per, cap_in)
+    wire_pods = wire.reshape(n_pods, per * lane)
+    local_labels = wire_pods[pod_of]                     # [n_nodes, per*lane]
+    ev_pods = ev.reshape(n_pods, per, lane)
     intra = jnp.asarray(intra_enables).astype(jnp.bool_)
     local_valid = (ev_pods[pod_of]
                    & intra.T[node_of][:, :, None]).reshape(n_nodes,
-                                                           per * cap_in)
+                                                           per * lane)
 
     # Layer 2 — every backplane pod-major, own pod excluded (== g2).
     inter = jnp.asarray(inter_enables).astype(jnp.bool_)
     pod_en = inter.T[pod_of] & (jnp.arange(n_pods)[None, :]
                                 != pod_of[:, None])      # [n_nodes, n_pods]
-    remote_valid = (ev_pods[None] & pod_en[:, :, None, None]
-                    ).reshape(n_nodes, n_nodes * cap_in)
+    if pod_capacity is not None:
+        # Uplink stage 2 — each pod packs its aggregated egress before the
+        # layer-2 merge; remote traffic is n_pods·pod_capacity, not n·cap_in.
+        up, pod_drop = make_frame(wire_pods, None,
+                                  ev.reshape(n_pods, per * lane),
+                                  pod_capacity)          # [n_pods, P]
+        remote_labels = jnp.broadcast_to(up.labels.reshape(1, -1),
+                                         (n_nodes, n_pods * pod_capacity))
+        remote_valid = (up.valid[None] & pod_en[:, :, None]
+                        ).reshape(n_nodes, n_pods * pod_capacity)
+        remote_segs = (pod_capacity,) * n_pods
+        uplink = (link_drop + pod_drop[pod_of]).astype(jnp.int32)
+    else:
+        remote_labels = jnp.broadcast_to(wire.reshape(1, -1),
+                                         (n_nodes, n_nodes * lane))
+        remote_valid = (ev_pods[None] & pod_en[:, :, None, None]
+                        ).reshape(n_nodes, n_nodes * lane)
+        remote_segs = (lane,) * n_nodes
+        uplink = link_drop.astype(jnp.int32)
 
-    labels = jnp.concatenate(
-        [local_labels,
-         jnp.broadcast_to(wire.reshape(1, -1), (n_nodes, n_nodes * cap_in))],
-        axis=-1)
+    labels = jnp.concatenate([local_labels, remote_labels], axis=-1)
     valid = jnp.concatenate([local_valid, remote_valid], axis=-1)
+    # Link-packed segments are front-compacted and only ever gated per whole
+    # segment, so the merge may take the bounded per-segment gather.
+    seg_lens = (lane,) * per + remote_segs
+    compact = link_capacity is not None
 
     if use_fused:
         from repro.kernels.spike_router.ops import fused_merge_pack
 
         out_l, out_v, dropped = fused_merge_pack(
-            labels, valid, state.rev_tables, capacity=capacity)
-        return EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
-                          valid=out_v), dropped
-    mixed, dropped = make_frame(labels, None, valid, capacity)
+            labels, valid, state.rev_tables, capacity=capacity,
+            seg_lens=seg_lens, compact=compact)
+        return (EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
+                           valid=out_v),
+                ExchangeDrops(congestion=dropped, uplink=uplink))
+    mixed, dropped = make_frame_segmented(labels, None, valid, capacity,
+                                          seg_lens, compact=compact)
     chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
     out_valid = mixed.valid & rev_en
     ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
                          times=mixed.times, valid=out_valid)
-    return ingress, dropped
+    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
 
 
 def route_step_baseline(state: RouterState, frames: EventFrame,
@@ -224,11 +309,15 @@ def star_exchange(frame: EventFrame,
                   rev_table: jax.Array,
                   route_enables: jax.Array,
                   capacity: int,
-                  use_fused: bool | None = None) -> tuple[EventFrame, jax.Array]:
+                  use_fused: bool | None = None,
+                  link_capacity: int | None = None
+                  ) -> tuple[EventFrame, ExchangeDrops]:
     """One exchange round from the perspective of a single node shard.
 
     Must run inside ``shard_map``.  ``frame`` holds this node's egress events
-    with shape [cap_in]; the return value is this node's ingress frame.
+    with shape [cap_in]; the return value is this node's ingress frame plus
+    its ``ExchangeDrops`` (scalars: congestion at this destination, uplink
+    overflow at this sender).
 
     The ``all_gather`` along ``axis_name`` is the star's up-link + broadcast;
     destination-side filtering with ``route_enables[src, me]``, the merge,
@@ -237,6 +326,13 @@ def star_exchange(frame: EventFrame,
     each receiving Node-FPGA.  The fwd LUT runs on the *sender* before the
     gather, so only wire labels travel; timestamps are discarded at egress
     (§III) and never gathered at all.
+
+    Sparsity-aware wire path: with ``link_capacity`` set, the sender packs
+    its egress to that many slots before the gather (only valid, packed
+    events cross the MGT lane; overflow is an uplink drop).  Either way the
+    gathered stream travels as int16 wire words (15-bit label + valid flag,
+    ``events.pack_wire16``), halving gather bandwidth vs int32 labels plus a
+    mask; the words are unpacked inside the merge kernel.
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
@@ -244,27 +340,41 @@ def star_exchange(frame: EventFrame,
     # Node egress (fwd LUT is local to this node).
     wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
     egress_valid = frame.valid & fwd_en
-    # Star broadcast: every node receives every node's egress frame.
-    g_labels = jax.lax.all_gather(wire, axis_name, axis=0)
-    g_valid = jax.lax.all_gather(egress_valid, axis_name, axis=0)
-    n_src = g_labels.shape[0]
-    valid = g_valid & route_enables[:, me][:, None]          # [n_src, cap_in]
-    flat_labels = g_labels.reshape(n_src * g_labels.shape[-1])
-    flat_valid = valid.reshape(n_src * g_labels.shape[-1])
+    # Uplink: compact-before-gather to the MGT lane capacity.
+    if link_capacity is not None:
+        packed, uplink = make_frame(wire, None, egress_valid, link_capacity)
+        wire, egress_valid = packed.labels, packed.valid
+    else:
+        uplink = jnp.zeros((), jnp.int32)
+    # Star broadcast: every node receives every node's egress — one int16
+    # gather instead of an int32 label gather plus a validity gather.
+    words = pack_wire16(wire, egress_valid)
+    g_words = jax.lax.all_gather(words, axis_name, axis=0)   # [n_src, lane]
+    n_src, lane = g_words.shape
+    # Per-source route enables; slot validity stays embedded in the words.
+    src_en = jnp.broadcast_to(route_enables[:, me][:, None], (n_src, lane))
+    flat_words = g_words.reshape(n_src * lane)
+    flat_en = src_en.reshape(n_src * lane)
+    seg_lens = (lane,) * n_src
+    compact = link_capacity is not None
     if use_fused:
         from repro.kernels.spike_router.ops import fused_merge_pack
 
         out_l, out_v, dropped = fused_merge_pack(
-            flat_labels, flat_valid, rev_table, capacity=capacity)
-        return EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
-                          valid=out_v), dropped
-    mixed, dropped = make_frame(flat_labels, None, flat_valid, capacity)
+            flat_words, flat_en, rev_table, capacity=capacity,
+            seg_lens=seg_lens, compact=compact)
+        return (EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
+                           valid=out_v),
+                ExchangeDrops(congestion=dropped, uplink=uplink))
+    g_labels, g_valid = unpack_wire16(flat_words)
+    mixed, dropped = make_frame_segmented(g_labels, None, g_valid & flat_en,
+                                          capacity, seg_lens, compact=compact)
     # Node ingress (reverse LUT local).
     chip, rev_en = routing.lookup_rev(rev_table, mixed.labels)
     out_valid = mixed.valid & rev_en
     ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
                          times=mixed.times, valid=out_valid)
-    return ingress, dropped
+    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
 
 
 def hierarchical_exchange(frame: EventFrame,
@@ -275,8 +385,10 @@ def hierarchical_exchange(frame: EventFrame,
                           intra_enables: jax.Array,
                           inter_enables: jax.Array,
                           capacity: int,
-                          use_fused: bool | None = None
-                          ) -> tuple[EventFrame, jax.Array]:
+                          use_fused: bool | None = None,
+                          link_capacity: int | None = None,
+                          pod_capacity: int | None = None
+                          ) -> tuple[EventFrame, ExchangeDrops]:
     """Two-layer star (§V): backplane aggregators joined by a second-layer node.
 
     ``intra_enables``: bool[n_node, n_node] routes within the backplane.
@@ -286,6 +398,16 @@ def hierarchical_exchange(frame: EventFrame,
 
     Intra-backplane traffic takes one gather (2 MGT hops); inter-backplane
     traffic takes both gathers (4 hops → the projected extra ≈0.4 µs).
+
+    Sparsity-aware wire path: ``link_capacity`` packs this node's egress
+    before the layer-1 gather; ``pod_capacity`` packs the backplane's
+    aggregated egress before the layer-2 gather, so inter-backplane traffic
+    shrinks from ``n_node·cap_in`` to ``pod_capacity`` words per pod.
+    Overflow at either pack is an uplink drop (the pod-uplink loss is seen
+    by — and attributed to — every node of the pod).  Both gathers move
+    int16 wire words (``events.pack_wire16``), unpacked inside the merge.
+    With both capacities ``None`` (or ≥ the raw sizes) the round is
+    bit-exact with the dense datapath.
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
@@ -294,39 +416,64 @@ def hierarchical_exchange(frame: EventFrame,
 
     wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
     egress_valid = frame.valid & fwd_en
+    if link_capacity is not None:
+        packed, uplink = make_frame(wire, None, egress_valid, link_capacity)
+        wire, egress_valid = packed.labels, packed.valid
+    else:
+        uplink = jnp.zeros((), jnp.int32)
 
-    # Layer 1: backplane-local star (wire labels only — no timestamps).
-    g1_labels = jax.lax.all_gather(wire, node_axis, axis=0)
-    g1_valid = jax.lax.all_gather(egress_valid, node_axis, axis=0)
-    n_node = g1_labels.shape[0]
-    local_valid = g1_valid & intra_enables[:, me_node][:, None]
+    # Layer 1: backplane-local star (int16 wire words — no timestamps, no
+    # separate validity plane).
+    words = pack_wire16(wire, egress_valid)
+    g1_words = jax.lax.all_gather(words, node_axis, axis=0)  # [n_node, lane]
+    n_node, lane = g1_words.shape
+    local_en = jnp.broadcast_to(intra_enables[:, me_node][:, None],
+                                (n_node, lane))
 
     # Layer 2: second-layer node joins the backplane aggregators.  Each
-    # backplane uplinks its full gathered egress; the receiving backplane
-    # accepts it if the inter-backplane route is enabled.
-    g2_labels = jax.lax.all_gather(g1_labels, pod_axis, axis=0)
-    g2_valid = jax.lax.all_gather(g1_valid, pod_axis, axis=0)
-    n_pod = g2_labels.shape[0]
+    # backplane uplinks its gathered egress — packed to ``pod_capacity``
+    # when set — and the receiving backplane accepts whole pods gated by the
+    # inter-backplane route enables.
+    if pod_capacity is not None:
+        g1_labels, g1_valid = unpack_wire16(g1_words)
+        up, pod_drop = make_frame(g1_labels.reshape(-1), None,
+                                  g1_valid.reshape(-1), pod_capacity)
+        up_words = pack_wire16(up.labels, up.valid)          # [pod_capacity]
+        uplink = uplink + pod_drop
+        remote_seg = pod_capacity
+    else:
+        up_words = g1_words.reshape(-1)                      # [n_node*lane]
+        remote_seg = lane
+    g2_words = jax.lax.all_gather(up_words, pod_axis, axis=0)
+    n_pod = g2_words.shape[0]
     pod_ids = jnp.arange(n_pod)
     pod_en = inter_enables[pod_ids, me_pod] & (pod_ids != me_pod)  # [n_pod]
-    remote_valid = g2_valid & pod_en[:, None, None]
+    remote_en = jnp.broadcast_to(pod_en[:, None],
+                                 (n_pod, g2_words.shape[1]))
 
-    labels = jnp.concatenate([g1_labels.reshape(-1), g2_labels.reshape(-1)])
-    valid = jnp.concatenate([local_valid.reshape(-1),
-                             remote_valid.reshape(-1)])
+    flat_words = jnp.concatenate([g1_words.reshape(-1), g2_words.reshape(-1)])
+    flat_en = jnp.concatenate([local_en.reshape(-1), remote_en.reshape(-1)])
+    # Segments at the finest front-compacted granularity: per-lane frames
+    # locally; per-pod uplink frames (or per-lane sub-frames) remotely.
+    seg_lens = (lane,) * n_node + (remote_seg,) * (g2_words.size // remote_seg)
+    compact = link_capacity is not None
     if use_fused:
         from repro.kernels.spike_router.ops import fused_merge_pack
 
         out_l, out_v, dropped = fused_merge_pack(
-            labels, valid, rev_table, capacity=capacity)
-        return EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
-                          valid=out_v), dropped
-    mixed, dropped = make_frame(labels, None, valid, capacity)
+            flat_words, flat_en, rev_table, capacity=capacity,
+            seg_lens=seg_lens, compact=compact)
+        return (EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
+                           valid=out_v),
+                ExchangeDrops(congestion=dropped, uplink=uplink))
+    g_labels, g_valid = unpack_wire16(flat_words)
+    mixed, dropped = make_frame_segmented(g_labels, None, g_valid & flat_en,
+                                          capacity, seg_lens, compact=compact)
     chip, rev_en = routing.lookup_rev(rev_table, mixed.labels)
     out_valid = mixed.valid & rev_en
     ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
                          times=mixed.times, valid=out_valid)
-    return ingress, dropped
+    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +493,13 @@ class StarInterconnect:
     ``use_fused=None`` (default) resolves through ``fused_exchange_enabled``
     at trace time, so the fused route-merge-pack kernel runs inside the
     shard_map'd exchange unless explicitly disabled.
+
+    ``link_capacity`` / ``pod_capacity`` switch on the compact-before-gather
+    uplink stages (see ``star_exchange`` / ``hierarchical_exchange``); the
+    returned drop counts are ``ExchangeDrops`` pytrees either way.
+    ``link_capacity`` may also come from the transceiver model: pass a
+    ``link.LinkConfig`` whose ``link_capacity`` field is set (explicit
+    ``link_capacity`` wins when both are given).
     """
 
     mesh: jax.sharding.Mesh
@@ -353,6 +507,14 @@ class StarInterconnect:
     pod_axis: str | None = None
     capacity: int = 256
     use_fused: bool | None = None
+    link_capacity: int | None = None
+    pod_capacity: int | None = None
+    link: "LinkConfig | None" = None
+
+    def _link_capacity(self) -> int | None:
+        if self.link_capacity is not None:
+            return self.link_capacity
+        return self.link.link_capacity if self.link is not None else None
 
     def _round(self):
         """Shared per-shard round: ``(round_fn, frame_spec, table_specs)``.
@@ -367,17 +529,26 @@ class StarInterconnect:
         node, pod = self.node_axis, self.pod_axis
         cap = self.capacity
         fused = self.use_fused
+        link_cap, pod_cap = self._link_capacity(), self.pod_capacity
         if pod is None:
+            if pod_cap is not None:
+                raise ValueError("pod_capacity requires a pod_axis (the "
+                                 "layer-2 uplink only exists on the "
+                                 "hierarchical topology)")
+
             def round_fn(frame, fwd, rev, enables):
                 return star_exchange(frame, node, fwd[0], rev[0], enables,
-                                     cap, use_fused=fused)
+                                     cap, use_fused=fused,
+                                     link_capacity=link_cap)
             shard = P(node)
             table_specs = (P(node), P(node), P())
         else:
             def round_fn(frame, fwd, rev, intra, inter):
                 return hierarchical_exchange(frame, node, pod, fwd[0],
                                              rev[0], intra, inter, cap,
-                                             use_fused=fused)
+                                             use_fused=fused,
+                                             link_capacity=link_cap,
+                                             pod_capacity=pod_cap)
             shard = P((pod, node))
             table_specs = (shard, shard, P(), P())
         return round_fn, shard, table_specs
@@ -388,12 +559,14 @@ class StarInterconnect:
         # squeeze it on entry and restore it on exit.
 
         def fn(frame, *tables):
-            out, dropped = round_fn(jax.tree.map(lambda x: x[0], frame),
-                                    *tables)
-            return (jax.tree.map(lambda x: x[None], out), dropped[None])
+            out, drops = round_fn(jax.tree.map(lambda x: x[0], frame),
+                                  *tables)
+            return (jax.tree.map(lambda x: x[None], out),
+                    jax.tree.map(lambda x: x[None], drops))
 
         in_specs = (EventFrame(shard, shard, shard), *table_specs)
-        out_specs = (EventFrame(shard, shard, shard), shard)
+        out_specs = (EventFrame(shard, shard, shard),
+                     ExchangeDrops(shard, shard))
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                   out_specs=out_specs))
 
@@ -417,10 +590,12 @@ class StarInterconnect:
                 return None, round_fn(fr, *tables)
 
             _, (outs, drops) = jax.lax.scan(body, None, frames)
-            return (jax.tree.map(lambda x: x[:, None], outs), drops[:, None])
+            return (jax.tree.map(lambda x: x[:, None], outs),
+                    jax.tree.map(lambda x: x[:, None], drops))
 
         tshard = P(None, *shard)                  # leading time axis
         in_specs = (EventFrame(tshard, tshard, tshard), *table_specs)
-        out_specs = (EventFrame(tshard, tshard, tshard), tshard)
+        out_specs = (EventFrame(tshard, tshard, tshard),
+                     ExchangeDrops(tshard, tshard))
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                   out_specs=out_specs))

@@ -25,6 +25,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 LABEL_DTYPE = jnp.int32
 TIME_DTYPE = jnp.int32
@@ -66,6 +67,25 @@ def empty_frame(capacity: int, batch_shape: tuple[int, ...] = ()) -> EventFrame:
     )
 
 
+def _rank_gather_pack(labels2, times2, csum, capacity: int):
+    """Shared gather-form pack tail: slot j holds the event of rank j+1,
+    located by a vectorized binary search on the monotone inclusive prefix
+    sum ``csum`` [b, n].  Returns (out_l, out_t, out_v, total, kept)."""
+    b, n = labels2.shape
+    total = csum[:, -1]
+    kept = jnp.minimum(total, capacity)
+    ranks = jnp.arange(1, capacity + 1, dtype=csum.dtype)
+    src = jax.vmap(lambda c: jnp.searchsorted(c, ranks, side="left"))(csum)
+    src = jnp.minimum(src, n - 1)                    # clamp empty-slot probes
+    out_v = jnp.arange(capacity, dtype=kept.dtype)[None] < kept[:, None]
+    out_l = jnp.where(out_v, jnp.take_along_axis(labels2, src, axis=-1), 0)
+    if times2 is None:
+        out_t = jnp.zeros((b, capacity), TIME_DTYPE)
+    else:
+        out_t = jnp.where(out_v, jnp.take_along_axis(times2, src, axis=-1), 0)
+    return out_l, out_t, out_v, total, kept
+
+
 def make_frame(labels, times, valid, capacity: int) -> tuple[EventFrame, jax.Array]:
     """Compact events to the front of a capacity-bounded frame.
 
@@ -100,19 +120,10 @@ def make_frame(labels, times, valid, capacity: int) -> tuple[EventFrame, jax.Arr
 
     ok = valid2.astype(jnp.int32)
     csum = jnp.cumsum(ok, axis=-1)                   # inclusive prefix sum
-    total = csum[:, -1]
-    kept = jnp.minimum(total, capacity)
-    # Slot j holds the event of rank j+1: first index where csum reaches j+1.
-    ranks = jnp.arange(1, capacity + 1, dtype=csum.dtype)
-    src = jax.vmap(lambda c: jnp.searchsorted(c, ranks, side="left"))(csum)
-    src = jnp.minimum(src, n - 1)                    # clamp empty-slot probes
-    out_v = jnp.arange(capacity, dtype=kept.dtype)[None] < kept[:, None]
-    out_l = jnp.where(out_v, jnp.take_along_axis(labels2, src, axis=-1), 0)
-    if times is None:
-        out_t = jnp.zeros((b, capacity), TIME_DTYPE)
-    else:
-        times2 = jnp.asarray(times, TIME_DTYPE).reshape(-1, n)
-        out_t = jnp.where(out_v, jnp.take_along_axis(times2, src, axis=-1), 0)
+    times2 = (None if times is None
+              else jnp.asarray(times, TIME_DTYPE).reshape(-1, n))
+    out_l, out_t, out_v, total, kept = _rank_gather_pack(labels2, times2,
+                                                         csum, capacity)
 
     frame = EventFrame(
         labels=out_l.reshape(*lead, capacity).astype(LABEL_DTYPE),
@@ -120,6 +131,111 @@ def make_frame(labels, times, valid, capacity: int) -> tuple[EventFrame, jax.Arr
         valid=out_v.reshape(*lead, capacity),
     )
     dropped = (total - kept).astype(jnp.int32).reshape(lead)
+    return frame, dropped
+
+
+def _segment_groups(seg_lens: tuple[int, ...]):
+    """Contiguous runs of equal segment length: [(first, last+1, length)]."""
+    groups = []
+    i = 0
+    while i < len(seg_lens):
+        j = i
+        while j < len(seg_lens) and seg_lens[j] == seg_lens[i]:
+            j += 1
+        groups.append((i, j, seg_lens[i]))
+        i = j
+    return groups
+
+
+def make_frame_segmented(labels, times, valid, capacity: int,
+                         seg_lens: tuple[int, ...], *,
+                         compact: bool = False) -> tuple[EventFrame, jax.Array]:
+    """Two-level (segmented) pack unit — bit-exact with ``make_frame``.
+
+    The trailing axis is treated as contiguous segments of ``seg_lens`` slots
+    (static; they must sum to ``labels.shape[-1]``).  Packing runs in two
+    levels: per-segment valid counts, a small exclusive scan over the segment
+    totals for base offsets, then per-segment placement — the per-destination
+    work is tiled over source blocks instead of one O(N) prefix-sum chain.
+    Because segments are contiguous, ``base[seg] + within-segment rank`` *is*
+    the global arrival rank, so order and drop counts are identical to the
+    global pack.
+
+    ``compact=True`` promises every segment's valid events are already
+    front-compacted (each segment is itself the output of a pack, as
+    guaranteed by the compact-before-gather exchange paths, and validity is
+    only ever gated per whole segment downstream).  The pack then gathers
+    output slot i straight from segment offsets located by a binary search
+    over the S segment totals — O(capacity·log S) index work, never touching
+    the N-slot stream beyond the count reduction.  Results are undefined if
+    the promise is broken.
+
+    Returns (frame, dropped_count) like ``make_frame``.
+    """
+    seg_lens = tuple(int(s) for s in seg_lens)
+    labels = jnp.asarray(labels, LABEL_DTYPE)
+    valid = jnp.asarray(valid, jnp.bool_)
+    lead = labels.shape[:-1]
+    n = labels.shape[-1]
+    if not seg_lens or min(seg_lens) <= 0 or sum(seg_lens) != n:
+        raise ValueError(f"seg_lens {seg_lens} must be positive and sum to "
+                         f"the stream length {n}")
+    n_seg = len(seg_lens)
+    starts = np.concatenate(([0], np.cumsum(seg_lens)))[:-1]
+    groups = _segment_groups(seg_lens)
+
+    labels2 = labels.reshape(-1, n)
+    valid2 = valid.reshape(-1, n)
+    times2 = (None if times is None
+              else jnp.asarray(times, TIME_DTYPE).reshape(-1, n))
+    b = labels2.shape[0]
+    ok = valid2.astype(jnp.int32)
+
+    # Level 1: per-segment counts (a reduction, not a scan).
+    counts = jnp.concatenate(
+        [ok[:, starts[i]:starts[i] + (j - i) * sl].reshape(b, j - i, sl)
+         .sum(axis=-1) for i, j, sl in groups], axis=-1)       # [b, n_seg]
+    # Level 2: exclusive scan over the S segment totals (S is small).
+    cum = jnp.cumsum(counts, axis=-1)
+    base = cum - counts
+    total = cum[:, -1]
+    kept = jnp.minimum(total, capacity)
+    dropped = (total - kept).astype(jnp.int32).reshape(lead)
+
+    if compact:
+        # Bounded per-segment gather: slot i lives in the segment whose
+        # cumulative count first exceeds i, at offset i - base[seg].
+        slots = jnp.arange(capacity, dtype=cum.dtype)
+        seg_of = jax.vmap(
+            lambda c: jnp.searchsorted(c, slots, side="right"))(cum)
+        seg_of = jnp.minimum(seg_of, n_seg - 1)
+        out_v = slots[None, :] < kept[:, None]
+        offset = slots[None, :] - jnp.take_along_axis(base, seg_of, axis=-1)
+        src = jnp.asarray(starts, jnp.int32)[seg_of] + offset
+        src = jnp.where(out_v, src, 0)
+        out_l = jnp.where(out_v, jnp.take_along_axis(labels2, src, axis=-1), 0)
+        if times2 is None:
+            out_t = jnp.zeros((b, capacity), TIME_DTYPE)
+        else:
+            out_t = jnp.where(out_v,
+                              jnp.take_along_axis(times2, src, axis=-1), 0)
+    else:
+        # General segments: within-segment inclusive scans + base offsets
+        # reassemble the global inclusive prefix sum without one length-N
+        # dependency chain; the tail is the shared rank gather.
+        csum = jnp.concatenate(
+            [(jnp.cumsum(ok[:, starts[i]:starts[i] + (j - i) * sl]
+                         .reshape(b, j - i, sl), axis=-1)
+              + base[:, i:j, None]).reshape(b, (j - i) * sl)
+             for i, j, sl in groups], axis=-1)                 # [b, n]
+        out_l, out_t, out_v, _, _ = _rank_gather_pack(labels2, times2, csum,
+                                                      capacity)
+
+    frame = EventFrame(
+        labels=out_l.reshape(*lead, capacity).astype(LABEL_DTYPE),
+        times=out_t.reshape(*lead, capacity).astype(TIME_DTYPE),
+        valid=out_v.reshape(*lead, capacity),
+    )
     return frame, dropped
 
 
@@ -166,6 +282,38 @@ def concatenate_frames(frames: list[EventFrame], capacity: int) -> tuple[EventFr
     times = jnp.concatenate([f.times for f in frames], axis=-1)
     valid = jnp.concatenate([f.valid for f in frames], axis=-1)
     return make_frame(labels, times, valid, capacity)
+
+
+# ---------------------------------------------------------------------------
+# 16-bit wire format (one int16 word per on-wire event slot)
+# ---------------------------------------------------------------------------
+
+# On the MGT lane an event is one 16-bit word: 15 label bits (one MGT bit is
+# reserved for command messages, mirrored by ``routing.WIRE_LABEL_BITS``) —
+# the software wire format reuses that spare bit as the slot-validity flag,
+# so gathered exchange streams travel as int16 instead of int32 labels plus
+# a separate mask, halving gather bandwidth.
+WIRE_WORD_DTYPE = jnp.int16
+WIRE_VALID_BIT = 15
+WIRE_PAYLOAD_MASK = (1 << WIRE_VALID_BIT) - 1
+
+
+def pack_wire16(labels, valid) -> jax.Array:
+    """Encode (15-bit wire labels, validity) into int16 wire words.
+
+    Invalid slots encode as word 0 regardless of their label payload, so
+    packed frames keep their zero-filled padding on the wire.
+    """
+    labels = jnp.asarray(labels, jnp.int32) & WIRE_PAYLOAD_MASK
+    valid = jnp.asarray(valid).astype(jnp.int32)
+    word = jnp.where(valid == 1, labels | (1 << WIRE_VALID_BIT), 0)
+    return word.astype(WIRE_WORD_DTYPE)
+
+
+def unpack_wire16(words) -> tuple[jax.Array, jax.Array]:
+    """Decode int16 wire words into (int32 15-bit labels, bool validity)."""
+    w = jnp.asarray(words).astype(jnp.int32) & 0xFFFF
+    return w & WIRE_PAYLOAD_MASK, (w >> WIRE_VALID_BIT) == 1
 
 
 # ---------------------------------------------------------------------------

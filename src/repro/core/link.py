@@ -52,6 +52,13 @@ class LinkConfig:
     # Fixed transceiver latency (PCS/PMA pipelines) besides serialization;
     # calibrated so one MGT hop ≈ 150 ns (two hops = 0.3 µs, §IV).
     fixed_latency_ns: float = 146.0
+    # Events one lane admits per exchange round (the software datapath's
+    # compact-before-gather frame size).  Only valid, packed events ever
+    # cross an MGT lane, so senders pack their egress to this capacity
+    # *before* the gather; overflow is an uplink drop, counted separately
+    # from destination congestion.  ``None`` disables the uplink stage
+    # (dense frames travel whole — the pre-sparsity behaviour).
+    link_capacity: int | None = None
 
     def __post_init__(self):
         if self.line_rate_gbps > self.encoding.max_line_rate_gbps:
@@ -83,6 +90,14 @@ class LinkConfig:
         """
         wire_limit = self.payload_rate_gbps() * 1e9 / WORD_BITS
         return min(MGT_USER_CLOCK_HZ, wire_limit)
+
+    def events_per_window(self, window_us: float) -> int:
+        """Events the lane can carry in one exchange window — the
+        hardware-faithful way to size ``link_capacity`` for a given timestep
+        (event rate minus the clock-compensation stall share)."""
+        rate = self.max_event_rate_hz() * (
+            1.0 - clock_compensation_stall_fraction())
+        return max(1, int(rate * window_us * 1e-6))
 
 
 # The paper's deployed configuration and its rejected alternative.

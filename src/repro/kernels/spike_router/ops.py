@@ -122,21 +122,44 @@ def fused_exchange_stream(labels: jax.Array, valid: jax.Array,
     return out_l, out_v.astype(jnp.bool_), dropped
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "mode"))
+@functools.partial(jax.jit, static_argnames=("capacity", "mode", "seg_lens",
+                                             "compact"))
 def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
-                     *, capacity: int, mode: str | None = None):
+                     *, capacity: int, mode: str | None = None,
+                     seg_lens: tuple[int, ...] | None = None,
+                     compact: bool = False):
     """Merge + pack + rev LUT for pre-routed wire-label streams.
 
     labels, valid: [..., n_events] (fwd LUT + route enables already applied);
+    ``labels`` is int32 wire labels or int16 wire words
+    (``events.pack_wire16``) whose embedded valid bit is unpacked inside the
+    merge and ANDed with ``valid``.  ``valid`` must match ``labels``
+    slot-for-slot — implicit broadcasting is rejected.
     rev_lut: int32[2^15] shared across the batch, or int32[batch, 2^15] with
     one LUT per stream (the leading label dims must flatten to ``batch``).
+    seg_lens: static per-source-segment slot counts along the event axis —
+    the pack runs as the two-level segmented unit tiled over source blocks.
+    compact: promise that every segment's valid events are front-compacted
+    (compact-before-gather streams), enabling the bounded per-segment gather
+    on the oracle path.
 
     Returns (out_labels i32[..., capacity], out_valid bool[..., capacity],
              dropped i32[...]).
     """
     if mode is None:
         mode = default_mode()
-    labels = labels.astype(jnp.int32)
+    if valid.shape != labels.shape:
+        raise ValueError(
+            f"valid shape {valid.shape} must match labels shape "
+            f"{labels.shape} slot-for-slot; implicit broadcasting would "
+            "mis-rank the merge stream in the pack unit")
+    if seg_lens is not None:
+        seg_lens = tuple(int(s) for s in seg_lens)
+        if sum(seg_lens) != labels.shape[-1]:
+            raise ValueError(f"seg_lens {seg_lens} must sum to the stream "
+                             f"length {labels.shape[-1]}")
+    if labels.dtype != jnp.int16:      # int16 = wire words, decoded in-kernel
+        labels = labels.astype(jnp.int32)
     if rev_lut.ndim == 2:
         n_streams = 1
         for d in labels.shape[:-1]:
@@ -147,14 +170,21 @@ def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
                 f"match {n_streams} streams (labels {labels.shape})")
     if mode == MODE_JAX:
         out_l, out_v, dropped = _ref.merge_pack_ref(
-            labels, valid, rev_lut, capacity=capacity)
+            labels, valid, rev_lut, capacity=capacity, seg_lens=seg_lens,
+            compact=compact)
     elif mode in (MODE_PALLAS, MODE_INTERPRET):
         lead = labels.shape[:-1]
         n = labels.shape[-1]
+        # The Pallas pack tiles over segments only when they are uniform;
+        # mixed-length sections fall back to the global unit (identical
+        # semantics — tiling is a scheduling choice, not a semantic one).
+        n_segments = 1
+        if seg_lens and len(set(seg_lens)) == 1:
+            n_segments = len(seg_lens)
         out_l, out_v, dropped = merge_pack_fwd(
             labels.reshape(-1, n), valid.reshape(-1, n).astype(jnp.int32),
             rev_lut.astype(jnp.int32), capacity=capacity,
-            interpret=mode == MODE_INTERPRET)
+            interpret=mode == MODE_INTERPRET, n_segments=n_segments)
         out_l = out_l.reshape(*lead, capacity)
         out_v = out_v.reshape(*lead, capacity)
         dropped = dropped.reshape(lead)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.events import make_frame
+from repro.core.events import make_frame, make_frame_segmented, unpack_wire16
 from repro.core.routing import lookup_fwd, lookup_rev
 
 
@@ -46,12 +46,14 @@ def exchange_ref(labels, valid, fwd_luts, rev_luts, enables, *,
     n = n_src * cap_in
 
     wire, fwd_en = jax.vmap(lookup_fwd)(fwd_luts, labels)
-    # Shared src-major stream; per-destination validity mask only.
+    # Shared src-major stream; per-destination validity mask only.  The
+    # segmented pack tiles the merge over the n_src source blocks.
     flat_wire = wire.reshape(n)
     ok = (valid & fwd_en)[:, None, :] & enables[:, :, None]
     ok = jnp.swapaxes(ok, 0, 1).reshape(n_dst, n)
-    frame, dropped = make_frame(jnp.broadcast_to(flat_wire[None], (n_dst, n)),
-                                None, ok, capacity)
+    frame, dropped = make_frame_segmented(
+        jnp.broadcast_to(flat_wire[None], (n_dst, n)), None, ok, capacity,
+        (cap_in,) * n_src)
     chip, rev_en = jax.vmap(lookup_rev)(rev_luts, frame.labels)
     out_valid = frame.valid & rev_en
     out_labels = jnp.where(out_valid, chip, 0)
@@ -81,18 +83,32 @@ def exchange_stream_ref(labels, valid, fwd_luts, rev_luts, enables, *,
     return outs
 
 
-def merge_pack_ref(labels, valid, rev_lut, *, capacity: int):
+def merge_pack_ref(labels, valid, rev_lut, *, capacity: int,
+                   seg_lens: tuple[int, ...] | None = None,
+                   compact: bool = False):
     """Merge-pack-rev oracle matching ``merge_pack_fwd``.
 
-    labels, valid: [..., n_events] pre-routed wire labels;
+    labels, valid: [..., n_events] pre-routed wire labels; ``labels`` may be
+    int16 wire words (``events.pack_wire16``) — the embedded valid bit is
+    unpacked here and ANDed with ``valid``.  ``seg_lens`` switches the pack
+    to the two-level segmented unit (static per-segment slot counts);
+    ``compact`` additionally promises front-compacted segments, enabling the
+    bounded per-segment gather.
     rev_lut: [2^15] shared, or [batch, 2^15] per-stream (the leading label
     dims must then flatten to ``batch``).
     Returns (out_labels i32[..., capacity], out_valid i32[..., capacity],
              dropped i32[...]).
     """
-    labels = jnp.asarray(labels, jnp.int32)
     valid = jnp.asarray(valid).astype(jnp.bool_)
-    frame, dropped = make_frame(labels, None, valid, capacity)
+    if jnp.asarray(labels).dtype == jnp.int16:
+        labels, word_valid = unpack_wire16(labels)
+        valid = valid & word_valid
+    labels = jnp.asarray(labels, jnp.int32)
+    if seg_lens is None:
+        frame, dropped = make_frame(labels, None, valid, capacity)
+    else:
+        frame, dropped = make_frame_segmented(labels, None, valid, capacity,
+                                              seg_lens, compact=compact)
     if rev_lut.ndim == 2:
         lead = frame.labels.shape[:-1]
         flat = frame.labels.reshape(rev_lut.shape[0], capacity)

@@ -27,11 +27,21 @@ Four kernels cover the datapath at increasing fusion depth:
                           the streaming engine.
 ``_merge_pack_kernel``    merge + pack + rev LUT for one already-fwd-routed
                           event stream; the rev LUT may be shared across the
-                          batch or per-row (hierarchical stacked routing).
-                          Used by the ``shard_map`` exchanges
+                          batch or per-row (hierarchical stacked routing);
+                          the stream may arrive as int16 wire words
+                          (``events.pack_wire16``), unpacked in-kernel, and
+                          the pack may be tiled over uniform source
+                          segments.  Used by the ``shard_map`` exchanges
                           (``star_exchange`` / ``hierarchical_exchange``)
                           where the fwd LUT runs on the sender before
                           ``all_gather``.
+
+The pack unit comes in two forms: ``_pack`` (global cumsum + bounded
+scatter) and ``_pack_segmented`` (per-segment ranks + a small scan over
+segment totals + the same bounded scatter — identical semantics, the rank
+computation tiled over source blocks instead of one O(n_src·cap_in)
+chain).  The jnp twin with the compact-segments gather fast path is
+``repro.core.events.make_frame_segmented``.
 
 TPU adaptation: the 64 Ki-entry LUT (256 KiB as int32) fits entirely in
 VMEM — the BRAM of the TPU — so tables are mapped as unblocked inputs.
@@ -59,7 +69,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 # Bit layout of the LUT entries is owned by repro.core.routing (the table
-# builders); the kernels decode with the same constants.
+# builders); the 16-bit wire-word layout by repro.core.events.  The kernels
+# decode with the same constants.
+from repro.core.events import WIRE_VALID_BIT
 from repro.core.routing import (CHIP_LABEL_MASK as CHIP_MASK,
                                 FWD_ENABLE_BIT as ENABLE_BIT,
                                 FWD_TABLE_SIZE, REV_ENABLE_BIT,
@@ -67,9 +79,9 @@ from repro.core.routing import (CHIP_LABEL_MASK as CHIP_MASK,
 
 
 def _pack(ok: jax.Array, payload: jax.Array, capacity: int):
-    """The pack unit: cumsum-compact ``payload`` where ``ok``, bounded by
-    ``capacity``.  Returns (packed_payload [capacity], packed_valid [capacity],
-    dropped scalar)."""
+    """The global pack unit: cumsum-compact ``payload`` where ``ok``, bounded
+    by ``capacity``.  Returns (packed_payload [capacity], packed_valid
+    [capacity], dropped scalar)."""
     pos = jnp.cumsum(ok) - ok                    # exclusive prefix sum
     keep = (ok == 1) & (pos < capacity)
     # Park rejected events in an overflow slot, then slice it away.
@@ -79,6 +91,33 @@ def _pack(ok: jax.Array, payload: jax.Array, capacity: int):
     out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(
         jnp.where(keep, 1, 0))
     dropped = jnp.sum(ok) - jnp.sum(jnp.where(keep, 1, 0))
+    return out_p[:capacity], out_v[:capacity], dropped
+
+
+def _pack_segmented(ok: jax.Array, payload: jax.Array, capacity: int):
+    """The segmented (two-level) pack unit, tiled over source segments.
+
+    ok, payload: [n_seg, seg_len] — contiguous equal-length segments of the
+    merge stream (one per source block).  Level 1 ranks events *within* each
+    segment (short independent prefix sums instead of one O(n_seg·seg_len)
+    chain); level 2 is a tiny exclusive scan over the per-segment totals for
+    the base offsets; the bounded scatter then places ``base[seg] + rank``,
+    which is exactly the global arrival rank — bit-exact with ``_pack`` on
+    the flattened stream, including drop counts and arrival order.
+    Returns (packed_payload [capacity], packed_valid [capacity], dropped).
+    """
+    counts = jnp.sum(ok, axis=-1)                # [n_seg] per-segment totals
+    base = jnp.cumsum(counts) - counts           # exclusive scan, S elements
+    within = jnp.cumsum(ok, axis=-1) - ok        # per-segment exclusive ranks
+    pos = (base[:, None] + within).reshape(-1)
+    okf = ok.reshape(-1)
+    keep = (okf == 1) & (pos < capacity)
+    idx = jnp.where(keep, pos, capacity)
+    out_p = jnp.zeros((capacity + 1,), jnp.int32).at[idx].set(
+        jnp.where(keep, payload.reshape(-1), 0))
+    out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(
+        jnp.where(keep, 1, 0))
+    dropped = jnp.sum(okf) - jnp.sum(jnp.where(keep, 1, 0))
     return out_p[:capacity], out_v[:capacity], dropped
 
 
@@ -116,9 +155,9 @@ def _exchange_body(labels, valid, fwd, rev, en_col, capacity: int):
     # Aggregator: static route enable for (src, this destination).
     ok = (valid * fwd_en * en_col[:, None]).astype(jnp.int32)
 
-    # Multi-source merge is src-major flattening (arrival order), then pack.
-    packed_w, packed_v, dropped = _pack(ok.reshape(-1), wire.reshape(-1),
-                                        capacity)
+    # Multi-source merge is src-major (arrival order); the segmented pack
+    # tiles the rank computation over the source blocks.
+    packed_w, packed_v, dropped = _pack_segmented(ok, wire, capacity)
 
     # rev LUT at the receiving node; rev-disabled events keep their slot but
     # are invalidated silently (not counted as congestion drops) — §III.
@@ -168,13 +207,34 @@ def _exchange_stream_kernel(labels_ref, valid_ref, fwd_ref, rev_ref,
 
 def _merge_pack_kernel(labels_ref, valid_ref, rev_ref, out_labels_ref,
                        out_valid_ref, dropped_ref, *, capacity: int,
-                       batched_rev: bool = False):
-    """Merge + pack + rev LUT for one pre-routed wire-label stream."""
-    labels = labels_ref[0]                       # [N] int32 wire labels
+                       batched_rev: bool = False, n_segments: int = 1,
+                       wire16: bool = False):
+    """Merge + pack + rev LUT for one pre-routed wire-label stream.
+
+    ``wire16``: the label stream carries int16 wire words (15-bit label,
+    valid flag in bit 15, as emitted by ``events.pack_wire16``) — the word is
+    unpacked here, inside the kernel, and its embedded valid bit is ANDed
+    with the caller's (route-enable) mask.  ``n_segments > 1`` tiles the pack
+    unit over that many equal source segments.
+    """
+    labels = labels_ref[0]                       # [N] wire labels / words
     ok = valid_ref[0].astype(jnp.int32)          # [N] 0/1
     rev = rev_ref[0] if batched_rev else rev_ref[...]   # [2^15]
 
-    packed_w, packed_v, dropped = _pack(ok, labels, capacity)
+    if wire16:
+        word = labels.astype(jnp.int32) & 0xFFFF
+        ok = ok * ((word >> WIRE_VALID_BIT) & 1)
+        labels = word & WIRE_MASK
+    else:
+        labels = labels.astype(jnp.int32)
+
+    if n_segments > 1:
+        seg_len = ok.shape[0] // n_segments
+        packed_w, packed_v, dropped = _pack_segmented(
+            ok.reshape(n_segments, seg_len),
+            labels.reshape(n_segments, seg_len), capacity)
+    else:
+        packed_w, packed_v, dropped = _pack(ok, labels, capacity)
 
     rentry = jnp.take(rev, packed_w & WIRE_MASK, axis=0)
     chip = rentry & CHIP_MASK
@@ -293,11 +353,16 @@ def exchange_stream_fwd(labels: jax.Array, valid: jax.Array,
 
 
 def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
-                   capacity: int, interpret: bool = True):
+                   capacity: int, interpret: bool = True,
+                   n_segments: int = 1):
     """Merge-pack-rev pallas_call over a batch of pre-routed streams.
 
-    labels, valid: int32[batch, n_events] wire labels (fwd LUT already
-    applied, route enables already folded into ``valid``);
+    labels, valid: [batch, n_events] wire labels (fwd LUT already applied,
+    route enables already folded into ``valid``).  ``labels`` is int32 wire
+    labels, or int16 wire words (``events.pack_wire16``: 15-bit label plus
+    the valid flag in bit 15) unpacked inside the kernel and ANDed with
+    ``valid``.  ``n_segments`` tiles the pack unit over that many
+    equal-length source segments (must divide ``n_events``).
     rev_lut: int32[2^15] shared across the batch, or int32[batch, 2^15] with
     one reverse LUT per stream (stacked hierarchical routing).
     Returns (out_labels i32[batch, capacity], out_valid i32[batch, capacity],
@@ -305,6 +370,10 @@ def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
     """
     batch, n_events = labels.shape
     grid = (batch,)
+    wire16 = labels.dtype == jnp.int16
+    if n_events % n_segments:
+        raise ValueError(f"n_segments {n_segments} must divide the stream "
+                         f"length {n_events}")
 
     batched_rev = rev_lut.ndim == 2
     ev_spec = pl.BlockSpec((1, n_events), lambda b: (b, 0))
@@ -316,7 +385,8 @@ def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
     drop_spec = pl.BlockSpec((1, 1), lambda b: (b, 0))
 
     kernel = functools.partial(_merge_pack_kernel, capacity=capacity,
-                               batched_rev=batched_rev)
+                               batched_rev=batched_rev,
+                               n_segments=n_segments, wire16=wire16)
     return pl.pallas_call(
         kernel,
         grid=grid,

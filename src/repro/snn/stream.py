@@ -53,7 +53,10 @@ class StreamOut(NamedTuple):
 
     state: netlib.NetworkState
     spikes: jax.Array    # f32[T, n_chips, batch, n_neurons]
-    dropped: jax.Array   # i32[T, n_chips, batch] (zeros in dense mode)
+    dropped: jax.Array   # i32[T, n_chips, batch] egress + congestion drops
+    #                      (zeros in dense mode)
+    uplink_dropped: jax.Array  # i32[T, n_chips, batch] compact-before-gather
+    #                      drops (nonzero only with link/pod capacities set)
 
 
 def _egress_label_grid(cfg: netlib.NetworkConfig) -> jax.Array:
@@ -72,7 +75,9 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                n_pods: int = 1,
                intra_enables: jax.Array | None = None,
                inter_enables: jax.Array | None = None,
-               use_fused: bool | None = None) -> StreamOut:
+               use_fused: bool | None = None,
+               link_capacity: int | None = None,
+               pod_capacity: int | None = None) -> StreamOut:
     """Scan the full emulation pipeline over ``ext_drives``.
 
     Args:
@@ -84,10 +89,15 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         ``inter_enables``, event mode only — the dense surrogate encodes
         topology in ``route_mats``).
       use_fused: event mode only; forwarded to the exchange kernels.
+      link_capacity / pod_capacity: hierarchical event mode only — the
+        compact-before-gather uplink stages of
+        ``route_step_hierarchical``; overflow lands in
+        ``StreamOut.uplink_dropped``, not ``dropped``.
 
     Returns:
-      ``StreamOut(state, spikes, dropped)`` — bit-exact with the equivalent
-      per-step loop (``run_event_steps`` / ``step_dense`` iterated).
+      ``StreamOut(state, spikes, dropped, uplink_dropped)`` — bit-exact
+      with the equivalent per-step loop (``run_event_steps`` /
+      ``step_dense`` iterated).
     """
     if mode not in ("event", "dense"):
         raise ValueError(f"unknown mode: {mode!r}")
@@ -102,6 +112,11 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                                        or inter_enables is None):
         raise ValueError("hierarchical topology requires intra_enables and "
                          "inter_enables")
+    if topology != "hierarchical" and (link_capacity is not None
+                                       or pod_capacity is not None):
+        raise ValueError("link_capacity/pod_capacity are uplink stages of "
+                         "the hierarchical topology (the stacked star round "
+                         "has none)")
 
     n_steps = ext_drives.shape[0]
     delay = state.inflight.shape[0]
@@ -109,12 +124,16 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
 
     def exchange(frames):
         if topology == "star":
-            return agg.route_step(params.router, frames, cfg.capacity,
-                                  use_fused=use_fused)
+            ingress, congestion = agg.route_step(params.router, frames,
+                                                 cfg.capacity,
+                                                 use_fused=use_fused)
+            return ingress, agg.ExchangeDrops(
+                congestion=congestion, uplink=jnp.zeros_like(congestion))
         return agg.route_step_hierarchical(
             params.router, frames, cfg.capacity, n_pods=n_pods,
             intra_enables=intra_enables, inter_enables=inter_enables,
-            use_fused=use_fused)
+            use_fused=use_fused, link_capacity=link_capacity,
+            pod_capacity=pod_capacity)
 
     def event_route(spikes):
         """Egress tap → exchange → ingress decode, vmapped over batch."""
@@ -122,14 +141,14 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         def one_batch(spk_b):  # [n_chips, n_neurons]
             frames, egress_drop = make_frame(labels_grid, None, spk_b > 0.5,
                                              cfg.capacity)
-            ingress, agg_drop = exchange(frames)
+            ingress, drops = exchange(frames)
             drives = jax.vmap(
                 lambda lab, val, rmap: chiplib.labels_to_rows(
                     lab[None], val[None], rmap, cfg.chip.n_rows)[0])(
                         ingress.labels, ingress.valid, params.row_of_label)
-            return drives, egress_drop + agg_drop
+            return drives, egress_drop + drops.congestion, drops.uplink
 
-        return jax.vmap(one_batch, in_axes=1, out_axes=(1, 1))(spikes)
+        return jax.vmap(one_batch, in_axes=1, out_axes=(1, 1, 1))(spikes)
 
     def body(carry, drive_t):
         chips, inflight, t = carry
@@ -143,15 +162,16 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         if mode == "dense":
             routed = jnp.einsum("sbn,sdnr->dbr", spikes, route_mats)
             dropped = jnp.zeros(spikes.shape[:2], jnp.int32)
+            uplink = dropped
         else:
-            routed, dropped = event_route(spikes)
+            routed, dropped, uplink = event_route(spikes)
         # Egress: the consumed slot is exactly the one due ``delay`` steps
         # out — overwrite it in place (double buffering, no shift copy).
         inflight = jax.lax.dynamic_update_index_in_dim(inflight, routed,
                                                        slot, 0)
-        return (new_chips, inflight, t + 1), (spikes, dropped)
+        return (new_chips, inflight, t + 1), (spikes, dropped, uplink)
 
-    (chips, inflight, _), (spikes, dropped) = jax.lax.scan(
+    (chips, inflight, _), (spikes, dropped, uplink) = jax.lax.scan(
         body, (state.chips, state.inflight, jnp.int32(0)), ext_drives)
     # Restore shift-register order so the final state is bit-exact with the
     # per-step path (slot ``t % delay`` was written last).
@@ -159,4 +179,4 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         inflight = jnp.roll(inflight, -(n_steps % delay), axis=0)
     return StreamOut(state=netlib.NetworkState(chips=chips,
                                                inflight=inflight),
-                     spikes=spikes, dropped=dropped)
+                     spikes=spikes, dropped=dropped, uplink_dropped=uplink)

@@ -154,8 +154,10 @@ def test_star_exchange_fused_matches_unfused_single_device():
     o2, d2 = outs[False]
     assert jnp.array_equal(o1.labels, o2.labels)
     assert jnp.array_equal(o1.valid, o2.valid)
-    assert jnp.array_equal(d1, d2)
-    assert int(o1.valid.sum()) + int(d1.sum()) == int(frames.valid.sum())
+    assert jnp.array_equal(d1.congestion, d2.congestion)
+    assert jnp.array_equal(d1.uplink, d2.uplink)
+    assert (int(o1.valid.sum()) + int(d1.congestion.sum())
+            == int(frames.valid.sum()))
 
 
 # ---------------------------------------------------------------------------

@@ -62,9 +62,10 @@ def test_star_exchange_on_8_chips():
         out, dropped = fn(frames, st.fwd_tables, st.rev_tables,
                           st.route_enables)
         # all-to-all minus self: each chip receives 7 × 8 events
-        print("COUNTS", out.count().tolist(), int(dropped.sum()))
+        print("COUNTS", out.count().tolist(), int(dropped.congestion.sum()),
+              int(dropped.uplink.sum()))
     """)
-    assert "COUNTS [56, 56, 56, 56, 56, 56, 56, 56] 0" in out
+    assert "COUNTS [56, 56, 56, 56, 56, 56, 56, 56] 0 0" in out
 
 
 def test_stream_fn_matches_per_step_exchange_on_8_chips():
@@ -89,7 +90,8 @@ def test_stream_fn_matches_per_step_exchange_on_8_chips():
                       st.rev_tables, st.route_enables)
             ok &= bool(jnp.array_equal(outs.labels[t], o.labels))
             ok &= bool(jnp.array_equal(outs.valid[t], o.valid))
-            ok &= bool(jnp.array_equal(drops[t], d))
+            ok &= bool(jnp.array_equal(drops.congestion[t], d.congestion))
+            ok &= bool(jnp.array_equal(drops.uplink[t], d.uplink))
         print("STREAM_MATCH", ok)
     """)
     assert "STREAM_MATCH True" in out
@@ -114,17 +116,22 @@ def test_hierarchical_stacked_matches_shard_map():
                                    (T, N, 16)) < 0.7
         frames, _ = make_frame(labels, None, valid, 16)
         mesh = compat.make_mesh((n_pods, per), ("pod", "chip"))
-        ic = StarInterconnect(mesh, "chip", pod_axis="pod", capacity=24)
-        outs, drops = ic.stream_fn()(frames, st.fwd_tables, st.rev_tables,
-                                     intra, inter)
         ok = True
-        for t in range(T):
-            ref, d_ref = route_step_hierarchical(
-                st, jax.tree.map(lambda x: x[t], frames), 24, n_pods=n_pods,
-                intra_enables=intra, inter_enables=inter)
-            ok &= bool(jnp.array_equal(outs.labels[t], ref.labels))
-            ok &= bool(jnp.array_equal(outs.valid[t], ref.valid))
-            ok &= bool(jnp.array_equal(drops[t], d_ref))
+        for caps in (dict(), dict(link_capacity=12, pod_capacity=24)):
+            ic = StarInterconnect(mesh, "chip", pod_axis="pod", capacity=24,
+                                  **caps)
+            outs, drops = ic.stream_fn()(frames, st.fwd_tables,
+                                         st.rev_tables, intra, inter)
+            for t in range(T):
+                ref, d_ref = route_step_hierarchical(
+                    st, jax.tree.map(lambda x: x[t], frames), 24,
+                    n_pods=n_pods, intra_enables=intra, inter_enables=inter,
+                    **caps)
+                ok &= bool(jnp.array_equal(outs.labels[t], ref.labels))
+                ok &= bool(jnp.array_equal(outs.valid[t], ref.valid))
+                ok &= bool(jnp.array_equal(drops.congestion[t],
+                                           d_ref.congestion))
+                ok &= bool(jnp.array_equal(drops.uplink[t], d_ref.uplink))
         print("HIER_MATCH", ok)
     """)
     assert "HIER_MATCH True" in out

@@ -1,0 +1,342 @@
+"""Sparsity-aware exchange datapath (ISSUE 3).
+
+Pins the three tentpole layers:
+
+* segmented pack ≡ the global cumsum pack on every observable (labels·valid,
+  valid, dropped, arrival order), for arbitrary occupancies/capacities and
+  for the compact-segments gather fast path;
+* compact-before-gather: with ``link_capacity``/``pod_capacity`` unset or ≥
+  the raw stream sizes, the star, hierarchical shard_map (single-device
+  mesh) and stacked hierarchical rounds are bit-exact with the dense
+  datapath, and uplink overflow is counted separately from congestion;
+* the 16-bit wire format round-trips losslessly and the merge kernel
+  unpacks it in place.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip; plain tests still run
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _AnyStrategy()
+
+from repro.core import (EventFrame, full_route_enables,  # noqa: E402
+                        identity_router, make_frame, make_frame_segmented,
+                        pack_wire16, route_step_hierarchical, unpack_wire16)
+from repro.kernels.spike_router.ops import fused_merge_pack  # noqa: E402
+from repro.kernels.spike_router.spike_router import (_pack,  # noqa: E402
+                                                     _pack_segmented)
+from repro.snn import network as netlib  # noqa: E402
+from repro.snn import stream as stlib  # noqa: E402
+from repro.snn import init_feedforward  # noqa: E402
+
+KEY = jax.random.key(23)
+
+
+def _frames(key, shape, occupancy):
+    labels = jax.random.randint(key, shape, 0, 2**15)
+    valid = jax.random.uniform(jax.random.fold_in(key, 1), shape) < occupancy
+    return labels, valid
+
+
+def _assert_frames_equal(f1, f2):
+    assert jnp.array_equal(f1.valid, f2.valid)
+    assert jnp.array_equal(jnp.where(f1.valid, f1.labels, 0),
+                           jnp.where(f2.valid, f2.labels, 0))
+
+
+# ---------------------------------------------------------------------------
+# Segmented pack ≡ global cumsum pack
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 17), st.integers(1, 48),
+       st.floats(0.0, 1.0), st.integers(0, 2**30))
+def test_segmented_pack_matches_global(n_seg, seg_len, capacity, occ, seed):
+    """Property: two-level pack == global pack on random occupancies and
+    capacities, including drop counts and arrival order."""
+    key = jax.random.fold_in(KEY, seed)
+    labels, valid = _frames(key, (n_seg * seg_len,), occ)
+    f_seg, d_seg = make_frame_segmented(labels, None, valid, capacity,
+                                        (seg_len,) * n_seg)
+    f_glob, d_glob = make_frame(labels, None, valid, capacity)
+    _assert_frames_equal(f_seg, f_glob)
+    assert int(d_seg) == int(d_glob)
+
+    # The kernels' scatter-form segmented unit agrees too.
+    ok = valid.astype(jnp.int32)
+    p_seg = _pack_segmented(ok.reshape(n_seg, seg_len),
+                            labels.reshape(n_seg, seg_len), capacity)
+    p_glob = _pack(ok, labels, capacity)
+    for a, b in zip(p_seg, p_glob):
+        assert jnp.array_equal(a, b)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 12), st.integers(1, 32),
+       st.floats(0.0, 1.0), st.integers(0, 2**30))
+def test_segmented_pack_compact_gather_matches(n_seg, seg_len, capacity, occ,
+                                               seed):
+    """Property: on front-compacted segments the bounded per-segment gather
+    equals the general path (which equals the global pack)."""
+    key = jax.random.fold_in(KEY, seed + 1)
+    labels, valid = _frames(key, (n_seg, seg_len), occ)
+    packed, _ = make_frame(labels, None, valid, seg_len)  # compact segments
+    cl = packed.labels.reshape(-1)
+    cv = packed.valid.reshape(-1)
+    f_c, d_c = make_frame_segmented(cl, None, cv, capacity,
+                                    (seg_len,) * n_seg, compact=True)
+    f_g, d_g = make_frame(cl, None, cv, capacity)
+    _assert_frames_equal(f_c, f_g)
+    assert int(d_c) == int(d_g)
+
+
+def test_segmented_pack_mixed_lengths_and_order():
+    labels = jnp.arange(60, dtype=jnp.int32) + 1
+    valid = jnp.arange(60) % 4 == 0
+    f_seg, d_seg = make_frame_segmented(labels, None, valid, 8,
+                                        (20, 8, 8, 24))
+    f_glob, d_glob = make_frame(labels, None, valid, 8)
+    _assert_frames_equal(f_seg, f_glob)
+    assert int(d_seg) == int(d_glob)
+    kept = labels[valid][:8]                     # arrival order preserved
+    assert jnp.array_equal(f_seg.labels[:8], kept)
+
+
+def test_segmented_pack_rejects_bad_seg_lens():
+    labels = jnp.zeros((10,), jnp.int32)
+    with pytest.raises(ValueError):
+        make_frame_segmented(labels, None, labels > 0, 4, (4, 4))
+
+
+# ---------------------------------------------------------------------------
+# 16-bit wire format
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2**15 - 1), st.booleans()),
+                min_size=1, max_size=64))
+def test_wire16_roundtrip(slots):
+    labels = jnp.asarray([l for l, _ in slots], jnp.int32)
+    valid = jnp.asarray([v for _, v in slots], jnp.bool_)
+    words = pack_wire16(labels, valid)
+    assert words.dtype == jnp.int16
+    out_l, out_v = unpack_wire16(words)
+    assert jnp.array_equal(out_v, valid)
+    assert jnp.array_equal(out_l, jnp.where(valid, labels, 0))
+
+
+@pytest.mark.parametrize("mode", ["jax", "interpret"])
+def test_merge_kernel_unpacks_wire16(mode):
+    """int16 wire words through the merge == int32 labels + mask, on both
+    the oracle and the Pallas kernel path."""
+    state = identity_router(4)
+    labels, valid = _frames(jax.random.fold_in(KEY, 3), (4, 24), 0.5)
+    ref = fused_merge_pack(labels & 0x7FFF, valid, state.rev_tables,
+                           capacity=16, mode=mode)
+    words = pack_wire16(labels, valid)
+    out = fused_merge_pack(words, jnp.ones_like(valid), state.rev_tables,
+                           capacity=16, mode=mode, seg_lens=(12, 12))
+    for a, b in zip(ref, out):
+        assert jnp.array_equal(a, b)
+
+
+def test_fused_merge_pack_rejects_shape_mismatch():
+    """Bugfix: a ``valid`` that only broadcasts against ``labels`` used to be
+    silently accepted on the ref path but fail in the pallas path — now both
+    reject it up front."""
+    state = identity_router(2)
+    labels, valid = _frames(jax.random.fold_in(KEY, 4), (2, 16), 0.5)
+    for mode in ("jax", "interpret"):
+        with pytest.raises(ValueError, match="slot-for-slot"):
+            fused_merge_pack(labels, valid[:, :8], state.rev_tables,
+                             capacity=8, mode=mode)
+        with pytest.raises(ValueError, match="slot-for-slot"):
+            fused_merge_pack(labels, valid[:1], state.rev_tables,
+                             capacity=8, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Compact-before-gather parity (capacities unset / ≥ raw sizes ⇒ bit-exact)
+# ---------------------------------------------------------------------------
+
+N_PODS, PER = 3, 4
+CAP_IN = 20
+
+
+def _hier_args():
+    return dict(n_pods=N_PODS, intra_enables=full_route_enables(PER),
+                inter_enables=full_route_enables(N_PODS))
+
+
+def _hier_frames(occ=0.4):
+    n = N_PODS * PER
+    labels, valid = _frames(jax.random.fold_in(KEY, 5), (n, CAP_IN), occ)
+    frames, _ = make_frame(labels, None, valid, CAP_IN)
+    return frames
+
+
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_hierarchical_capacity_parity(use_fused):
+    """Capacities unset, and capacities ≥ the raw stream sizes, are
+    bit-exact with each other on every observable."""
+    state = identity_router(N_PODS * PER)
+    frames = _hier_frames()
+    ref, d_ref = route_step_hierarchical(state, frames, 16, **_hier_args(),
+                                         use_fused=use_fused)
+    for caps in (dict(link_capacity=CAP_IN),
+                 dict(pod_capacity=PER * CAP_IN),
+                 dict(link_capacity=CAP_IN, pod_capacity=PER * CAP_IN)):
+        out, d = route_step_hierarchical(state, frames, 16, **_hier_args(),
+                                         use_fused=use_fused, **caps)
+        _assert_frames_equal(out, ref)
+        assert jnp.array_equal(d.congestion, d_ref.congestion)
+        assert int(d.uplink.sum()) == 0
+
+    # Undersized lane: uplink drops appear in their own counter and events
+    # stay conserved per destination (delivered + congestion == enabled
+    # survivors of the uplink stages).
+    tight, d_tight = route_step_hierarchical(
+        state, frames, 1000, **_hier_args(), use_fused=use_fused,
+        link_capacity=2, pod_capacity=PER * CAP_IN)
+    assert int(d_tight.uplink.sum()) > 0
+    assert int(d_tight.congestion.sum()) == 0
+    assert jnp.array_equal(d_tight.total,
+                           d_tight.congestion + d_tight.uplink)
+    lane_events = jnp.minimum(frames.valid.sum(-1), 2)   # per-node survivors
+    pods = lane_events.reshape(N_PODS, PER)
+    expected = 0
+    for q in range(N_PODS):
+        for j in range(PER):
+            local = int(pods[q].sum() - pods[q, j])
+            remote = int(pods.sum() - pods[q].sum())
+            expected += local + remote
+    assert int(tight.valid.sum()) == expected
+
+
+def test_star_interconnect_capacity_parity_single_device():
+    from repro.core import StarInterconnect
+
+    state = identity_router(1)
+    mesh = jax.make_mesh((1,), ("chip",))
+    labels, valid = _frames(jax.random.fold_in(KEY, 6), (1, 32), 0.7)
+    frames, _ = make_frame(labels, None, valid, 32)
+    enables = jnp.ones((1, 1), bool)             # allow the self-loop
+    outs = {}
+    for name, caps in (("dense", {}), ("sparse", dict(link_capacity=32)),
+                       ("tight", dict(link_capacity=4))):
+        net = StarInterconnect(mesh=mesh, node_axis="chip", capacity=16,
+                               **caps)
+        out, drops = net.exchange_fn()(frames, state.fwd_tables,
+                                       state.rev_tables, enables)
+        outs[name] = (out, drops)
+    ref, d_ref = outs["dense"]
+    out, d = outs["sparse"]
+    _assert_frames_equal(out, ref)
+    assert jnp.array_equal(d.congestion, d_ref.congestion)
+    assert int(d.uplink.sum()) == 0 and int(d_ref.uplink.sum()) == 0
+    tight, d_t = outs["tight"]
+    n_sent = int(frames.valid.sum())
+    assert int(d_t.uplink.sum()) == max(0, n_sent - 4)
+    assert int(tight.valid.sum()) + int(d_t.congestion.sum()) == min(
+        n_sent, 4)
+
+
+def test_link_config_sizes_the_uplink_stage():
+    """LinkConfig.link_capacity feeds StarInterconnect, and
+    events_per_window derives a hardware-faithful capacity from the lane
+    rate (250 MHz event rate minus the clock-compensation stall share)."""
+    from repro.core import LINK_LATENCY_OPTIMIZED, StarInterconnect
+    import dataclasses
+
+    # 1 µs window at 250 MHz ≈ 250 events minus the ~0.25% cc stall.
+    cap = LINK_LATENCY_OPTIMIZED.events_per_window(1.0)
+    assert 200 <= cap <= 250
+
+    link = dataclasses.replace(LINK_LATENCY_OPTIMIZED, link_capacity=4)
+    state = identity_router(1)
+    mesh = jax.make_mesh((1,), ("chip",))
+    labels, valid = _frames(jax.random.fold_in(KEY, 8), (1, 32), 0.7)
+    frames, _ = make_frame(labels, None, valid, 32)
+    enables = jnp.ones((1, 1), bool)
+    net = StarInterconnect(mesh=mesh, node_axis="chip", capacity=16,
+                           link=link)
+    out, drops = net.exchange_fn()(frames, state.fwd_tables,
+                                   state.rev_tables, enables)
+    n_sent = int(frames.valid.sum())
+    assert int(drops.uplink.sum()) == max(0, n_sent - 4)
+    # An explicit link_capacity overrides the LinkConfig field.
+    net_wide = StarInterconnect(mesh=mesh, node_axis="chip", capacity=16,
+                                link=link, link_capacity=32)
+    _, d_wide = net_wide.exchange_fn()(frames, state.fwd_tables,
+                                       state.rev_tables, enables)
+    assert int(d_wide.uplink.sum()) == 0
+
+
+def test_star_interconnect_rejects_pod_capacity_without_pod_axis():
+    from repro.core import StarInterconnect
+
+    mesh = jax.make_mesh((1,), ("chip",))
+    net = StarInterconnect(mesh=mesh, node_axis="chip", pod_capacity=8)
+    with pytest.raises(ValueError, match="pod_axis"):
+        net.exchange_fn()
+
+
+# ---------------------------------------------------------------------------
+# Streaming engine: capacities thread through run_stream
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_run_stream_hierarchical_capacity_parity():
+    n_pods, per = 2, 2
+    cfg = netlib.NetworkConfig(n_chips=n_pods * per, capacity=600)
+    params = init_feedforward(KEY, cfg)
+    drives = jnp.zeros((6, cfg.n_chips, 2, cfg.chip.n_rows))
+    stim = (jax.random.uniform(jax.random.fold_in(KEY, 7),
+                               (6, 2, cfg.chip.n_rows)) < 0.4).astype(
+                                   jnp.float32)
+    drives = drives.at[:, 0].set(stim)
+    intra = full_route_enables(per)
+    inter = full_route_enables(n_pods)
+    kw = dict(mode="event", topology="hierarchical", n_pods=n_pods,
+              intra_enables=intra, inter_enables=inter)
+    state = netlib.init_state(cfg, 2)
+    ref = stlib.run_stream(params, state, drives, cfg, **kw)
+    out = stlib.run_stream(params, state, drives, cfg, **kw,
+                           link_capacity=cfg.capacity,
+                           pod_capacity=per * cfg.capacity)
+    assert jnp.array_equal(out.spikes, ref.spikes)
+    assert jnp.array_equal(out.dropped, ref.dropped)
+    assert jnp.array_equal(out.state.inflight, ref.state.inflight)
+    assert int(out.uplink_dropped.sum()) == 0
+    assert int(ref.uplink_dropped.sum()) == 0
+
+    # A starved lane loses events to the uplink counter, not `dropped`.
+    tight = stlib.run_stream(params, state, drives, cfg, **kw,
+                             link_capacity=1)
+    assert int(tight.uplink_dropped.sum()) > 0
+
+
+def test_run_stream_rejects_capacities_on_star():
+    cfg = netlib.NetworkConfig(n_chips=2)
+    params = init_feedforward(KEY, cfg)
+    state = netlib.init_state(cfg, 1)
+    drives = jnp.zeros((2, 2, 1, cfg.chip.n_rows))
+    with pytest.raises(ValueError, match="hierarchical"):
+        stlib.run_stream(params, state, drives, cfg, link_capacity=8)

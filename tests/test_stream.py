@@ -74,7 +74,8 @@ def test_route_step_hierarchical_fused_unfused_agree(use_fused):
         inter_enables=full_route_enables(n_pods), use_fused=not use_fused)
     assert jnp.array_equal(out.labels, ref.labels)
     assert jnp.array_equal(out.valid, ref.valid)
-    assert jnp.array_equal(dropped, d_ref)
+    assert jnp.array_equal(dropped.congestion, d_ref.congestion)
+    assert jnp.array_equal(dropped.uplink, d_ref.uplink)
 
 
 @pytest.mark.slow
@@ -89,7 +90,6 @@ def test_hierarchical_conserves_events():
         state, frames, 16, n_pods=n_pods,
         intra_enables=full_route_enables(per),
         inter_enables=full_route_enables(n_pods))
-    sent = int(frames.valid.sum(-1).sum())
     per_node = frames.valid.sum(-1)
     pods = per_node.reshape(n_pods, per)
     expected = 0
@@ -98,7 +98,8 @@ def test_hierarchical_conserves_events():
             local = int(pods[q].sum() - pods[q, j])      # intra minus self
             remote = int(pods.sum() - pods[q].sum())     # other pods, all
             expected += local + remote
-    assert int(out.valid.sum()) + int(dropped.sum()) == expected
+    assert int(out.valid.sum()) + int(dropped.congestion.sum()) == expected
+    assert int(dropped.uplink.sum()) == 0          # no uplink stages enabled
 
 
 @pytest.mark.slow
@@ -136,7 +137,8 @@ def test_stream_fn_matches_exchange_fn_single_device():
                         state.fwd_tables, state.rev_tables, enables)
         assert jnp.array_equal(outs.labels[t], out_t.labels)
         assert jnp.array_equal(outs.valid[t], out_t.valid)
-        assert jnp.array_equal(drops[t], d_t)
+        assert jnp.array_equal(drops.congestion[t], d_t.congestion)
+        assert jnp.array_equal(drops.uplink[t], d_t.uplink)
 
 
 # ---------------------------------------------------------------------------
