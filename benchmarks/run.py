@@ -10,6 +10,7 @@ the perf trajectory is machine-readable across PRs.
   scaling_projection      §V      120-chip second-layer projection
   interconnect_throughput §III    routing datapath throughput
   exchange_stream         §III    streaming engine vs per-step dispatch
+  stream_timed            §IV     timed streaming datapath (timestamp lane)
   moe_dispatch            DESIGN §4  event-frame dispatch at LM scale
   roofline_table          §Roofline  all dry-run cells (needs results/)
 """
@@ -30,6 +31,7 @@ ALL = [
     ("scaling_projection", scaling_projection.run),
     ("interconnect_throughput", interconnect_throughput.run),
     ("exchange_stream", exchange_stream.run),
+    ("stream_timed", exchange_stream.run_timed),
     ("moe_dispatch", moe_dispatch.run),
     ("grad_compression", grad_compression.run),
     ("roofline_table", roofline_table.run),

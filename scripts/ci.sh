@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# CI entry point: fast suite first (quick signal), then the full tier-1
-# suite — both with the repo's src/ on PYTHONPATH, as documented in README.
+# Local mirror of the CI workflow (.github/workflows/ci.yml splits the same
+# stages into a fast PR job and a full job + benchmark artifact): fast suite
+# first (quick signal), then the full tier-1 suite, then the timed-stream
+# benchmark — all with the repo's src/ on PYTHONPATH, as documented in README.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -10,3 +12,6 @@ python -m pytest -q -m "not slow"
 
 echo "=== full tier-1 suite ==="
 python -m pytest -x -q
+
+echo "=== timed-stream benchmark ==="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream_timed

@@ -23,7 +23,8 @@ from repro.core.sync import (  # noqa: F401
 )
 from repro.core.latency import (  # noqa: F401
     LatencyParams, DEFAULT_PARAMS, simulate_fan_in, latency_statistics,
-    biological_latency_ms,
+    biological_latency_ms, queue_wait_ns, queue_wait_i32, hop_delays,
+    HopDelays, TimedWire, timed_wire, PAPER_BAND_NS, PAPER_JITTER_FRAC,
 )
 from repro.core.link import (  # noqa: F401
     Encoding, LinkConfig, ENC_8B10B, ENC_64B66B,

@@ -61,8 +61,67 @@ from repro.compat import shard_map as _shard_map
 from repro.core import routing
 from repro.core.events import (EventFrame, make_frame, make_frame_segmented,
                                pack_wire16, unpack_wire16)
+from repro.core.latency import TimedWire, queue_wait_i32 as _queue_wait_i32
 from repro.core.link import LinkConfig
 from repro.core.routing import RoutingTables
+
+
+# ---------------------------------------------------------------------------
+# Timed datapath helpers (integer-ns timestamp lane, see latency.timed_wire)
+# ---------------------------------------------------------------------------
+
+
+def _egress_times(frame_times: jax.Array, ev: jax.Array,
+                  timing: TimedWire) -> jax.Array:
+    """Sender-side arrival times at the Aggregator input: departure + fixed
+    sender path + the MGT uplink lane's serialization wait of each event's
+    egress rank.  Computed on the *unpacked* egress so the compact-before-
+    gather pack (which preserves order) cannot change timestamps —
+    capacity parity holds for the timestamp lane too."""
+    ok = ev.astype(jnp.int32)
+    rank = jnp.cumsum(ok, axis=-1) - ok
+    wait = _queue_wait_i32(rank, timing.uplink_queue)
+    return jnp.where(ev, frame_times.astype(jnp.int32)
+                     + timing.sender_fixed_ns + wait, 0)
+
+
+def _arrival_times(out_times: jax.Array, out_valid: jax.Array,
+                   timing: TimedWire) -> jax.Array:
+    """Receiver-side fixed path, applied after the merge (which already
+    added the destination's rank-dependent queueing in the pack)."""
+    return jnp.where(out_valid, out_times + timing.recv_fixed_ns, 0)
+
+
+def _timed_mode(use_fused: bool) -> str:
+    """Kernel mode for the timed merges, resolved *eagerly* (never ``None``)
+    so the ops-level jit caches one entry per concrete mode — parity tests
+    monkeypatch ``repro.kernels.default_mode`` and must not hit a stale
+    ``mode=None`` trace."""
+    from repro.kernels import default_mode
+
+    return default_mode() if use_fused else "jax"
+
+
+def _fused_merge(labels, valid, rev, capacity: int, *, seg_lens, compact,
+                 timing: TimedWire | None, use_fused: bool | None,
+                 times=None) -> tuple[EventFrame, jax.Array]:
+    """The shared merge tail of every exchange path: ``fused_merge_pack``
+    (timed lane + destination queue when ``timing`` is set) and assembly of
+    the ingress frame with arrival times (zeros on the untimed wire)."""
+    from repro.kernels.spike_router.ops import fused_merge_pack
+
+    outs = fused_merge_pack(
+        labels, valid, rev, capacity=capacity, seg_lens=seg_lens,
+        compact=compact, times=times,
+        queue=None if timing is None else timing.queue,
+        mode=None if timing is None else _timed_mode(use_fused))
+    if timing is not None:
+        out_l, out_v, out_t, dropped = outs
+        out_t = _arrival_times(out_t, out_v, timing)
+    else:
+        out_l, out_v, dropped = outs
+        out_t = jnp.zeros_like(out_l)
+    return EventFrame(labels=out_l, times=out_t, valid=out_v), dropped
 
 
 def fused_exchange_enabled() -> bool:
@@ -117,7 +176,9 @@ def identity_router(n_nodes: int, route_enables: jax.Array | None = None,
 
 
 def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
-               use_fused: bool | None = None) -> tuple[EventFrame, jax.Array]:
+               use_fused: bool | None = None,
+               timing: TimedWire | None = None
+               ) -> tuple[EventFrame, jax.Array]:
     """Full datapath for one exchange round.
 
     Args:
@@ -126,6 +187,12 @@ def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
       capacity: ingress frame capacity per node.
       use_fused: route through the fused exchange kernel (default: the
         ``REPRO_FUSED_EXCHANGE`` env flag, on).
+      timing: timed datapath (``latency.timed_wire``): ``frames.times`` are
+        int32 departure timestamps (ns); the returned ingress ``times`` are
+        per-event arrival timestamps — departure + fixed per-stage path +
+        deterministic queueing at the sender lane and the destination merge.
+        ``None`` (default) keeps the untimed wire: timestamps are discarded
+        at egress (§III) and the ingress carries zeros.
 
     Returns:
       (ingress frames [n_nodes, capacity], dropped counts [n_nodes]).
@@ -135,6 +202,8 @@ def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
+    if timing is not None:
+        return _route_step_merge(state, frames, capacity, timing, use_fused)
     if use_fused:
         from repro.kernels.spike_router.ops import fused_exchange
 
@@ -157,13 +226,50 @@ def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
     return ingress, dropped
 
 
+def _route_step_merge(state: RouterState, frames: EventFrame, capacity: int,
+                      timing: TimedWire | None, use_fused: bool
+                      ) -> tuple[EventFrame, jax.Array]:
+    """The stacked star round on the broadcast/merge-pack engine.
+
+    With ``timing`` set this is the timed round: the timestamp lane rides
+    the merge (per-destination rev LUTs, Pallas behind
+    ``kernels.default_mode`` when fused, the jnp oracle when not) and picks
+    up the destination queueing inside the kernel.  With ``timing=None`` it
+    is the *same engine* without the lane — same observables as
+    ``route_step`` on (labels·valid, valid, dropped); the timed benchmark
+    uses it as the apples-to-apples untimed baseline so the overhead ratio
+    isolates the lane, not an engine swap.
+    """
+    n_src, cap_in = frames.labels.shape
+    n_dst = state.rev_tables.shape[0]
+    n = n_src * cap_in
+
+    wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables,
+                                                frames.labels)
+    ev = frames.valid & fwd_en
+
+    # Shared src-major stream, per-destination validity only (as exchange_ref).
+    ok = ev[:, None, :] & state.route_enables.astype(jnp.bool_)[:, :, None]
+    ok = jnp.swapaxes(ok, 0, 1).reshape(n_dst, n)
+    labels_b = jnp.broadcast_to(wire.reshape(n)[None], (n_dst, n))
+    if timing is not None:
+        times = _egress_times(frames.times, ev, timing)
+        times_b = jnp.broadcast_to(times.reshape(n)[None], (n_dst, n))
+    else:
+        times_b = None
+    return _fused_merge(labels_b, ok, state.rev_tables, capacity,
+                        seg_lens=(cap_in,) * n_src, compact=False,
+                        timing=timing, use_fused=use_fused, times=times_b)
+
+
 def route_step_hierarchical(state: RouterState, frames: EventFrame,
                             capacity: int, *, n_pods: int,
                             intra_enables: jax.Array,
                             inter_enables: jax.Array,
                             use_fused: bool | None = None,
                             link_capacity: int | None = None,
-                            pod_capacity: int | None = None
+                            pod_capacity: int | None = None,
+                            timing: TimedWire | None = None
                             ) -> tuple[EventFrame, ExchangeDrops]:
     """One two-layer (§V) exchange round with all nodes stacked on one device.
 
@@ -194,6 +300,11 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
       inter_enables: bool[n_pods, n_pods] routes between backplanes.
       link_capacity: per-lane egress pack size (``None`` = dense frames).
       pod_capacity: per-pod layer-2 uplink pack size (``None`` = dense).
+      timing: timed datapath — ``frames.times`` are departure timestamps and
+        the ingress ``times`` are arrival timestamps (fixed path + sender
+        lane + pod uplink + destination merge queueing; inter-backplane
+        events additionally pay ``second_layer_extra_ns``).  ``None`` keeps
+        the untimed wire (ingress times are zeros).
 
     Returns:
       (ingress frames [n_nodes, capacity],
@@ -211,11 +322,15 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
     ev = frames.valid & fwd_en                           # [n_nodes, cap_in]
     pod_of = jnp.arange(n_nodes) // per
     node_of = jnp.arange(n_nodes) % per
+    times = (_egress_times(frames.times, ev, timing)
+             if timing is not None else None)
 
     # Uplink stage 1 — pack each node's egress to its MGT lane capacity.
     if link_capacity is not None:
-        packed, link_drop = make_frame(wire, None, ev, link_capacity)
+        packed, link_drop = make_frame(wire, times, ev, link_capacity)
         wire, ev = packed.labels, packed.valid           # [n_nodes, L]
+        if timing is not None:
+            times = packed.times
         lane = link_capacity
     else:
         link_drop = jnp.zeros((n_nodes,), jnp.int32)
@@ -230,14 +345,26 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
                    & intra.T[node_of][:, :, None]).reshape(n_nodes,
                                                            per * lane)
 
-    # Layer 2 — every backplane pod-major, own pod excluded (== g2).
+    # Layer 2 — every backplane pod-major, own pod excluded (== g2).  Timed:
+    # inter-backplane events pay the §V second-layer fixed extra plus the
+    # pod uplink lane's serialization wait of their rank in the pod stream.
     inter = jnp.asarray(inter_enables).astype(jnp.bool_)
     pod_en = inter.T[pod_of] & (jnp.arange(n_pods)[None, :]
                                 != pod_of[:, None])      # [n_nodes, n_pods]
+    if timing is not None:
+        ev_flat = ev.reshape(n_pods, per * lane)
+        times_pods = times.reshape(n_pods, per * lane)
+        okp = ev_flat.astype(jnp.int32)
+        prank = jnp.cumsum(okp, axis=-1) - okp
+        up_times = jnp.where(
+            ev_flat, times_pods + timing.second_layer_extra_ns
+            + _queue_wait_i32(prank, timing.uplink_queue), 0)
+    else:
+        times_pods = up_times = None
     if pod_capacity is not None:
         # Uplink stage 2 — each pod packs its aggregated egress before the
         # layer-2 merge; remote traffic is n_pods·pod_capacity, not n·cap_in.
-        up, pod_drop = make_frame(wire_pods, None,
+        up, pod_drop = make_frame(wire_pods, up_times,
                                   ev.reshape(n_pods, per * lane),
                                   pod_capacity)          # [n_pods, P]
         remote_labels = jnp.broadcast_to(up.labels.reshape(1, -1),
@@ -246,6 +373,7 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
                         ).reshape(n_nodes, n_pods * pod_capacity)
         remote_segs = (pod_capacity,) * n_pods
         uplink = (link_drop + pod_drop[pod_of]).astype(jnp.int32)
+        remote_times = up.times
     else:
         remote_labels = jnp.broadcast_to(wire.reshape(1, -1),
                                          (n_nodes, n_nodes * lane))
@@ -253,6 +381,7 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
                         ).reshape(n_nodes, n_nodes * lane)
         remote_segs = (lane,) * n_nodes
         uplink = link_drop.astype(jnp.int32)
+        remote_times = up_times
 
     labels = jnp.concatenate([local_labels, remote_labels], axis=-1)
     valid = jnp.concatenate([local_valid, remote_valid], axis=-1)
@@ -260,16 +389,21 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
     # segment, so the merge may take the bounded per-segment gather.
     seg_lens = (lane,) * per + remote_segs
     compact = link_capacity is not None
+    if timing is not None:
+        local_times = times_pods[pod_of]                 # shared views, like
+        merge_times = jnp.concatenate(                   # the label planes
+            [local_times, jnp.broadcast_to(remote_times.reshape(1, -1),
+                                           remote_labels.shape)], axis=-1)
+    else:
+        merge_times = None
 
-    if use_fused:
-        from repro.kernels.spike_router.ops import fused_merge_pack
-
-        out_l, out_v, dropped = fused_merge_pack(
-            labels, valid, state.rev_tables, capacity=capacity,
-            seg_lens=seg_lens, compact=compact)
-        return (EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
-                           valid=out_v),
-                ExchangeDrops(congestion=dropped, uplink=uplink))
+    if use_fused or timing is not None:
+        ingress, dropped = _fused_merge(labels, valid, state.rev_tables,
+                                        capacity, seg_lens=seg_lens,
+                                        compact=compact, timing=timing,
+                                        use_fused=use_fused,
+                                        times=merge_times)
+        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
     mixed, dropped = make_frame_segmented(labels, None, valid, capacity,
                                           seg_lens, compact=compact)
     chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
@@ -310,7 +444,8 @@ def star_exchange(frame: EventFrame,
                   route_enables: jax.Array,
                   capacity: int,
                   use_fused: bool | None = None,
-                  link_capacity: int | None = None
+                  link_capacity: int | None = None,
+                  timing: TimedWire | None = None
                   ) -> tuple[EventFrame, ExchangeDrops]:
     """One exchange round from the perspective of a single node shard.
 
@@ -333,6 +468,10 @@ def star_exchange(frame: EventFrame,
     gathered stream travels as int16 wire words (15-bit label + valid flag,
     ``events.pack_wire16``), halving gather bandwidth vs int32 labels plus a
     mask; the words are unpacked inside the merge kernel.
+
+    Timed datapath (``timing`` set): an int32 timestamp lane rides alongside
+    the wire words — ``frame.times`` are departures, the ingress ``times``
+    arrivals (fixed path + sender-lane wait + destination merge queueing).
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
@@ -340,10 +479,14 @@ def star_exchange(frame: EventFrame,
     # Node egress (fwd LUT is local to this node).
     wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
     egress_valid = frame.valid & fwd_en
+    times = (_egress_times(frame.times, egress_valid, timing)
+             if timing is not None else None)
     # Uplink: compact-before-gather to the MGT lane capacity.
     if link_capacity is not None:
-        packed, uplink = make_frame(wire, None, egress_valid, link_capacity)
+        packed, uplink = make_frame(wire, times, egress_valid, link_capacity)
         wire, egress_valid = packed.labels, packed.valid
+        if timing is not None:
+            times = packed.times
     else:
         uplink = jnp.zeros((), jnp.int32)
     # Star broadcast: every node receives every node's egress — one int16
@@ -355,17 +498,19 @@ def star_exchange(frame: EventFrame,
     src_en = jnp.broadcast_to(route_enables[:, me][:, None], (n_src, lane))
     flat_words = g_words.reshape(n_src * lane)
     flat_en = src_en.reshape(n_src * lane)
+    flat_times = None
+    if timing is not None:
+        flat_times = jax.lax.all_gather(times, axis_name,
+                                        axis=0).reshape(n_src * lane)
     seg_lens = (lane,) * n_src
     compact = link_capacity is not None
-    if use_fused:
-        from repro.kernels.spike_router.ops import fused_merge_pack
-
-        out_l, out_v, dropped = fused_merge_pack(
-            flat_words, flat_en, rev_table, capacity=capacity,
-            seg_lens=seg_lens, compact=compact)
-        return (EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
-                           valid=out_v),
-                ExchangeDrops(congestion=dropped, uplink=uplink))
+    if use_fused or timing is not None:
+        ingress, dropped = _fused_merge(flat_words, flat_en, rev_table,
+                                        capacity, seg_lens=seg_lens,
+                                        compact=compact, timing=timing,
+                                        use_fused=use_fused,
+                                        times=flat_times)
+        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
     g_labels, g_valid = unpack_wire16(flat_words)
     mixed, dropped = make_frame_segmented(g_labels, None, g_valid & flat_en,
                                           capacity, seg_lens, compact=compact)
@@ -387,7 +532,8 @@ def hierarchical_exchange(frame: EventFrame,
                           capacity: int,
                           use_fused: bool | None = None,
                           link_capacity: int | None = None,
-                          pod_capacity: int | None = None
+                          pod_capacity: int | None = None,
+                          timing: TimedWire | None = None
                           ) -> tuple[EventFrame, ExchangeDrops]:
     """Two-layer star (§V): backplane aggregators joined by a second-layer node.
 
@@ -408,6 +554,10 @@ def hierarchical_exchange(frame: EventFrame,
     int16 wire words (``events.pack_wire16``), unpacked inside the merge.
     With both capacities ``None`` (or ≥ the raw sizes) the round is
     bit-exact with the dense datapath.
+
+    Timed datapath (``timing`` set): the int32 timestamp lane rides both
+    gathers; inter-backplane events additionally pay the §V fixed extra and
+    the pod uplink lane's serialization wait before the layer-2 gather.
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
@@ -416,31 +566,50 @@ def hierarchical_exchange(frame: EventFrame,
 
     wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
     egress_valid = frame.valid & fwd_en
+    times = (_egress_times(frame.times, egress_valid, timing)
+             if timing is not None else None)
     if link_capacity is not None:
-        packed, uplink = make_frame(wire, None, egress_valid, link_capacity)
+        packed, uplink = make_frame(wire, times, egress_valid, link_capacity)
         wire, egress_valid = packed.labels, packed.valid
+        if timing is not None:
+            times = packed.times
     else:
         uplink = jnp.zeros((), jnp.int32)
 
-    # Layer 1: backplane-local star (int16 wire words — no timestamps, no
-    # separate validity plane).
+    # Layer 1: backplane-local star (int16 wire words — the timed lane, when
+    # enabled, travels as a separate int32 plane).
     words = pack_wire16(wire, egress_valid)
     g1_words = jax.lax.all_gather(words, node_axis, axis=0)  # [n_node, lane]
     n_node, lane = g1_words.shape
     local_en = jnp.broadcast_to(intra_enables[:, me_node][:, None],
                                 (n_node, lane))
+    g1_times = (jax.lax.all_gather(times, node_axis, axis=0)
+                if timing is not None else None)
 
     # Layer 2: second-layer node joins the backplane aggregators.  Each
     # backplane uplinks its gathered egress — packed to ``pod_capacity``
     # when set — and the receiving backplane accepts whole pods gated by the
     # inter-backplane route enables.
+    if timing is not None:
+        # Pod uplink: the second-layer lane serializes the backplane's
+        # aggregated egress; every inter-backplane event pays the §V fixed
+        # extra plus the wait of its rank in the pod stream.
+        _, g1_valid_t = unpack_wire16(g1_words.reshape(-1))
+        okp = g1_valid_t.astype(jnp.int32)
+        prank = jnp.cumsum(okp) - okp
+        up_times = jnp.where(
+            g1_valid_t, g1_times.reshape(-1) + timing.second_layer_extra_ns
+            + _queue_wait_i32(prank, timing.uplink_queue), 0)
+    else:
+        up_times = None
     if pod_capacity is not None:
         g1_labels, g1_valid = unpack_wire16(g1_words)
-        up, pod_drop = make_frame(g1_labels.reshape(-1), None,
+        up, pod_drop = make_frame(g1_labels.reshape(-1), up_times,
                                   g1_valid.reshape(-1), pod_capacity)
         up_words = pack_wire16(up.labels, up.valid)          # [pod_capacity]
         uplink = uplink + pod_drop
         remote_seg = pod_capacity
+        up_times = up.times if timing is not None else None
     else:
         up_words = g1_words.reshape(-1)                      # [n_node*lane]
         remote_seg = lane
@@ -453,19 +622,22 @@ def hierarchical_exchange(frame: EventFrame,
 
     flat_words = jnp.concatenate([g1_words.reshape(-1), g2_words.reshape(-1)])
     flat_en = jnp.concatenate([local_en.reshape(-1), remote_en.reshape(-1)])
+    flat_times = None
+    if timing is not None:
+        g2_times = jax.lax.all_gather(up_times, pod_axis, axis=0)
+        flat_times = jnp.concatenate([g1_times.reshape(-1),
+                                      g2_times.reshape(-1)])
     # Segments at the finest front-compacted granularity: per-lane frames
     # locally; per-pod uplink frames (or per-lane sub-frames) remotely.
     seg_lens = (lane,) * n_node + (remote_seg,) * (g2_words.size // remote_seg)
     compact = link_capacity is not None
-    if use_fused:
-        from repro.kernels.spike_router.ops import fused_merge_pack
-
-        out_l, out_v, dropped = fused_merge_pack(
-            flat_words, flat_en, rev_table, capacity=capacity,
-            seg_lens=seg_lens, compact=compact)
-        return (EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
-                           valid=out_v),
-                ExchangeDrops(congestion=dropped, uplink=uplink))
+    if use_fused or timing is not None:
+        ingress, dropped = _fused_merge(flat_words, flat_en, rev_table,
+                                        capacity, seg_lens=seg_lens,
+                                        compact=compact, timing=timing,
+                                        use_fused=use_fused,
+                                        times=flat_times)
+        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
     g_labels, g_valid = unpack_wire16(flat_words)
     mixed, dropped = make_frame_segmented(g_labels, None, g_valid & flat_en,
                                           capacity, seg_lens, compact=compact)
@@ -510,6 +682,9 @@ class StarInterconnect:
     link_capacity: int | None = None
     pod_capacity: int | None = None
     link: "LinkConfig | None" = None
+    # Timed datapath: thread the int32 timestamp lane through the exchange
+    # (``latency.timed_wire``); ``None`` keeps the untimed wire.
+    timing: TimedWire | None = None
 
     def _link_capacity(self) -> int | None:
         if self.link_capacity is not None:
@@ -529,6 +704,7 @@ class StarInterconnect:
         node, pod = self.node_axis, self.pod_axis
         cap = self.capacity
         fused = self.use_fused
+        timing = self.timing
         link_cap, pod_cap = self._link_capacity(), self.pod_capacity
         if pod is None:
             if pod_cap is not None:
@@ -539,7 +715,7 @@ class StarInterconnect:
             def round_fn(frame, fwd, rev, enables):
                 return star_exchange(frame, node, fwd[0], rev[0], enables,
                                      cap, use_fused=fused,
-                                     link_capacity=link_cap)
+                                     link_capacity=link_cap, timing=timing)
             shard = P(node)
             table_specs = (P(node), P(node), P())
         else:
@@ -548,7 +724,8 @@ class StarInterconnect:
                                              rev[0], intra, inter, cap,
                                              use_fused=fused,
                                              link_capacity=link_cap,
-                                             pod_capacity=pod_cap)
+                                             pod_capacity=pod_cap,
+                                             timing=timing)
             shard = P((pod, node))
             table_specs = (shard, shard, P(), P())
         return round_fn, shard, table_specs

@@ -24,6 +24,7 @@ merged arrivals) — pure JAX, used by ``benchmarks/fig5_latency.py``.
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -84,8 +85,174 @@ class LatencyParams:
         return (2.0 * self.link.hop_latency_ns()
                 + self.cdc_ns_per_fpga + self.mux_arb_ns + self.pack_lut_ns)
 
+    # ---- per-direction fixed paths (shared by the congestion simulator and
+    # ---- the timed streaming datapath; see ``timed_wire``) -----------------
+    def sender_fixed_ns(self, level: str = "chip") -> float:
+        """Deterministic sender-side path up to the Aggregator multiplexer
+        input: chip egress (chip level only) → Node-FPGA pack/LUT logic →
+        CDC → MGT uplink hop."""
+        fpga = (self.pack_lut_ns + self.cdc_ns_per_fpga
+                + self.link.hop_latency_ns())
+        if level == "chip":
+            return self.on_chip_ns + self.l2_link_ns + fpga
+        return fpga
+
+    def recv_fixed_ns(self, level: str = "chip") -> float:
+        """Deterministic receiver-side path from the multiplexer output to
+        the destination: arbitration → MGT downlink hop → Node-FPGA
+        unpack/LUT + CDC → layer-2 downlink (chip level only)."""
+        fpga = (self.mux_arb_ns + self.link.hop_latency_ns()
+                + self.pack_lut_ns + self.cdc_ns_per_fpga)
+        if level == "chip":
+            return (fpga + self.cdc_ns_per_fpga * (self.n_fpgas - 2)
+                    + self.l2_link_ns)
+        return fpga
+
 
 DEFAULT_PARAMS = LatencyParams()
+
+# Paper §IV headline claims (Fig 5): chip-to-chip median band across all
+# spike rates, measurement discretization, and worst-regime total jitter.
+PAPER_BAND_NS = (850.0, 1300.0)
+PAPER_JITTER_FRAC = 0.15
+
+
+# ---------------------------------------------------------------------------
+# Per-hop queueing terms (vectorized; the timed datapath's delay model)
+# ---------------------------------------------------------------------------
+
+
+def queue_wait_ns(ranks, service_ns: float = MGT_CLOCK_NS, *,
+                  cc_interval: int = 0, cc_stall_ns: float = 0.0) -> jax.Array:
+    """Closed form of the Lindley recursion for one exchange window.
+
+    When every event of a window arrives at the server together (the
+    frame-synchronous streaming model), the waiting time of the event with
+    0-based arrival rank ``r`` is the cumulative service of its predecessors:
+
+        w_r = r · service + ⌊r / cc_interval⌋ · cc_stall
+
+    (each ``cc_interval``-th predecessor carries one clock-compensation
+    pause).  This is exactly ``_lindley_queue`` evaluated on simultaneous
+    arrivals — pinned by ``tests/test_latency_model.py``.  Vectorized over
+    any shape of integer ``ranks``.
+    """
+    r = jnp.asarray(ranks, jnp.int32)
+    wait = r.astype(jnp.float32) * jnp.float32(service_ns)
+    if cc_interval:
+        wait = wait + (r // cc_interval).astype(jnp.float32) * jnp.float32(
+            cc_stall_ns)
+    return wait
+
+
+class HopDelays(NamedTuple):
+    """Per-event queueing delays (ns) at the congested hops of one window.
+
+    Each field is the Lindley waiting time an event with the given 0-based
+    arrival rank experiences at that hop; pass the sender-lane ranks to read
+    ``uplink_ns`` and the destination merge-stream ranks for ``mux_ns`` /
+    ``l2_down_ns``.
+    """
+
+    # Sender MGT lane: the Node-FPGA serializes its egress one word per
+    # user-clock cycle, with clock-compensation pauses.
+    uplink_ns: jax.Array
+    # Aggregator multiplexer: all enabled sources merge into one stream.
+    mux_ns: jax.Array
+    # Receiver layer-2 downlink: runs at the mux output rate, so only its
+    # own clock-compensation pauses add wait on top of the mux queue.
+    l2_down_ns: jax.Array
+
+    @property
+    def total_ns(self) -> jax.Array:
+        """Destination-side queueing (mux + layer-2 downlink)."""
+        return self.mux_ns + self.l2_down_ns
+
+
+def hop_delays(params: LatencyParams, occupancy) -> HopDelays:
+    """Vectorized per-hop queueing terms for given arrival ranks.
+
+    ``occupancy`` is an integer array of 0-based arrival ranks within one
+    exchange window (how many events precede this one at the hop's server).
+    Deterministic — the property the hardware exploits to drop timestamps on
+    the wire — and exactly the congestion terms ``simulate_fan_in`` samples
+    end-to-end.
+    """
+    r = jnp.asarray(occupancy, jnp.int32)
+    serial = queue_wait_ns(r, MGT_CLOCK_NS, cc_interval=params.cc_interval,
+                           cc_stall_ns=params.cc_stall_ns)
+    stalls_only = queue_wait_ns(r, 0.0, cc_interval=params.cc_interval,
+                                cc_stall_ns=params.cc_stall_ns)
+    return HopDelays(uplink_ns=serial, mux_ns=serial, l2_down_ns=stalls_only)
+
+
+def queue_wait_i32(ranks: jax.Array,
+                   queue: tuple[int, int, int]) -> jax.Array:
+    """Integer twin of ``queue_wait_ns`` for the int32 timestamp lane:
+    rank·service + ⌊rank/cc⌋·stall, all int32.  ``queue`` is a static
+    (service_ns, cc_interval, stall_ns) triple (``TimedWire.queue`` /
+    ``TimedWire.uplink_queue``).  The single definition shared by the
+    aggregator's uplink waits and the merge kernels' destination queue, so
+    oracle and kernel timestamps cannot drift."""
+    service_ns, cc_interval, stall_ns = queue
+    wait = jnp.asarray(ranks, jnp.int32) * service_ns
+    if cc_interval:
+        wait = wait + (ranks // cc_interval) * stall_ns
+    return wait
+
+
+class TimedWire(NamedTuple):
+    """Integer-ns constants of the timed streaming datapath.
+
+    The timed exchange carries an int32 timestamp lane; all per-stage terms
+    are therefore rounded to whole nanoseconds once, here, so the jnp oracle
+    and the Pallas kernels add bit-identical delays.  ``queue`` is the
+    static (service, cc_interval, stall_total) triple the merge-pack kernels
+    fold into the destination pack rank.
+    """
+
+    sender_fixed_ns: int        # egress → Aggregator multiplexer input
+    recv_fixed_ns: int          # multiplexer output → destination
+    second_layer_extra_ns: int  # extra fixed path for inter-backplane events
+    service_ns: int             # MGT user-clock cycle (one event per cycle)
+    cc_interval: int            # events between clock-compensation pauses
+    cc_stall_ns: int            # one compensation pause
+    n_stall_hops: int           # stall-paying hops after the merge (mux + L2)
+
+    @property
+    def queue(self) -> tuple[int, int, int]:
+        """(service_ns, cc_interval, stall_total_ns) for the merge kernels:
+        the destination-side wait of pack rank r is
+        r·service + ⌊r/cc⌋·stall_total — ``hop_delays(...).total_ns``."""
+        return (self.service_ns, self.cc_interval,
+                self.cc_stall_ns * self.n_stall_hops)
+
+    @property
+    def uplink_queue(self) -> tuple[int, int, int]:
+        """(service_ns, cc_interval, stall_ns) of one sender-side lane."""
+        return (self.service_ns, self.cc_interval, self.cc_stall_ns)
+
+
+def timed_wire(params: LatencyParams = DEFAULT_PARAMS,
+               level: str = "chip") -> TimedWire:
+    """Integer-ns view of ``params`` for the timed exchange datapath.
+
+    At zero congestion (rank 0 everywhere) the end-to-end delay is exactly
+    ``sender_fixed_ns + recv_fixed_ns`` — ``chip_to_chip_ns`` at chip level
+    — the closed-form property pinned by the latency test battery.
+    """
+    if level not in ("chip", "fpga"):
+        raise ValueError(f"unknown level: {level!r}")
+    return TimedWire(
+        sender_fixed_ns=int(round(params.sender_fixed_ns(level))),
+        recv_fixed_ns=int(round(params.recv_fixed_ns(level))),
+        second_layer_extra_ns=int(round(params.second_layer_extra_ns())),
+        service_ns=int(round(MGT_CLOCK_NS)),
+        cc_interval=int(params.cc_interval),
+        cc_stall_ns=int(round(params.cc_stall_ns)),
+        # The layer-2 downlink only exists at chip level (Fig 5A top).
+        n_stall_hops=2 if level == "chip" else 1,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -153,13 +320,7 @@ def simulate_fan_in(rate_hz: float,
     emit = emit.reshape(-1)[:n_spikes]
 
     # Fixed sender-side path up to the Aggregator multiplexer input.
-    if level == "chip":
-        sender_fixed = (params.on_chip_ns + params.l2_link_ns
-                        + params.pack_lut_ns + params.cdc_ns_per_fpga
-                        + params.link.hop_latency_ns())
-    else:
-        sender_fixed = (params.pack_lut_ns + params.cdc_ns_per_fpga
-                        + params.link.hop_latency_ns())
+    sender_fixed = params.sender_fixed_ns(level)
 
     # CDC alignment jitter: each crossing aligns to the destination clock —
     # uniform within one period per crossing (system + MGT domains).
@@ -180,14 +341,7 @@ def simulate_fan_in(rate_hz: float,
                               params.cc_interval, params.cc_stall_ns)
 
     # Receiver-side fixed path from multiplexer output to destination.
-    if level == "chip":
-        recv_fixed = (params.mux_arb_ns + params.link.hop_latency_ns()
-                      + params.cdc_ns_per_fpga * (params.n_fpgas - 2)
-                      + params.pack_lut_ns + params.cdc_ns_per_fpga
-                      + params.l2_link_ns)
-    else:
-        recv_fixed = (params.mux_arb_ns + params.link.hop_latency_ns()
-                      + params.pack_lut_ns + params.cdc_ns_per_fpga)
+    recv_fixed = params.recv_fixed_ns(level)
 
     if level == "chip":
         # Receiver layer-2 link: sustains the ASIC's maximum spike rate — one

@@ -123,11 +123,12 @@ def fused_exchange_stream(labels: jax.Array, valid: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "mode", "seg_lens",
-                                             "compact"))
+                                             "compact", "queue"))
 def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
                      *, capacity: int, mode: str | None = None,
                      seg_lens: tuple[int, ...] | None = None,
-                     compact: bool = False):
+                     compact: bool = False, times: jax.Array | None = None,
+                     queue: tuple[int, int, int] | None = None):
     """Merge + pack + rev LUT for pre-routed wire-label streams.
 
     labels, valid: [..., n_events] (fwd LUT + route enables already applied);
@@ -145,6 +146,14 @@ def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
 
     Returns (out_labels i32[..., capacity], out_valid bool[..., capacity],
              dropped i32[...]).
+
+    Timed datapath: ``times`` is the int32[..., n_events] timestamp lane
+    (departure + accumulated fixed/uplink delay so far) and ``queue`` the
+    static (service_ns, cc_interval, stall_total_ns) triple from
+    ``latency.TimedWire.queue``.  The lane rides the pack's scatter and
+    picks up the destination's rank-dependent queueing inside the kernel
+    (oracle and Pallas paths bit-exact); the return gains
+    ``out_times i32[..., capacity]`` before ``dropped``.
     """
     if mode is None:
         mode = default_mode()
@@ -153,6 +162,13 @@ def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
             f"valid shape {valid.shape} must match labels shape "
             f"{labels.shape} slot-for-slot; implicit broadcasting would "
             "mis-rank the merge stream in the pack unit")
+    if (times is None) != (queue is None):
+        raise ValueError("the timed merge needs both the timestamp lane and "
+                         "the static queue constants (times XOR queue given)")
+    if times is not None and times.shape != labels.shape:
+        raise ValueError(
+            f"times shape {times.shape} must match labels shape "
+            f"{labels.shape} slot-for-slot (the lane rides the same pack)")
     if seg_lens is not None:
         seg_lens = tuple(int(s) for s in seg_lens)
         if sum(seg_lens) != labels.shape[-1]:
@@ -169,9 +185,9 @@ def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
                 f"per-stream rev LUTs: {rev_lut.shape[0]} tables do not "
                 f"match {n_streams} streams (labels {labels.shape})")
     if mode == MODE_JAX:
-        out_l, out_v, dropped = _ref.merge_pack_ref(
+        outs = _ref.merge_pack_ref(
             labels, valid, rev_lut, capacity=capacity, seg_lens=seg_lens,
-            compact=compact)
+            compact=compact, times=times, queue=queue)
     elif mode in (MODE_PALLAS, MODE_INTERPRET):
         lead = labels.shape[:-1]
         n = labels.shape[-1]
@@ -181,13 +197,19 @@ def fused_merge_pack(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array,
         n_segments = 1
         if seg_lens and len(set(seg_lens)) == 1:
             n_segments = len(seg_lens)
-        out_l, out_v, dropped = merge_pack_fwd(
+        outs = merge_pack_fwd(
             labels.reshape(-1, n), valid.reshape(-1, n).astype(jnp.int32),
             rev_lut.astype(jnp.int32), capacity=capacity,
-            interpret=mode == MODE_INTERPRET, n_segments=n_segments)
-        out_l = out_l.reshape(*lead, capacity)
-        out_v = out_v.reshape(*lead, capacity)
-        dropped = dropped.reshape(lead)
+            interpret=mode == MODE_INTERPRET, n_segments=n_segments,
+            times=None if times is None
+            else times.reshape(-1, n).astype(jnp.int32),
+            queue=queue)
+        outs = (*(o.reshape(*lead, capacity) for o in outs[:-1]),
+                outs[-1].reshape(lead))
     else:
         raise ValueError(f"unknown exchange mode: {mode!r}")
-    return out_l, out_v.astype(jnp.bool_), dropped
+    if queue is None:
+        out_l, out_v, dropped = outs
+        return out_l, out_v.astype(jnp.bool_), dropped
+    out_l, out_v, out_t, dropped = outs
+    return out_l, out_v.astype(jnp.bool_), out_t, dropped

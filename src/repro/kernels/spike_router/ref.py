@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.events import make_frame, make_frame_segmented, unpack_wire16
 from repro.core.routing import lookup_fwd, lookup_rev
+from repro.kernels.spike_router.spike_router import _dest_queue_ns
 
 
 def spike_router_ref(labels, valid, lut, *, capacity: int):
@@ -85,7 +86,8 @@ def exchange_stream_ref(labels, valid, fwd_luts, rev_luts, enables, *,
 
 def merge_pack_ref(labels, valid, rev_lut, *, capacity: int,
                    seg_lens: tuple[int, ...] | None = None,
-                   compact: bool = False):
+                   compact: bool = False, times=None,
+                   queue: tuple[int, int, int] | None = None):
     """Merge-pack-rev oracle matching ``merge_pack_fwd``.
 
     labels, valid: [..., n_events] pre-routed wire labels; ``labels`` may be
@@ -98,16 +100,24 @@ def merge_pack_ref(labels, valid, rev_lut, *, capacity: int,
     dims must then flatten to ``batch``).
     Returns (out_labels i32[..., capacity], out_valid i32[..., capacity],
              dropped i32[...]).
+
+    Timed datapath: ``times`` (int32[..., n_events]) rides the pack and, as
+    in the kernel, picks up the destination queueing of its pack rank
+    (``queue`` = static (service_ns, cc_interval, stall_total_ns)); the
+    return gains ``out_times`` before ``dropped``.
     """
     valid = jnp.asarray(valid).astype(jnp.bool_)
     if jnp.asarray(labels).dtype == jnp.int16:
         labels, word_valid = unpack_wire16(labels)
         valid = valid & word_valid
     labels = jnp.asarray(labels, jnp.int32)
+    if (times is None) != (queue is None):
+        raise ValueError("the timed merge needs both the timestamp lane and "
+                         "the static queue constants (times XOR queue given)")
     if seg_lens is None:
-        frame, dropped = make_frame(labels, None, valid, capacity)
+        frame, dropped = make_frame(labels, times, valid, capacity)
     else:
-        frame, dropped = make_frame_segmented(labels, None, valid, capacity,
+        frame, dropped = make_frame_segmented(labels, times, valid, capacity,
                                               seg_lens, compact=compact)
     if rev_lut.ndim == 2:
         lead = frame.labels.shape[:-1]
@@ -119,5 +129,10 @@ def merge_pack_ref(labels, valid, rev_lut, *, capacity: int,
         chip, rev_en = lookup_rev(rev_lut, frame.labels)
     out_valid = frame.valid & rev_en
     out_labels = jnp.where(out_valid, chip, 0)
+    if queue is None:
+        return (out_labels.astype(jnp.int32), out_valid.astype(jnp.int32),
+                dropped.astype(jnp.int32))
+    arrive = frame.times.astype(jnp.int32) + _dest_queue_ns(capacity, queue)
+    out_times = jnp.where(out_valid, arrive, 0)
     return (out_labels.astype(jnp.int32), out_valid.astype(jnp.int32),
-            dropped.astype(jnp.int32))
+            out_times.astype(jnp.int32), dropped.astype(jnp.int32))

@@ -69,19 +69,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 # Bit layout of the LUT entries is owned by repro.core.routing (the table
-# builders); the 16-bit wire-word layout by repro.core.events.  The kernels
-# decode with the same constants.
+# builders); the 16-bit wire-word layout by repro.core.events; the timed
+# lane's queue arithmetic by repro.core.latency.  The kernels decode/compute
+# with the same constants and helpers.
 from repro.core.events import WIRE_VALID_BIT
+from repro.core.latency import queue_wait_i32
 from repro.core.routing import (CHIP_LABEL_MASK as CHIP_MASK,
                                 FWD_ENABLE_BIT as ENABLE_BIT,
                                 FWD_TABLE_SIZE, REV_ENABLE_BIT,
                                 REV_TABLE_SIZE, WIRE_LABEL_MASK as WIRE_MASK)
 
 
-def _pack(ok: jax.Array, payload: jax.Array, capacity: int):
+def _pack(ok: jax.Array, payload: jax.Array, capacity: int,
+          payload2: jax.Array | None = None):
     """The global pack unit: cumsum-compact ``payload`` where ``ok``, bounded
     by ``capacity``.  Returns (packed_payload [capacity], packed_valid
-    [capacity], dropped scalar)."""
+    [capacity], dropped scalar); with ``payload2`` (the timed datapath's
+    timestamp lane) a fourth array rides the same scatter:
+    (packed_payload, packed_payload2, packed_valid, dropped)."""
     pos = jnp.cumsum(ok) - ok                    # exclusive prefix sum
     keep = (ok == 1) & (pos < capacity)
     # Park rejected events in an overflow slot, then slice it away.
@@ -91,10 +96,15 @@ def _pack(ok: jax.Array, payload: jax.Array, capacity: int):
     out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(
         jnp.where(keep, 1, 0))
     dropped = jnp.sum(ok) - jnp.sum(jnp.where(keep, 1, 0))
-    return out_p[:capacity], out_v[:capacity], dropped
+    if payload2 is None:
+        return out_p[:capacity], out_v[:capacity], dropped
+    out_p2 = jnp.zeros((capacity + 1,), jnp.int32).at[idx].set(
+        jnp.where(keep, payload2, 0))
+    return out_p[:capacity], out_p2[:capacity], out_v[:capacity], dropped
 
 
-def _pack_segmented(ok: jax.Array, payload: jax.Array, capacity: int):
+def _pack_segmented(ok: jax.Array, payload: jax.Array, capacity: int,
+                    payload2: jax.Array | None = None):
     """The segmented (two-level) pack unit, tiled over source segments.
 
     ok, payload: [n_seg, seg_len] — contiguous equal-length segments of the
@@ -104,7 +114,9 @@ def _pack_segmented(ok: jax.Array, payload: jax.Array, capacity: int):
     the base offsets; the bounded scatter then places ``base[seg] + rank``,
     which is exactly the global arrival rank — bit-exact with ``_pack`` on
     the flattened stream, including drop counts and arrival order.
-    Returns (packed_payload [capacity], packed_valid [capacity], dropped).
+    Returns (packed_payload [capacity], packed_valid [capacity], dropped);
+    with ``payload2`` the timestamp lane rides the same scatter, as in
+    ``_pack``.
     """
     counts = jnp.sum(ok, axis=-1)                # [n_seg] per-segment totals
     base = jnp.cumsum(counts) - counts           # exclusive scan, S elements
@@ -118,7 +130,25 @@ def _pack_segmented(ok: jax.Array, payload: jax.Array, capacity: int):
     out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(
         jnp.where(keep, 1, 0))
     dropped = jnp.sum(okf) - jnp.sum(jnp.where(keep, 1, 0))
-    return out_p[:capacity], out_v[:capacity], dropped
+    if payload2 is None:
+        return out_p[:capacity], out_v[:capacity], dropped
+    out_p2 = jnp.zeros((capacity + 1,), jnp.int32).at[idx].set(
+        jnp.where(keep, payload2.reshape(-1), 0))
+    return out_p[:capacity], out_p2[:capacity], out_v[:capacity], dropped
+
+
+def _dest_queue_ns(capacity: int, queue: tuple[int, int, int]) -> jax.Array:
+    """Destination-side queueing delay by pack rank (== output slot index).
+
+    ``queue`` is the static (service_ns, cc_interval, stall_total_ns) triple
+    from ``latency.TimedWire.queue``: the event at output slot ``r`` waited
+    ``r·service + ⌊r/cc⌋·stall_total`` behind its merged predecessors —
+    ``latency.queue_wait_i32`` (the integer twin of
+    ``latency.hop_delays(...).total_ns``) evaluated on the slot index.
+    """
+    # TPU requires ≥2D iota; squeeze back to the slot vector.
+    rank = jax.lax.broadcasted_iota(jnp.int32, (capacity, 1), 0)[:, 0]
+    return queue_wait_i32(rank, queue)
 
 
 def _router_kernel(labels_ref, valid_ref, lut_ref, out_labels_ref,
@@ -205,10 +235,10 @@ def _exchange_stream_kernel(labels_ref, valid_ref, fwd_ref, rev_ref,
     dropped_ref[0, 0] = dropped
 
 
-def _merge_pack_kernel(labels_ref, valid_ref, rev_ref, out_labels_ref,
-                       out_valid_ref, dropped_ref, *, capacity: int,
+def _merge_pack_kernel(labels_ref, valid_ref, *refs, capacity: int,
                        batched_rev: bool = False, n_segments: int = 1,
-                       wire16: bool = False):
+                       wire16: bool = False,
+                       queue: tuple[int, int, int] | None = None):
     """Merge + pack + rev LUT for one pre-routed wire-label stream.
 
     ``wire16``: the label stream carries int16 wire words (15-bit label,
@@ -216,7 +246,20 @@ def _merge_pack_kernel(labels_ref, valid_ref, rev_ref, out_labels_ref,
     unpacked here, inside the kernel, and its embedded valid bit is ANDed
     with the caller's (route-enable) mask.  ``n_segments > 1`` tiles the pack
     unit over that many equal source segments.
+
+    Timed datapath (``queue`` set): an int32 timestamp lane travels alongside
+    the wire words (``times_ref``), rides the pack unit's scatter, and picks
+    up the load-dependent queueing delay of its arrival rank
+    (``_dest_queue_ns``) in-kernel — the functional datapath and the latency
+    model as one program.  Ref order then is
+    (labels, valid, times, rev | out_labels, out_valid, out_times, dropped).
     """
+    if queue is not None:
+        times_ref, rev_ref, out_labels_ref, out_valid_ref, out_times_ref, \
+            dropped_ref = refs
+    else:
+        times_ref = out_times_ref = None
+        rev_ref, out_labels_ref, out_valid_ref, dropped_ref = refs
     labels = labels_ref[0]                       # [N] wire labels / words
     ok = valid_ref[0].astype(jnp.int32)          # [N] 0/1
     rev = rev_ref[0] if batched_rev else rev_ref[...]   # [2^15]
@@ -228,13 +271,20 @@ def _merge_pack_kernel(labels_ref, valid_ref, rev_ref, out_labels_ref,
     else:
         labels = labels.astype(jnp.int32)
 
+    times = None if times_ref is None else times_ref[0]
     if n_segments > 1:
         seg_len = ok.shape[0] // n_segments
-        packed_w, packed_v, dropped = _pack_segmented(
+        packed = _pack_segmented(
             ok.reshape(n_segments, seg_len),
-            labels.reshape(n_segments, seg_len), capacity)
+            labels.reshape(n_segments, seg_len), capacity,
+            payload2=times if times is None
+            else times.reshape(n_segments, seg_len))
     else:
-        packed_w, packed_v, dropped = _pack(ok, labels, capacity)
+        packed = _pack(ok, labels, capacity, payload2=times)
+    if queue is not None:
+        packed_w, packed_t, packed_v, dropped = packed
+    else:
+        packed_w, packed_v, dropped = packed
 
     rentry = jnp.take(rev, packed_w & WIRE_MASK, axis=0)
     chip = rentry & CHIP_MASK
@@ -242,6 +292,12 @@ def _merge_pack_kernel(labels_ref, valid_ref, rev_ref, out_labels_ref,
     out_v = packed_v * rev_en
     out_labels_ref[0] = jnp.where(out_v == 1, chip, 0)
     out_valid_ref[0] = out_v
+    if queue is not None:
+        # Arrival time = departure + accumulated fixed path (already in the
+        # lane) + this destination's rank-dependent queueing; invalid slots
+        # keep the frame invariant of zeroed payloads.
+        arrive = packed_t + _dest_queue_ns(capacity, queue)
+        out_times_ref[0] = jnp.where(out_v == 1, arrive, 0)
     dropped_ref[0, 0] = dropped
 
 
@@ -354,7 +410,8 @@ def exchange_stream_fwd(labels: jax.Array, valid: jax.Array,
 
 def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
                    capacity: int, interpret: bool = True,
-                   n_segments: int = 1):
+                   n_segments: int = 1, times: jax.Array | None = None,
+                   queue: tuple[int, int, int] | None = None):
     """Merge-pack-rev pallas_call over a batch of pre-routed streams.
 
     labels, valid: [batch, n_events] wire labels (fwd LUT already applied,
@@ -367,6 +424,12 @@ def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
     one reverse LUT per stream (stacked hierarchical routing).
     Returns (out_labels i32[batch, capacity], out_valid i32[batch, capacity],
              dropped i32[batch, 1]).
+
+    Timed datapath: with ``times`` (int32[batch, n_events] timestamp lane)
+    and ``queue`` (static (service_ns, cc_interval, stall_total_ns) from
+    ``latency.TimedWire.queue``) the lane rides the pack and accumulates the
+    destination's rank-dependent queueing in-kernel; the return gains
+    ``out_times i32[batch, capacity]`` before ``dropped``.
     """
     batch, n_events = labels.shape
     grid = (batch,)
@@ -374,6 +437,9 @@ def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
     if n_events % n_segments:
         raise ValueError(f"n_segments {n_segments} must divide the stream "
                          f"length {n_events}")
+    if (times is None) != (queue is None):
+        raise ValueError("the timed merge needs both the timestamp lane and "
+                         "the static queue constants (times XOR queue given)")
 
     batched_rev = rev_lut.ndim == 2
     ev_spec = pl.BlockSpec((1, n_events), lambda b: (b, 0))
@@ -386,16 +452,32 @@ def merge_pack_fwd(labels: jax.Array, valid: jax.Array, rev_lut: jax.Array, *,
 
     kernel = functools.partial(_merge_pack_kernel, capacity=capacity,
                                batched_rev=batched_rev,
-                               n_segments=n_segments, wire16=wire16)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[ev_spec, ev_spec, rev_spec],
-        out_specs=(out_spec, out_spec, drop_spec),
-        out_shape=(
+                               n_segments=n_segments, wire16=wire16,
+                               queue=queue)
+    if times is None:
+        in_specs = [ev_spec, ev_spec, rev_spec]
+        out_specs = (out_spec, out_spec, drop_spec)
+        out_shape = (
             jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
             jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
             jax.ShapeDtypeStruct((batch, 1), jnp.int32),
-        ),
+        )
+        operands = (labels, valid, rev_lut)
+    else:
+        in_specs = [ev_spec, ev_spec, ev_spec, rev_spec]
+        out_specs = (out_spec, out_spec, out_spec, drop_spec)
+        out_shape = (
+            jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((batch, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        )
+        operands = (labels, valid, times.astype(jnp.int32), rev_lut)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(labels, valid, rev_lut)
+    )(*operands)

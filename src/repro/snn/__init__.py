@@ -14,6 +14,8 @@ from repro.snn.network import (  # noqa: F401
     init_state as init_network_state, routing_matrices, step_dense,
     step_event, run_dense, run_event, run_event_steps,
 )
-from repro.snn.stream import StreamOut, run_stream  # noqa: F401
+from repro.snn.stream import (  # noqa: F401
+    StreamOut, run_stream, stream_latency_stats,
+)
 from repro.snn.encoding import poisson_encode, latency_encode, regular_encode  # noqa: F401
 from repro.snn.plasticity import STDPConfig, STDPState, init_stdp, stdp_step  # noqa: F401

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregator as agg
+from repro.core import latency as latlib
 from repro.core.events import make_frame
 from repro.snn import chip as chiplib
 from repro.snn import network as netlib
@@ -57,6 +58,27 @@ class StreamOut(NamedTuple):
     #                      (zeros in dense mode)
     uplink_dropped: jax.Array  # i32[T, n_chips, batch] compact-before-gather
     #                      drops (nonzero only with link/pod capacities set)
+    # Timed mode only (zero-width otherwise): per-event chip-to-chip wire
+    # latency of every delivered ingress event, in ns — departure at the
+    # window open, arrival = fixed per-stage path + deterministic queueing
+    # (see ``core.latency.timed_wire``).  ``latency_valid`` masks the filled
+    # ingress slots; padding slots carry 0.
+    latency_ns: jax.Array      # i32[T, n_chips, batch, capacity | 0]
+    latency_valid: jax.Array   # bool[T, n_chips, batch, capacity | 0]
+
+
+def stream_latency_stats(out: StreamOut) -> dict[str, float]:
+    """Host-side percentile summary of a timed stream's wire latencies.
+
+    Masks the padding slots and reuses ``core.latency.latency_statistics``
+    (median / p01 / p99 / jitter).  Call on concrete (non-traced) outputs.
+    """
+    lats = jnp.asarray(out.latency_ns)[jnp.asarray(out.latency_valid)]
+    if lats.size == 0:
+        raise ValueError("no delivered events (or run_stream ran untimed — "
+                         "pass timed=True)")
+    return {k: float(v) for k, v in
+            latlib.latency_statistics(lats.astype(jnp.float32)).items()}
 
 
 def _egress_label_grid(cfg: netlib.NetworkConfig) -> jax.Array:
@@ -77,7 +99,8 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                inter_enables: jax.Array | None = None,
                use_fused: bool | None = None,
                link_capacity: int | None = None,
-               pod_capacity: int | None = None) -> StreamOut:
+               pod_capacity: int | None = None,
+               timed: bool = False) -> StreamOut:
     """Scan the full emulation pipeline over ``ext_drives``.
 
     Args:
@@ -93,11 +116,20 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         compact-before-gather uplink stages of
         ``route_step_hierarchical``; overflow lands in
         ``StreamOut.uplink_dropped``, not ``dropped``.
+      timed: event mode only — thread the int32 timestamp lane through the
+        exchange (``core.latency.timed_wire(cfg.latency)``): every spike of
+        a window departs at the window open, and every delivered ingress
+        event reports its chip-to-chip wire latency (fixed per-stage path +
+        deterministic queueing at the sender lane, pod uplink and the
+        destination merge) in ``StreamOut.latency_ns``.  The functional
+        observables (spikes, dropped, uplink_dropped, state) are bit-exact
+        with the untimed run.
 
     Returns:
-      ``StreamOut(state, spikes, dropped, uplink_dropped)`` — bit-exact
-      with the equivalent per-step loop (``run_event_steps`` /
-      ``step_dense`` iterated).
+      ``StreamOut(state, spikes, dropped, uplink_dropped, latency_ns,
+      latency_valid)`` — bit-exact with the equivalent per-step loop
+      (``run_event_steps`` / ``step_dense`` iterated); the latency planes
+      are zero-width unless ``timed``.
     """
     if mode not in ("event", "dense"):
         raise ValueError(f"unknown mode: {mode!r}")
@@ -117,38 +149,54 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         raise ValueError("link_capacity/pod_capacity are uplink stages of "
                          "the hierarchical topology (the stacked star round "
                          "has none)")
+    if timed and mode != "event":
+        raise ValueError("timed streams require the event datapath (the "
+                         "dense surrogate has no wire to time)")
 
     n_steps = ext_drives.shape[0]
     delay = state.inflight.shape[0]
     labels_grid = _egress_label_grid(cfg)
+    timing = latlib.timed_wire(cfg.latency) if timed else None
 
     def exchange(frames):
         if topology == "star":
             ingress, congestion = agg.route_step(params.router, frames,
                                                  cfg.capacity,
-                                                 use_fused=use_fused)
+                                                 use_fused=use_fused,
+                                                 timing=timing)
             return ingress, agg.ExchangeDrops(
                 congestion=congestion, uplink=jnp.zeros_like(congestion))
         return agg.route_step_hierarchical(
             params.router, frames, cfg.capacity, n_pods=n_pods,
             intra_enables=intra_enables, inter_enables=inter_enables,
             use_fused=use_fused, link_capacity=link_capacity,
-            pod_capacity=pod_capacity)
+            pod_capacity=pod_capacity, timing=timing)
 
     def event_route(spikes):
         """Egress tap → exchange → ingress decode, vmapped over batch."""
 
         def one_batch(spk_b):  # [n_chips, n_neurons]
-            frames, egress_drop = make_frame(labels_grid, None, spk_b > 0.5,
+            # Timed egress: all spikes of the window depart at its open
+            # (time 0 on the int32 lane), so the ingress times *are* the
+            # chip-to-chip wire latencies.
+            times = jnp.zeros_like(labels_grid) if timed else None
+            frames, egress_drop = make_frame(labels_grid, times, spk_b > 0.5,
                                              cfg.capacity)
             ingress, drops = exchange(frames)
             drives = jax.vmap(
                 lambda lab, val, rmap: chiplib.labels_to_rows(
                     lab[None], val[None], rmap, cfg.chip.n_rows)[0])(
                         ingress.labels, ingress.valid, params.row_of_label)
-            return drives, egress_drop + drops.congestion, drops.uplink
+            if timed:
+                lat, lat_valid = ingress.times, ingress.valid
+            else:
+                lat = jnp.zeros((*ingress.valid.shape[:-1], 0), jnp.int32)
+                lat_valid = jnp.zeros(lat.shape, jnp.bool_)
+            return (drives, egress_drop + drops.congestion, drops.uplink,
+                    lat, lat_valid)
 
-        return jax.vmap(one_batch, in_axes=1, out_axes=(1, 1, 1))(spikes)
+        return jax.vmap(one_batch, in_axes=1,
+                        out_axes=(1, 1, 1, 1, 1))(spikes)
 
     def body(carry, drive_t):
         chips, inflight, t = carry
@@ -163,20 +211,25 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
             routed = jnp.einsum("sbn,sdnr->dbr", spikes, route_mats)
             dropped = jnp.zeros(spikes.shape[:2], jnp.int32)
             uplink = dropped
+            lat = jnp.zeros((*spikes.shape[:2], 0), jnp.int32)
+            lat_valid = jnp.zeros(lat.shape, jnp.bool_)
         else:
-            routed, dropped, uplink = event_route(spikes)
+            routed, dropped, uplink, lat, lat_valid = event_route(spikes)
         # Egress: the consumed slot is exactly the one due ``delay`` steps
         # out — overwrite it in place (double buffering, no shift copy).
         inflight = jax.lax.dynamic_update_index_in_dim(inflight, routed,
                                                        slot, 0)
-        return (new_chips, inflight, t + 1), (spikes, dropped, uplink)
+        return ((new_chips, inflight, t + 1),
+                (spikes, dropped, uplink, lat, lat_valid))
 
-    (chips, inflight, _), (spikes, dropped, uplink) = jax.lax.scan(
-        body, (state.chips, state.inflight, jnp.int32(0)), ext_drives)
+    (chips, inflight, _), (spikes, dropped, uplink, lat, lat_valid) = \
+        jax.lax.scan(body, (state.chips, state.inflight, jnp.int32(0)),
+                     ext_drives)
     # Restore shift-register order so the final state is bit-exact with the
     # per-step path (slot ``t % delay`` was written last).
     if delay > 1 and n_steps % delay:
         inflight = jnp.roll(inflight, -(n_steps % delay), axis=0)
     return StreamOut(state=netlib.NetworkState(chips=chips,
                                                inflight=inflight),
-                     spikes=spikes, dropped=dropped, uplink_dropped=uplink)
+                     spikes=spikes, dropped=dropped, uplink_dropped=uplink,
+                     latency_ns=lat, latency_valid=lat_valid)

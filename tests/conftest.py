@@ -1,0 +1,30 @@
+"""Shared test fixtures: the golden-fixture regeneration escape hatch.
+
+``pytest --regen-golden`` rewrites the frozen fixtures under
+``tests/golden/`` in place (the golden tests then skip instead of compare);
+without the flag, golden tests assert bit-exactness against the files.
+"""
+
+import pathlib
+
+import pytest
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="regenerate tests/golden/ fixtures in place instead of "
+             "comparing against them")
+
+
+@pytest.fixture
+def regen_golden(request) -> bool:
+    return request.config.getoption("--regen-golden")
+
+
+@pytest.fixture
+def golden_path():
+    """Resolve a fixture filename inside ``tests/golden/``."""
+    return lambda name: GOLDEN_DIR / name
