@@ -5,25 +5,28 @@ emulation.  This benchmark drives the fused route-merge-pack datapath both
 ways —
 
   * ``per_step_loop`` — one jit'd exchange round dispatched T times
-    (route_step / route_step_hierarchical), the pre-streaming behaviour;
+    (``fabric_route_step`` on the topology's plan), the pre-streaming
+    behaviour;
   * ``scan_stream``   — the streaming engine: all T rounds in one compiled
-    program (``fused_exchange_stream`` for the star; ``lax.scan`` over the
-    stacked two-layer round for the hierarchical topology), routing tables
+    program (``fused_exchange_stream`` for the plain star; ``lax.scan`` over
+    the stacked hop-graph round for everything deeper), routing tables
     staged once.
 
-— at the paper's deployed ``FULL_BACKPLANE`` (12 chips, one star) and the
-§V ``PROJECTED_120CHIP`` (10 backplanes × 12 chips, two-layer) topologies.
+— at the paper's deployed ``FULL_BACKPLANE`` (12 chips, one star), the §V
+``PROJECTED_120CHIP`` (10 backplanes × 12 chips, two-layer) and the
+extension-lane ``EXT_4CASE_96CHIP`` scenario (12 chips × 2 backplanes per 4U
+case × 4 cases chained over the Aggregator's 4 extension lanes — a 3-level
+fabric plan, ISSUE 5).
 
-Headline numbers run at paper-typical occupancy (§IV: ~100 kHz/chip leaves
-exchange frames a few percent full; OCC_HEADLINE = 5%) with the
-sparsity-aware datapath on for the hierarchical topology: senders pack to
-``link_capacity`` before merging, pods pack to ``pod_capacity`` before the
-layer-2 merge, and the segmented pack unit takes the bounded per-segment
-gather.  ``stream_dense_*`` keys time the same traffic through the dense
-(pre-sparsity, no-capacity) datapath so the before/after is recorded; the
-``stream_occ*`` sweep resolves the scan time over 2%/10%/50% occupancy at
-both topologies.  Outputs are asserted identical between loop and scan
-before timing.
+Every topology is one ``repro.core.fabric`` plan; the per-level
+compact-before-gather capacities are sized from the expected occupancy with
+2-4x headroom (``_level_caps``), cascading through the hop graph exactly
+like the hardware uplinks.  Headline numbers run at paper-typical occupancy
+(§IV: ~100 kHz/chip leaves exchange frames a few percent full;
+OCC_HEADLINE = 5%); ``stream_dense_*`` keys time the same traffic through
+the dense (no-capacity) datapath, and the ``stream_occ*`` sweep resolves the
+scan time over 2%/10%/50% occupancy.  Outputs are asserted identical
+between loop and scan before timing.
 
 ``run_timed`` additionally drives the *timed* streaming datapath (ISSUE 4):
 the same scan with the int32 timestamp lane threaded through the exchange —
@@ -34,7 +37,8 @@ percentiles of the delivered events).
 
 Writes ``stream_*`` keys into ``BENCH_interconnect.json`` (merged with the
 single-round keys from ``interconnect_throughput.py``); see README.md for
-the key glossary.
+the key glossary.  ``benchmarks/run.py`` stamps the environment metadata
+next to them and appends every run to ``BENCH_history.jsonl``.
 """
 
 import json
@@ -45,10 +49,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (FULL_BACKPLANE, PROJECTED_120CHIP, full_route_enables,
-                        identity_router, make_frame, route_step,
-                        route_step_hierarchical, timed_wire)
+from repro.core import fabric as fablib
+from repro.core import identity_router, make_frame, timed_wire
 from repro.core.events import EventFrame
+from repro.core.fabric import FabricSpec, LevelSpec, compile_fabric
 from repro.kernels.spike_router.ops import fused_exchange_stream
 
 BENCH_JSON = os.environ.get("BENCH_INTERCONNECT_JSON",
@@ -56,6 +60,14 @@ BENCH_JSON = os.environ.get("BENCH_INTERCONNECT_JSON",
 N_STEPS = 64
 OCC_HEADLINE = 0.05                 # §IV paper-typical frame occupancy
 OCC_SWEEP = (0.02, 0.10, 0.50)
+
+# (name, per-level fan-ins leaf-first, cap_in, ingress capacity).  The leaf
+# order is top-major (chip k lives in backplane k//12, case k//24, ...).
+CASES = (
+    ("FULL_BACKPLANE", (12,), 64, 256),
+    ("PROJECTED_120CHIP", (12, 10), 32, 128),
+    ("EXT_4CASE_96CHIP", (12, 2, 4), 24, 96),
+)
 
 
 def _merge_bench_json(updates, path=BENCH_JSON):
@@ -79,13 +91,35 @@ def _frames_for(n_nodes: int, cap_in: int, n_steps: int, key,
     return frames
 
 
-def _sparse_caps(cap_in: int, per: int, occupancy: float):
-    """Size the uplink stages for an expected occupancy with ~2-4x headroom
-    (the hardware provisions the lane for the spike-rate budget, not the
-    worst case); at high occupancy they saturate at the raw sizes."""
+def _level_caps(fan_ins, cap_in: int, occupancy: float):
+    """Per-level compact-before-gather capacities with 2-4x headroom (the
+    hardware provisions each uplink for the spike-rate budget, not the worst
+    case); at high occupancy they saturate at the raw stream sizes.  The
+    1-level star keeps its dense lanes (no uplink stage), matching the
+    pre-fabric benchmark."""
+    if len(fan_ins) == 1:
+        return (None,)
     lane = min(cap_in, max(4, 4 * math.ceil(cap_in * occupancy)))
-    pod = min(per * lane, max(8, 2 * math.ceil(per * cap_in * occupancy)))
-    return lane, pod
+    caps = [lane]
+    raw = lane
+    leaves = 1
+    for f in fan_ins[:-1]:
+        leaves *= f
+        raw = raw * f
+        caps.append(min(raw, max(8, 2 * math.ceil(leaves * cap_in
+                                                  * occupancy))))
+        raw = caps[-1]
+    return tuple(caps)
+
+
+def _plan_for(fan_ins, cap: int, level_caps) -> "fablib.FabricPlan":
+    """Compile the topology's hop-graph plan (top level rides the extension
+    lanes on 3+-level fabrics)."""
+    levels = tuple(
+        LevelSpec(fan_in=f, link_capacity=c,
+                  extension=(len(fan_ins) > 2 and i == len(fan_ins) - 1))
+        for i, (f, c) in enumerate(zip(fan_ins, level_caps)))
+    return compile_fabric(FabricSpec(levels=levels, capacity=cap))
 
 
 def _time_loop(step_fn, frames, n_steps, trials=3):
@@ -132,33 +166,34 @@ def _check_equal(loop_out, scan_out, n_steps):
             assert jnp.array_equal(a, b)
 
 
-def _build_fns(state, topo, cap, link_capacity=None, pod_capacity=None):
-    """(step_fn, stream_fn) for one topology/datapath configuration."""
-    if topo.second_layer:
-        n_pods = topo.n_backplanes
-        intra = full_route_enables(topo.chips_per_backplane)
-        inter = full_route_enables(n_pods)
-        kw = dict(n_pods=n_pods, intra_enables=intra, inter_enables=inter,
-                  link_capacity=link_capacity, pod_capacity=pod_capacity)
+def _build_fns(state, plan):
+    """(step_fn, stream_fn) for one compiled fabric plan."""
+    cap = plan.capacity
+    if plan.n_levels == 1 and plan.levels[0].link_capacity is None:
+        # Plain star: the multi-step Pallas kernel is the streaming engine;
+        # the per-step loop dispatches the 1-level round (its fused fast
+        # path is the single-round kernel).
+        def step_fn(f):
+            out, drops = fablib.fabric_route_step(state, f, plan)
+            return out, drops.congestion
 
-        step_fn = jax.jit(lambda f: route_step_hierarchical(state, f, cap,
-                                                            **kw))
+        stream_fn = jax.jit(lambda fr: fused_exchange_stream(
+            fr.labels, fr.valid, state.fwd_tables, state.rev_tables,
+            plan.levels[0].enables, capacity=cap))
+        return jax.jit(step_fn), stream_fn
 
-        def _scan(fr):
-            def body(_, fr_t):
-                out, drops = route_step_hierarchical(state, EventFrame(*fr_t),
-                                                     cap, **kw)
-                return None, (out.labels, out.valid, drops)
-            _, outs = jax.lax.scan(body, None, tuple(fr))
-            return outs
+    step_fn = jax.jit(
+        lambda f: fablib.fabric_route_step(state, f, plan))
 
-        return step_fn, jax.jit(_scan)
+    def _scan(fr):
+        def body(_, fr_t):
+            out, drops = fablib.fabric_route_step(state, EventFrame(*fr_t),
+                                                  plan)
+            return None, (out.labels, out.valid, drops)
+        _, outs = jax.lax.scan(body, None, tuple(fr))
+        return outs
 
-    step_fn = jax.jit(lambda f: route_step(state, f, cap))
-    stream_fn = jax.jit(lambda fr: fused_exchange_stream(
-        fr.labels, fr.valid, state.fwd_tables, state.rev_tables,
-        state.route_enables, capacity=cap))
-    return step_fn, stream_fn
+    return step_fn, jax.jit(_scan)
 
 
 def run(verbose: bool = True, n_steps: int = N_STEPS):
@@ -166,26 +201,18 @@ def run(verbose: bool = True, n_steps: int = N_STEPS):
     results = {}
     rows = []
 
-    cases = (
-        ("FULL_BACKPLANE", FULL_BACKPLANE, 64, 256),
-        ("PROJECTED_120CHIP", PROJECTED_120CHIP, 32, 128),
-    )
-    for name, topo, cap_in, cap in cases:
-        n = topo.n_chips
+    for name, fan_ins, cap_in, cap in CASES:
+        n = math.prod(fan_ins)
         state = identity_router(n)
         tag = f"[{name},T={n_steps}]"
-
-        def _caps(occ):
-            if not topo.second_layer:
-                return None, None
-            return _sparse_caps(cap_in, topo.chips_per_backplane, occ)
 
         # -- headline: paper-typical occupancy, sparsity-aware datapath ----
         frames = _frames_for(n, cap_in, n_steps,
                              jax.random.fold_in(key, n), OCC_HEADLINE)
         n_events = int(frames.valid.sum())
-        lane, pod = _caps(OCC_HEADLINE)
-        step_fn, stream_fn = _build_fns(state, topo, cap, lane, pod)
+        caps = _level_caps(fan_ins, cap_in, OCC_HEADLINE)
+        plan = _plan_for(fan_ins, cap, caps)
+        step_fn, stream_fn = _build_fns(state, plan)
         t_loop, loop_out = _time_loop(step_fn, frames, n_steps)
         t_scan, scan_out = _time_scan(stream_fn, frames)
         _check_equal(loop_out, scan_out, n_steps)
@@ -200,8 +227,8 @@ def run(verbose: bool = True, n_steps: int = N_STEPS):
         results[f"stream_scan_events_per_s{tag}"] = ev_s
         rows.append((name, n_steps, loop_us, scan_us, speedup, ev_s))
         if verbose:
-            caps_note = (f" (lane={lane}, pod={pod})"
-                         if topo.second_layer else "")
+            caps_note = (f" (caps {'/'.join(str(c) for c in caps)})"
+                         if len(fan_ins) > 1 else "")
             print(f"exchange_stream[{name} loop],{loop_us:.0f},us/step"
                   f"{caps_note}")
             print(f"exchange_stream[{name} scan],{scan_us:.0f},us/step "
@@ -210,8 +237,9 @@ def run(verbose: bool = True, n_steps: int = N_STEPS):
                   f"{speedup:.2f}x vs per-step dispatch")
 
         # -- dense before/after: same traffic, pre-sparsity datapath -------
-        if topo.second_layer:
-            _, dense_fn = _build_fns(state, topo, cap)
+        if len(fan_ins) > 1:
+            dense_plan = _plan_for(fan_ins, cap, (None,) * len(fan_ins))
+            _, dense_fn = _build_fns(state, dense_plan)
             t_dense, _ = _time_scan(dense_fn, frames)
             dense_us = t_dense / n_steps * 1e6
             results[f"stream_dense_scan_us_per_step{tag}"] = dense_us
@@ -221,13 +249,14 @@ def run(verbose: bool = True, n_steps: int = N_STEPS):
                       f"sparsity-aware)")
 
         # -- occupancy sweep: how the scan scales with frame fill ----------
-        fns_cache = {(lane, pod): stream_fn}      # reuse compiled programs
+        fns_cache = {caps: stream_fn}             # reuse compiled programs
         for occ in OCC_SWEEP:
             frames_o = _frames_for(n, cap_in, n_steps,
                                    jax.random.fold_in(key, 1000 + n), occ)
-            caps_o = _caps(occ)
+            caps_o = _level_caps(fan_ins, cap_in, occ)
             if caps_o not in fns_cache:
-                fns_cache[caps_o] = _build_fns(state, topo, cap, *caps_o)[1]
+                fns_cache[caps_o] = _build_fns(
+                    state, _plan_for(fan_ins, cap, caps_o))[1]
             t_occ, _ = _time_scan(fns_cache[caps_o], frames_o)
             occ_us = t_occ / n_steps * 1e6
             okey = f"stream_occ{int(occ * 100)}_scan_us_per_step{tag}"
@@ -250,45 +279,30 @@ def run(verbose: bool = True, n_steps: int = N_STEPS):
 # Soft budget for the timestamp lane (the acceptance target) and generous
 # hard bounds: on shared CI runners wall-clock ratios jitter, so breaching
 # the budget only warns; only a pathological blow-up fails the run.  The
-# small 12-chip star is dominated by fixed per-step costs (µs-scale steps,
-# this PR records 1.87x there) and gets extra headroom; the projected
-# 120-chip case is the one the acceptance bound protects (records 1.01x).
+# small 12-chip star is dominated by fixed per-step costs (µs-scale steps)
+# and gets extra headroom; the projected 120-chip case is the one the
+# acceptance bound protects, and the 96-chip extension fabric inherits its
+# limit.
 TIMED_OVERHEAD_BUDGET = 1.5
-TIMED_OVERHEAD_HARD_LIMIT = {"FULL_BACKPLANE": 4.0, "PROJECTED_120CHIP": 2.5}
+TIMED_OVERHEAD_HARD_LIMIT = {"FULL_BACKPLANE": 4.0, "PROJECTED_120CHIP": 2.5,
+                             "EXT_4CASE_96CHIP": 2.5}
 
 
-def _build_timed_scan(state, topo, cap, timing, link_capacity=None,
-                      pod_capacity=None):
-    """Streamed exchange with the timed round scanned over the time axis;
-    ``timing=None`` gives the *same engine* without the timestamp lane
-    (``aggregator._route_step_merge`` for the star — route_step's untimed
-    default would swap to the fused_exchange kernel, a different engine),
-    so the overhead ratio isolates the lane, not an engine change."""
-    from repro.core.aggregator import _route_step_merge
-
-    if topo.second_layer:
-        kw = dict(n_pods=topo.n_backplanes,
-                  intra_enables=full_route_enables(topo.chips_per_backplane),
-                  inter_enables=full_route_enables(topo.n_backplanes),
-                  link_capacity=link_capacity, pod_capacity=pod_capacity,
-                  timing=timing)
-
-        def _scan(fr):
-            def body(_, fr_t):
-                out, drops = route_step_hierarchical(state, EventFrame(*fr_t),
-                                                     cap, **kw)
-                return None, (out.labels, out.valid, out.times,
-                              drops.congestion)
-            _, outs = jax.lax.scan(body, None, tuple(fr))
-            return outs
-    else:
-        def _scan(fr):
-            def body(_, fr_t):
-                out, dropped = _route_step_merge(state, EventFrame(*fr_t),
-                                                 cap, timing, True)
-                return None, (out.labels, out.valid, out.times, dropped)
-            _, outs = jax.lax.scan(body, None, tuple(fr))
-            return outs
+def _build_timed_scan(state, plan, timing):
+    """Streamed exchange with the hop-graph round scanned over the time
+    axis; ``timing=None`` gives the *same engine* without the timestamp lane
+    (``engine="merge"`` keeps the 1-level star off the fused_exchange
+    kernel, which would be a different engine), so the overhead ratio
+    isolates the lane, not an engine change."""
+    def _scan(fr):
+        def body(_, fr_t):
+            out, drops = fablib.fabric_route_step(
+                state, EventFrame(*fr_t), plan, timing=timing,
+                engine="merge")
+            return None, (out.labels, out.valid, out.times,
+                          drops.congestion)
+        _, outs = jax.lax.scan(body, None, tuple(fr))
+        return outs
     return jax.jit(_scan)
 
 
@@ -300,24 +314,17 @@ def run_timed(verbose: bool = True, n_steps: int = N_STEPS):
     results = {}
     rows = []
 
-    cases = (
-        ("FULL_BACKPLANE", FULL_BACKPLANE, 64, 256),
-        ("PROJECTED_120CHIP", PROJECTED_120CHIP, 32, 128),
-    )
-    for name, topo, cap_in, cap in cases:
-        n = topo.n_chips
+    for name, fan_ins, cap_in, cap in CASES:
+        n = math.prod(fan_ins)
         state = identity_router(n)
         tag = f"[{name},T={n_steps}]"
         # Identical traffic and uplink sizing to ``run``'s headline case.
         frames = _frames_for(n, cap_in, n_steps,
                              jax.random.fold_in(key, n), OCC_HEADLINE)
-        if topo.second_layer:
-            lane, pod = _sparse_caps(cap_in, topo.chips_per_backplane,
-                                     OCC_HEADLINE)
-        else:
-            lane, pod = None, None
-        untimed_fn = _build_timed_scan(state, topo, cap, None, lane, pod)
-        timed_fn = _build_timed_scan(state, topo, cap, timing, lane, pod)
+        plan = _plan_for(fan_ins, cap,
+                         _level_caps(fan_ins, cap_in, OCC_HEADLINE))
+        untimed_fn = _build_timed_scan(state, plan, None)
+        timed_fn = _build_timed_scan(state, plan, timing)
 
         t_untimed, _ = _time_scan(untimed_fn, frames)
         t_timed, timed_out = _time_scan(timed_fn, frames)

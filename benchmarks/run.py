@@ -1,22 +1,31 @@
 """Benchmark orchestrator — one module per paper table/figure/claim.
 
-Prints ``name,us_per_call,derived`` CSV lines per benchmark, and writes
-``BENCH_interconnect.json`` (name → us_per_call) for the routing datapath so
-the perf trajectory is machine-readable across PRs.
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, writes
+``BENCH_interconnect.json`` (name → us_per_call) for the routing datapath,
+stamps the recording environment next to the numbers (``_environment`` key:
+python/jax versions, cpu count, platform, and a fixed calibration
+microbenchmark), and appends every run to ``BENCH_history.jsonl`` — so
+cross-container drift (PR 4's 938→3750 µs re-record) is machine-diagnosable
+from the calibration ratio instead of a prose footnote.
 
   fig5_latency            Fig 5A  latency distributions vs rate (3:1 fan-in)
   fig5_speedup            Fig 5B  speed-up factor vs routing latency
   encoding_tradeoff       §III    8b10b@5G vs 64b66b@8G
   scaling_projection      §V      120-chip second-layer projection
   interconnect_throughput §III    routing datapath throughput
-  exchange_stream         §III    streaming engine vs per-step dispatch
+  stream                  §III/§V streaming engine vs per-step dispatch
+                                  (star, two-layer, 3-level EXT_4CASE fabric)
   stream_timed            §IV     timed streaming datapath (timestamp lane)
   moe_dispatch            DESIGN §4  event-frame dispatch at LM scale
   roofline_table          §Roofline  all dry-run cells (needs results/)
 """
 
 import argparse
+import datetime
+import json
+import os
 import sys
+import time
 import traceback
 
 from benchmarks import (encoding_tradeoff, exchange_stream, fig5_latency,
@@ -30,17 +39,90 @@ ALL = [
     ("encoding_tradeoff", encoding_tradeoff.run),
     ("scaling_projection", scaling_projection.run),
     ("interconnect_throughput", interconnect_throughput.run),
-    ("exchange_stream", exchange_stream.run),
+    ("stream", exchange_stream.run),
     ("stream_timed", exchange_stream.run_timed),
     ("moe_dispatch", moe_dispatch.run),
     ("grad_compression", grad_compression.run),
     ("roofline_table", roofline_table.run),
 ]
+# Pre-fabric spelling of the streaming benchmark, kept for CI/scripts.
+ALIASES = {"exchange_stream": "stream"}
+
+HISTORY_JSONL = os.environ.get("BENCH_HISTORY_JSONL", "BENCH_history.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# Environment stamping: make cross-container drift diagnosable
+# ---------------------------------------------------------------------------
+
+
+def _calibration_us(trials: int = 5) -> float:
+    """Fixed microbenchmark (jit'd 512x512 f32 matmul + reduction), min over
+    ``trials``: a machine-speed scalar recorded next to every timing, so a
+    re-record on a slower/noisier container shows up as a calibration shift
+    rather than a mystery regression in the datapath numbers."""
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.arange(512 * 512, dtype=jnp.float32).reshape(512, 512) / 1e6
+    f = jax.jit(lambda a: (a @ a).sum())
+    f(x).block_until_ready()
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        f(x).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def environment_metadata() -> dict:
+    """The recording environment of a benchmark run."""
+    import platform
+
+    import jax
+
+    return {
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count() or 0,
+        "platform": platform.platform(),
+        "calibration_matmul_us": round(_calibration_us(), 3),
+    }
+
+
+def stamp_environment(bench_json: str | None = None,
+                      history_jsonl: str | None = None, *,
+                      ran: list[str] | None = None,
+                      failures: list[str] | None = None) -> dict:
+    """Write ``_environment`` into the benchmark JSON and append the full
+    run record (environment + results + what ran) to the history log."""
+    bench_json = bench_json or interconnect_throughput.BENCH_JSON
+    history_jsonl = history_jsonl or HISTORY_JSONL
+    payload = {}
+    if os.path.exists(bench_json):
+        with open(bench_json) as f:
+            payload = json.load(f)
+    env = environment_metadata()
+    payload["_environment"] = env
+    with open(bench_json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    record = {
+        "utc": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "benchmarks": ran or [],
+        "failures": failures or [],
+        "environment": env,
+        "results": {k: v for k, v in payload.items() if k != "_environment"},
+    }
+    with open(history_jsonl, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    return env
 
 
 def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(
-        description="Run the paper benchmarks (all nine modules by default).")
+        description="Run the paper benchmarks (all ten modules by default).")
     parser.add_argument(
         "--only", action="append", metavar="NAME",
         help="run only the named benchmark (repeatable); one of: "
@@ -49,12 +131,13 @@ def main(argv: list[str] | None = None) -> None:
 
     selected = ALL
     if args.only:
+        wanted = {ALIASES.get(n, n) for n in args.only}
         known = {name for name, _ in ALL}
-        unknown = [n for n in args.only if n not in known]
+        unknown = sorted(wanted - known)
         if unknown:
             parser.error(f"unknown benchmark(s) {unknown}; "
                          f"choose from {sorted(known)}")
-        selected = [(name, fn) for name, fn in ALL if name in set(args.only)]
+        selected = [(name, fn) for name, fn in ALL if name in wanted]
 
     failures = []
     for name, fn in selected:
@@ -64,6 +147,13 @@ def main(argv: list[str] | None = None) -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures.append(name)
+
+    env = stamp_environment(ran=[name for name, _ in selected],
+                            failures=failures)
+    print(f"\nenvironment: jax {env['jax']} / python {env['python']} / "
+          f"{env['cpu_count']} cpus / calibration "
+          f"{env['calibration_matmul_us']} us (history: {HISTORY_JSONL})")
+
     if failures:
         print(f"\nFAILED benchmarks: {failures}")
         sys.exit(1)

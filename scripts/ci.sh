@@ -1,11 +1,19 @@
 #!/usr/bin/env bash
 # Local mirror of the CI workflow (.github/workflows/ci.yml splits the same
-# stages into a fast PR job and a full job + benchmark artifact): fast suite
-# first (quick signal), then the full tier-1 suite, then the timed-stream
-# benchmark — all with the repo's src/ on PYTHONPATH, as documented in README.
+# stages into a fast PR job and a full job + benchmark artifacts): repo
+# hygiene first, then the fast suite (quick signal, includes the fabric
+# wrapper-parity battery), then the full tier-1 suite, then the streaming
+# benchmarks (the 3-level EXT_4CASE fabric scenario + the timed lane) — all
+# with the repo's src/ on PYTHONPATH, as documented in README.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== repo hygiene (no tracked bytecode) ==="
+if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
+  echo "ERROR: tracked Python bytecode found (see above); git rm --cached it" >&2
+  exit 1
+fi
 
 echo "=== fast suite (-m 'not slow') ==="
 python -m pytest -q -m "not slow"
@@ -13,5 +21,5 @@ python -m pytest -q -m "not slow"
 echo "=== full tier-1 suite ==="
 python -m pytest -x -q
 
-echo "=== timed-stream benchmark ==="
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream_timed
+echo "=== streaming benchmarks (3-level fabric + timed lane) ==="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed

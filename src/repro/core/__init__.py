@@ -13,6 +13,11 @@ from repro.core.routing import (  # noqa: F401
     full_route_enables, feedforward_route_enables, fan_in_route_enables,
     aggregate, aggregate_baseline,
 )
+from repro.core.fabric import (  # noqa: F401
+    LevelSpec, FabricSpec, LevelPlan, FabricPlan, compile_fabric,
+    fabric_route_step, fabric_exchange, FabricInterconnect,
+    star_spec, hierarchical_spec, ext_4case_spec,
+)
 from repro.core.aggregator import (  # noqa: F401
     RouterState, ExchangeDrops, identity_router, route_step,
     route_step_baseline, route_step_hierarchical, star_exchange,

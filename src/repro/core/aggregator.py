@@ -10,144 +10,39 @@ backplane; ``jax.lax.all_gather`` along that axis *is* the star broadcast
 second, outer mesh axis with its own gather — traffic crossing backplanes
 pays the extra hops, exactly like the projected +0.4 µs.
 
-Fused exchange datapath: by default every exchange round runs through
-``repro.kernels.spike_router`` — fwd LUT gather, route-enable masking,
-multi-source merge, cumsum/scatter pack and rev LUT in one fused kernel
-(compiled Pallas on TPU, the XLA-compiled oracle elsewhere).  Set
-``use_fused=False`` or export ``REPRO_FUSED_EXCHANGE=0`` to run the unfused
-pure-JAX composition instead; ``route_step_baseline`` additionally preserves
-the seed's argsort/broadcast datapath for benchmark comparison.  All paths
-agree on (labels·valid, valid, dropped); exchange outputs carry zeroed
-timestamps (the multi-chip extension discards them, §III) and zero labels in
-invalid slots.
+Fabric datapath: since ISSUE 5 every entry point in this module is a thin
+wrapper over ``repro.core.fabric`` — the star is a 1-level hop-graph plan,
+the §V two-layer system a 2-level plan, both executed by the same generic
+N-level engine (``fabric_route_step`` stacked, ``fabric_exchange`` under
+``shard_map``).  Deeper topologies (e.g. cases chained over the Aggregator's
+4 extension lanes) use ``fabric`` directly; these wrappers exist for
+API stability and stay bit-exact with their pre-fabric implementations —
+spikes, drops, pack order and the timed lane (pinned by the wrapper-parity
+battery in ``tests/test_fabric.py`` and the golden fixture).
 
-Streaming path: continuous-time experiments exchange spikes every timestep,
-so the hot loop is the *time* loop, not one round.  ``route_step`` /
-``route_step_hierarchical`` stay the single-round semantic references;
-``StarInterconnect.stream_fn`` scans T rounds inside one ``shard_map`` with
-the routing tables hoisted out of the loop, and the closed-loop emulation
-engine (chip step → egress tap → exchange → delay-line ingress per scan
-step) lives in ``repro.snn.stream.run_stream``.  The multi-step kernel
-behind both is ``repro.kernels.spike_router`` (grid over timesteps, LUTs
-resident in VMEM).
-
-Sparsity-aware datapath: the hardware never moves dense frames — only
-valid, packed events cross an MGT lane, as 16-bit words.  The software
-mirrors all three properties.  (1) ``link_capacity`` packs each sender's
-egress *before* the gather and ``pod_capacity`` packs each backplane's
-aggregated egress before the layer-2 gather, so gathered traffic is
-proportional to the provisioned event budget, not the frame capacity;
-overflow at these stages is an *uplink* drop, reported in
-``ExchangeDrops.uplink`` separately from destination congestion.  (2) The
-merges run the segmented pack unit (``events.make_frame_segmented`` /
-``_pack_segmented``), which on packed streams reduces per-destination work
-to a count reduction plus a bounded per-segment gather.  (3) Gathered
-streams travel as int16 wire words (``events.pack_wire16``: 15-bit label +
-valid bit), halving gather bandwidth; the merge kernel unpacks in place.
-With the capacities unset (or ≥ the raw sizes) every path is bit-exact
-with the dense datapath.
+All paths agree on (labels·valid, valid, dropped); untimed exchange outputs
+carry zeroed timestamps (the multi-chip extension discards them, §III) and
+zero labels in invalid slots.  The sparsity-aware wire path (compact-before-
+gather uplink capacities, segmented pack, 16-bit wire words) and the timed
+timestamp lane are plan/executor features — see ``repro.core.fabric``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.compat import shard_map as _shard_map
+from repro.core import fabric as fablib
 from repro.core import routing
-from repro.core.events import (EventFrame, make_frame, make_frame_segmented,
-                               pack_wire16, unpack_wire16)
-from repro.core.latency import TimedWire, queue_wait_i32 as _queue_wait_i32
+from repro.core.events import EventFrame
+from repro.core.fabric import (  # noqa: F401  (re-exported legacy API)
+    ExchangeDrops, fused_exchange_enabled)
+from repro.core.latency import TimedWire
 from repro.core.link import LinkConfig
-from repro.core.routing import RoutingTables
-
-
-# ---------------------------------------------------------------------------
-# Timed datapath helpers (integer-ns timestamp lane, see latency.timed_wire)
-# ---------------------------------------------------------------------------
-
-
-def _egress_times(frame_times: jax.Array, ev: jax.Array,
-                  timing: TimedWire) -> jax.Array:
-    """Sender-side arrival times at the Aggregator input: departure + fixed
-    sender path + the MGT uplink lane's serialization wait of each event's
-    egress rank.  Computed on the *unpacked* egress so the compact-before-
-    gather pack (which preserves order) cannot change timestamps —
-    capacity parity holds for the timestamp lane too."""
-    ok = ev.astype(jnp.int32)
-    rank = jnp.cumsum(ok, axis=-1) - ok
-    wait = _queue_wait_i32(rank, timing.uplink_queue)
-    return jnp.where(ev, frame_times.astype(jnp.int32)
-                     + timing.sender_fixed_ns + wait, 0)
-
-
-def _arrival_times(out_times: jax.Array, out_valid: jax.Array,
-                   timing: TimedWire) -> jax.Array:
-    """Receiver-side fixed path, applied after the merge (which already
-    added the destination's rank-dependent queueing in the pack)."""
-    return jnp.where(out_valid, out_times + timing.recv_fixed_ns, 0)
-
-
-def _timed_mode(use_fused: bool) -> str:
-    """Kernel mode for the timed merges, resolved *eagerly* (never ``None``)
-    so the ops-level jit caches one entry per concrete mode — parity tests
-    monkeypatch ``repro.kernels.default_mode`` and must not hit a stale
-    ``mode=None`` trace."""
-    from repro.kernels import default_mode
-
-    return default_mode() if use_fused else "jax"
-
-
-def _fused_merge(labels, valid, rev, capacity: int, *, seg_lens, compact,
-                 timing: TimedWire | None, use_fused: bool | None,
-                 times=None) -> tuple[EventFrame, jax.Array]:
-    """The shared merge tail of every exchange path: ``fused_merge_pack``
-    (timed lane + destination queue when ``timing`` is set) and assembly of
-    the ingress frame with arrival times (zeros on the untimed wire)."""
-    from repro.kernels.spike_router.ops import fused_merge_pack
-
-    outs = fused_merge_pack(
-        labels, valid, rev, capacity=capacity, seg_lens=seg_lens,
-        compact=compact, times=times,
-        queue=None if timing is None else timing.queue,
-        mode=None if timing is None else _timed_mode(use_fused))
-    if timing is not None:
-        out_l, out_v, out_t, dropped = outs
-        out_t = _arrival_times(out_t, out_v, timing)
-    else:
-        out_l, out_v, dropped = outs
-        out_t = jnp.zeros_like(out_l)
-    return EventFrame(labels=out_l, times=out_t, valid=out_v), dropped
-
-
-def fused_exchange_enabled() -> bool:
-    """Default for ``use_fused`` — env-gated, on unless REPRO_FUSED_EXCHANGE=0."""
-    return os.environ.get("REPRO_FUSED_EXCHANGE", "1").lower() not in (
-        "0", "false", "off")
-
-
-class ExchangeDrops(NamedTuple):
-    """Loss accounting of one exchange round, split by drop point.
-
-    ``congestion``: destination pack-unit overflow (the receiving mux drops
-    under continued congestion — the paper's layer-1 loss semantics).
-    ``uplink``: sender-side overflow of the compact-before-gather stages —
-    events exceeding ``link_capacity`` on the Node-FPGA→Aggregator lane, or
-    ``pod_capacity`` on the backplane's second-layer uplink (attributed to
-    every node of the pod, whose gathered view loses the same events).
-    Both are 0-filled int32 arrays of matching shape; ``total`` sums them.
-    """
-
-    congestion: jax.Array
-    uplink: jax.Array
-
-    @property
-    def total(self) -> jax.Array:
-        return self.congestion + self.uplink
 
 
 class RouterState(NamedTuple):
@@ -181,6 +76,11 @@ def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
                ) -> tuple[EventFrame, jax.Array]:
     """Full datapath for one exchange round.
 
+    .. deprecated:: prefer ``repro.core.fabric`` — this is a thin wrapper
+       over the 1-level fabric plan (``fabric.star_spec`` +
+       ``fabric.fabric_route_step``); arbitrary N-level topologies go
+       through the fabric API directly.
+
     Args:
       state: backplane routing state.
       frames: per-node egress frames, arrays shaped [n_nodes, cap_in].
@@ -200,66 +100,13 @@ def route_step(state: RouterState, frames: EventFrame, capacity: int, *,
       round has no uplink stage (see ``route_step_hierarchical`` /
       ``star_exchange`` for the ``ExchangeDrops``-returning paths).
     """
-    if use_fused is None:
-        use_fused = fused_exchange_enabled()
-    if timing is not None:
-        return _route_step_merge(state, frames, capacity, timing, use_fused)
-    if use_fused:
-        from repro.kernels.spike_router.ops import fused_exchange
-
-        out_l, out_v, dropped = fused_exchange(
-            frames.labels, frames.valid, state.fwd_tables, state.rev_tables,
-            state.route_enables, capacity=capacity)
-        return EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
-                          valid=out_v), dropped
-    # 1. Node egress: forward LUT + enable masking, timestamps dropped (§III).
-    wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables, frames.labels)
-    egress = EventFrame(labels=wire, times=jnp.zeros_like(frames.times),
-                        valid=frames.valid & fwd_en)
-    # 2. Aggregator broadcast with static per-route enables.
-    mixed, dropped = routing.aggregate(egress, state.route_enables, capacity)
-    # 3. Node ingress: reverse LUT + enable masking.
-    chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
-    valid = mixed.valid & rev_en
-    ingress = EventFrame(labels=jnp.where(valid, chip, 0), times=mixed.times,
-                         valid=valid)
-    return ingress, dropped
-
-
-def _route_step_merge(state: RouterState, frames: EventFrame, capacity: int,
-                      timing: TimedWire | None, use_fused: bool
-                      ) -> tuple[EventFrame, jax.Array]:
-    """The stacked star round on the broadcast/merge-pack engine.
-
-    With ``timing`` set this is the timed round: the timestamp lane rides
-    the merge (per-destination rev LUTs, Pallas behind
-    ``kernels.default_mode`` when fused, the jnp oracle when not) and picks
-    up the destination queueing inside the kernel.  With ``timing=None`` it
-    is the *same engine* without the lane — same observables as
-    ``route_step`` on (labels·valid, valid, dropped); the timed benchmark
-    uses it as the apples-to-apples untimed baseline so the overhead ratio
-    isolates the lane, not an engine swap.
-    """
-    n_src, cap_in = frames.labels.shape
-    n_dst = state.rev_tables.shape[0]
-    n = n_src * cap_in
-
-    wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables,
-                                                frames.labels)
-    ev = frames.valid & fwd_en
-
-    # Shared src-major stream, per-destination validity only (as exchange_ref).
-    ok = ev[:, None, :] & state.route_enables.astype(jnp.bool_)[:, :, None]
-    ok = jnp.swapaxes(ok, 0, 1).reshape(n_dst, n)
-    labels_b = jnp.broadcast_to(wire.reshape(n)[None], (n_dst, n))
-    if timing is not None:
-        times = _egress_times(frames.times, ev, timing)
-        times_b = jnp.broadcast_to(times.reshape(n)[None], (n_dst, n))
-    else:
-        times_b = None
-    return _fused_merge(labels_b, ok, state.rev_tables, capacity,
-                        seg_lens=(cap_in,) * n_src, compact=False,
-                        timing=timing, use_fused=use_fused, times=times_b)
+    plan = fablib.compile_fabric(fablib.star_spec(
+        state.route_enables.shape[0], capacity,
+        enables=state.route_enables))
+    ingress, drops = fablib.fabric_route_step(state, frames, plan,
+                                              use_fused=use_fused,
+                                              timing=timing)
+    return ingress, drops.congestion
 
 
 def route_step_hierarchical(state: RouterState, frames: EventFrame,
@@ -273,14 +120,18 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
                             ) -> tuple[EventFrame, ExchangeDrops]:
     """One two-layer (§V) exchange round with all nodes stacked on one device.
 
+    .. deprecated:: prefer ``repro.core.fabric`` — this is a thin wrapper
+       over the 2-level fabric plan (``fabric.hierarchical_spec`` +
+       ``fabric.fabric_route_step``); N-level topologies (extension-lane
+       chains, deeper switched fabrics) go through the fabric API directly.
+
     Semantically identical to ``hierarchical_exchange`` run under
     ``shard_map`` with nodes laid out pod-major (node ``k`` lives in pod
     ``k // (n_nodes // n_pods)``): each destination merges its own
     backplane's egress first (node-major, gated by ``intra_enables``), then
     every backplane's egress pod-major (gated by ``inter_enables`` with the
     own pod excluded), packs to ``capacity`` and applies its rev LUT.
-    Like ``aggregate``, only validity masks are per-destination; labels stay
-    shared views.
+    Only validity masks are per-destination; labels stay shared views.
 
     Sparsity-aware datapath: ``link_capacity`` packs every node's egress to
     that many slots before any merging (only valid, packed events cross an
@@ -310,107 +161,15 @@ def route_step_hierarchical(state: RouterState, frames: EventFrame,
       (ingress frames [n_nodes, capacity],
        ExchangeDrops(congestion [n_nodes], uplink [n_nodes])).
     """
-    if use_fused is None:
-        use_fused = fused_exchange_enabled()
-    n_nodes, cap_in = frames.labels.shape
+    n_nodes = frames.labels.shape[0]
     if n_nodes % n_pods:
         raise ValueError(f"{n_nodes} nodes do not fill {n_pods} pods evenly")
-    per = n_nodes // n_pods
-
-    wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables,
-                                                frames.labels)
-    ev = frames.valid & fwd_en                           # [n_nodes, cap_in]
-    pod_of = jnp.arange(n_nodes) // per
-    node_of = jnp.arange(n_nodes) % per
-    times = (_egress_times(frames.times, ev, timing)
-             if timing is not None else None)
-
-    # Uplink stage 1 — pack each node's egress to its MGT lane capacity.
-    if link_capacity is not None:
-        packed, link_drop = make_frame(wire, times, ev, link_capacity)
-        wire, ev = packed.labels, packed.valid           # [n_nodes, L]
-        if timing is not None:
-            times = packed.times
-        lane = link_capacity
-    else:
-        link_drop = jnp.zeros((n_nodes,), jnp.int32)
-        lane = cap_in
-
-    # Layer 1 — own backplane, node-major (== g1 of hierarchical_exchange).
-    wire_pods = wire.reshape(n_pods, per * lane)
-    local_labels = wire_pods[pod_of]                     # [n_nodes, per*lane]
-    ev_pods = ev.reshape(n_pods, per, lane)
-    intra = jnp.asarray(intra_enables).astype(jnp.bool_)
-    local_valid = (ev_pods[pod_of]
-                   & intra.T[node_of][:, :, None]).reshape(n_nodes,
-                                                           per * lane)
-
-    # Layer 2 — every backplane pod-major, own pod excluded (== g2).  Timed:
-    # inter-backplane events pay the §V second-layer fixed extra plus the
-    # pod uplink lane's serialization wait of their rank in the pod stream.
-    inter = jnp.asarray(inter_enables).astype(jnp.bool_)
-    pod_en = inter.T[pod_of] & (jnp.arange(n_pods)[None, :]
-                                != pod_of[:, None])      # [n_nodes, n_pods]
-    if timing is not None:
-        ev_flat = ev.reshape(n_pods, per * lane)
-        times_pods = times.reshape(n_pods, per * lane)
-        okp = ev_flat.astype(jnp.int32)
-        prank = jnp.cumsum(okp, axis=-1) - okp
-        up_times = jnp.where(
-            ev_flat, times_pods + timing.second_layer_extra_ns
-            + _queue_wait_i32(prank, timing.uplink_queue), 0)
-    else:
-        times_pods = up_times = None
-    if pod_capacity is not None:
-        # Uplink stage 2 — each pod packs its aggregated egress before the
-        # layer-2 merge; remote traffic is n_pods·pod_capacity, not n·cap_in.
-        up, pod_drop = make_frame(wire_pods, up_times,
-                                  ev.reshape(n_pods, per * lane),
-                                  pod_capacity)          # [n_pods, P]
-        remote_labels = jnp.broadcast_to(up.labels.reshape(1, -1),
-                                         (n_nodes, n_pods * pod_capacity))
-        remote_valid = (up.valid[None] & pod_en[:, :, None]
-                        ).reshape(n_nodes, n_pods * pod_capacity)
-        remote_segs = (pod_capacity,) * n_pods
-        uplink = (link_drop + pod_drop[pod_of]).astype(jnp.int32)
-        remote_times = up.times
-    else:
-        remote_labels = jnp.broadcast_to(wire.reshape(1, -1),
-                                         (n_nodes, n_nodes * lane))
-        remote_valid = (ev_pods[None] & pod_en[:, :, None, None]
-                        ).reshape(n_nodes, n_nodes * lane)
-        remote_segs = (lane,) * n_nodes
-        uplink = link_drop.astype(jnp.int32)
-        remote_times = up_times
-
-    labels = jnp.concatenate([local_labels, remote_labels], axis=-1)
-    valid = jnp.concatenate([local_valid, remote_valid], axis=-1)
-    # Link-packed segments are front-compacted and only ever gated per whole
-    # segment, so the merge may take the bounded per-segment gather.
-    seg_lens = (lane,) * per + remote_segs
-    compact = link_capacity is not None
-    if timing is not None:
-        local_times = times_pods[pod_of]                 # shared views, like
-        merge_times = jnp.concatenate(                   # the label planes
-            [local_times, jnp.broadcast_to(remote_times.reshape(1, -1),
-                                           remote_labels.shape)], axis=-1)
-    else:
-        merge_times = None
-
-    if use_fused or timing is not None:
-        ingress, dropped = _fused_merge(labels, valid, state.rev_tables,
-                                        capacity, seg_lens=seg_lens,
-                                        compact=compact, timing=timing,
-                                        use_fused=use_fused,
-                                        times=merge_times)
-        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
-    mixed, dropped = make_frame_segmented(labels, None, valid, capacity,
-                                          seg_lens, compact=compact)
-    chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
-    out_valid = mixed.valid & rev_en
-    ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
-                         times=mixed.times, valid=out_valid)
-    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+    plan = fablib.compile_fabric(fablib.hierarchical_spec(
+        n_pods=n_pods, per_pod=n_nodes // n_pods, capacity=capacity,
+        intra_enables=intra_enables, inter_enables=inter_enables,
+        link_capacity=link_capacity, pod_capacity=pod_capacity))
+    return fablib.fabric_route_step(state, frames, plan, use_fused=use_fused,
+                                    timing=timing)
 
 
 def route_step_baseline(state: RouterState, frames: EventFrame,
@@ -449,6 +208,11 @@ def star_exchange(frame: EventFrame,
                   ) -> tuple[EventFrame, ExchangeDrops]:
     """One exchange round from the perspective of a single node shard.
 
+    .. deprecated:: prefer ``repro.core.fabric`` — this is a thin wrapper
+       over the 1-level fabric plan (``fabric.star_spec`` +
+       ``fabric.fabric_exchange``); N-level meshes go through
+       ``fabric.FabricInterconnect`` directly.
+
     Must run inside ``shard_map``.  ``frame`` holds this node's egress events
     with shape [cap_in]; the return value is this node's ingress frame plus
     its ``ExchangeDrops`` (scalars: congestion at this destination, uplink
@@ -473,53 +237,11 @@ def star_exchange(frame: EventFrame,
     the wire words — ``frame.times`` are departures, the ingress ``times``
     arrivals (fixed path + sender-lane wait + destination merge queueing).
     """
-    if use_fused is None:
-        use_fused = fused_exchange_enabled()
-    me = jax.lax.axis_index(axis_name)
-    # Node egress (fwd LUT is local to this node).
-    wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
-    egress_valid = frame.valid & fwd_en
-    times = (_egress_times(frame.times, egress_valid, timing)
-             if timing is not None else None)
-    # Uplink: compact-before-gather to the MGT lane capacity.
-    if link_capacity is not None:
-        packed, uplink = make_frame(wire, times, egress_valid, link_capacity)
-        wire, egress_valid = packed.labels, packed.valid
-        if timing is not None:
-            times = packed.times
-    else:
-        uplink = jnp.zeros((), jnp.int32)
-    # Star broadcast: every node receives every node's egress — one int16
-    # gather instead of an int32 label gather plus a validity gather.
-    words = pack_wire16(wire, egress_valid)
-    g_words = jax.lax.all_gather(words, axis_name, axis=0)   # [n_src, lane]
-    n_src, lane = g_words.shape
-    # Per-source route enables; slot validity stays embedded in the words.
-    src_en = jnp.broadcast_to(route_enables[:, me][:, None], (n_src, lane))
-    flat_words = g_words.reshape(n_src * lane)
-    flat_en = src_en.reshape(n_src * lane)
-    flat_times = None
-    if timing is not None:
-        flat_times = jax.lax.all_gather(times, axis_name,
-                                        axis=0).reshape(n_src * lane)
-    seg_lens = (lane,) * n_src
-    compact = link_capacity is not None
-    if use_fused or timing is not None:
-        ingress, dropped = _fused_merge(flat_words, flat_en, rev_table,
-                                        capacity, seg_lens=seg_lens,
-                                        compact=compact, timing=timing,
-                                        use_fused=use_fused,
-                                        times=flat_times)
-        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
-    g_labels, g_valid = unpack_wire16(flat_words)
-    mixed, dropped = make_frame_segmented(g_labels, None, g_valid & flat_en,
-                                          capacity, seg_lens, compact=compact)
-    # Node ingress (reverse LUT local).
-    chip, rev_en = routing.lookup_rev(rev_table, mixed.labels)
-    out_valid = mixed.valid & rev_en
-    ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
-                         times=mixed.times, valid=out_valid)
-    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+    plan = fablib.compile_fabric(fablib.star_spec(
+        route_enables.shape[0], capacity, enables=route_enables,
+        link_capacity=link_capacity))
+    return fablib.fabric_exchange(frame, (axis_name,), fwd_table, rev_table,
+                                  plan, use_fused=use_fused, timing=timing)
 
 
 def hierarchical_exchange(frame: EventFrame,
@@ -536,6 +258,11 @@ def hierarchical_exchange(frame: EventFrame,
                           timing: TimedWire | None = None
                           ) -> tuple[EventFrame, ExchangeDrops]:
     """Two-layer star (§V): backplane aggregators joined by a second-layer node.
+
+    .. deprecated:: prefer ``repro.core.fabric`` — this is a thin wrapper
+       over the 2-level fabric plan (``fabric.hierarchical_spec`` +
+       ``fabric.fabric_exchange``); N-level meshes go through
+       ``fabric.FabricInterconnect`` directly.
 
     ``intra_enables``: bool[n_node, n_node] routes within the backplane.
     ``inter_enables``: bool[n_pod, n_pod] routes between backplanes (whole
@@ -559,93 +286,14 @@ def hierarchical_exchange(frame: EventFrame,
     gathers; inter-backplane events additionally pay the §V fixed extra and
     the pod uplink lane's serialization wait before the layer-2 gather.
     """
-    if use_fused is None:
-        use_fused = fused_exchange_enabled()
-    me_node = jax.lax.axis_index(node_axis)
-    me_pod = jax.lax.axis_index(pod_axis)
-
-    wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
-    egress_valid = frame.valid & fwd_en
-    times = (_egress_times(frame.times, egress_valid, timing)
-             if timing is not None else None)
-    if link_capacity is not None:
-        packed, uplink = make_frame(wire, times, egress_valid, link_capacity)
-        wire, egress_valid = packed.labels, packed.valid
-        if timing is not None:
-            times = packed.times
-    else:
-        uplink = jnp.zeros((), jnp.int32)
-
-    # Layer 1: backplane-local star (int16 wire words — the timed lane, when
-    # enabled, travels as a separate int32 plane).
-    words = pack_wire16(wire, egress_valid)
-    g1_words = jax.lax.all_gather(words, node_axis, axis=0)  # [n_node, lane]
-    n_node, lane = g1_words.shape
-    local_en = jnp.broadcast_to(intra_enables[:, me_node][:, None],
-                                (n_node, lane))
-    g1_times = (jax.lax.all_gather(times, node_axis, axis=0)
-                if timing is not None else None)
-
-    # Layer 2: second-layer node joins the backplane aggregators.  Each
-    # backplane uplinks its gathered egress — packed to ``pod_capacity``
-    # when set — and the receiving backplane accepts whole pods gated by the
-    # inter-backplane route enables.
-    if timing is not None:
-        # Pod uplink: the second-layer lane serializes the backplane's
-        # aggregated egress; every inter-backplane event pays the §V fixed
-        # extra plus the wait of its rank in the pod stream.
-        _, g1_valid_t = unpack_wire16(g1_words.reshape(-1))
-        okp = g1_valid_t.astype(jnp.int32)
-        prank = jnp.cumsum(okp) - okp
-        up_times = jnp.where(
-            g1_valid_t, g1_times.reshape(-1) + timing.second_layer_extra_ns
-            + _queue_wait_i32(prank, timing.uplink_queue), 0)
-    else:
-        up_times = None
-    if pod_capacity is not None:
-        g1_labels, g1_valid = unpack_wire16(g1_words)
-        up, pod_drop = make_frame(g1_labels.reshape(-1), up_times,
-                                  g1_valid.reshape(-1), pod_capacity)
-        up_words = pack_wire16(up.labels, up.valid)          # [pod_capacity]
-        uplink = uplink + pod_drop
-        remote_seg = pod_capacity
-        up_times = up.times if timing is not None else None
-    else:
-        up_words = g1_words.reshape(-1)                      # [n_node*lane]
-        remote_seg = lane
-    g2_words = jax.lax.all_gather(up_words, pod_axis, axis=0)
-    n_pod = g2_words.shape[0]
-    pod_ids = jnp.arange(n_pod)
-    pod_en = inter_enables[pod_ids, me_pod] & (pod_ids != me_pod)  # [n_pod]
-    remote_en = jnp.broadcast_to(pod_en[:, None],
-                                 (n_pod, g2_words.shape[1]))
-
-    flat_words = jnp.concatenate([g1_words.reshape(-1), g2_words.reshape(-1)])
-    flat_en = jnp.concatenate([local_en.reshape(-1), remote_en.reshape(-1)])
-    flat_times = None
-    if timing is not None:
-        g2_times = jax.lax.all_gather(up_times, pod_axis, axis=0)
-        flat_times = jnp.concatenate([g1_times.reshape(-1),
-                                      g2_times.reshape(-1)])
-    # Segments at the finest front-compacted granularity: per-lane frames
-    # locally; per-pod uplink frames (or per-lane sub-frames) remotely.
-    seg_lens = (lane,) * n_node + (remote_seg,) * (g2_words.size // remote_seg)
-    compact = link_capacity is not None
-    if use_fused or timing is not None:
-        ingress, dropped = _fused_merge(flat_words, flat_en, rev_table,
-                                        capacity, seg_lens=seg_lens,
-                                        compact=compact, timing=timing,
-                                        use_fused=use_fused,
-                                        times=flat_times)
-        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
-    g_labels, g_valid = unpack_wire16(flat_words)
-    mixed, dropped = make_frame_segmented(g_labels, None, g_valid & flat_en,
-                                          capacity, seg_lens, compact=compact)
-    chip, rev_en = routing.lookup_rev(rev_table, mixed.labels)
-    out_valid = mixed.valid & rev_en
-    ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
-                         times=mixed.times, valid=out_valid)
-    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+    plan = fablib.compile_fabric(fablib.hierarchical_spec(
+        n_pods=inter_enables.shape[0], per_pod=intra_enables.shape[0],
+        capacity=capacity, intra_enables=intra_enables,
+        inter_enables=inter_enables, link_capacity=link_capacity,
+        pod_capacity=pod_capacity))
+    return fablib.fabric_exchange(frame, (node_axis, pod_axis), fwd_table,
+                                  rev_table, plan, use_fused=use_fused,
+                                  timing=timing)
 
 
 # ---------------------------------------------------------------------------
@@ -656,6 +304,12 @@ def hierarchical_exchange(frame: EventFrame,
 @dataclasses.dataclass(frozen=True)
 class StarInterconnect:
     """Builds shard_map'd exchange functions over a device mesh.
+
+    .. deprecated:: prefer ``fabric.FabricInterconnect`` — this wrapper
+       covers the 1-level star and the 2-level hierarchy with the legacy
+       call signature (route enables as runtime arguments); the fabric
+       binding takes the enables from the compiled plan and scales to any
+       number of nested mesh axes.
 
     ``exchange_fn`` dispatches one round; ``stream_fn`` is the streaming
     engine's sharded entry point — it scans T rounds inside a *single*
@@ -697,7 +351,8 @@ class StarInterconnect:
         ``round_fn(frame, *tables)`` runs one exchange for this shard's
         [cap_in] frame (tables carry their leading size-1 sharded dim);
         both ``exchange_fn`` and ``stream_fn`` wrap it, so the two entry
-        points cannot drift apart.
+        points cannot drift apart.  The round compiles the 1- or 2-level
+        fabric plan from the runtime enables and runs ``fabric_exchange``.
         """
         from jax.sharding import PartitionSpec as P
 

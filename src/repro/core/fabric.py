@@ -1,0 +1,749 @@
+"""Fabric: arbitrary N-level topologies compiled into one hop-graph executor.
+
+The paper's Aggregator exposes 12 backplane links *plus 4 transceiver lanes
+"for further extension"*, and §V projects growth beyond the two-level
+120-chip system.  This module generalizes the star / two-layer special
+cases into a declarative topology description that **compiles** to a
+hop-graph plan executed by one generic engine:
+
+* ``LevelSpec`` / ``FabricSpec`` — levels of fan-in, per-level uplink (link)
+  capacities (explicit, from a ``link.LinkConfig``, or derived from the lane
+  model via ``events_per_window``), per-level route enables, per-level
+  ``LatencyParams`` for the crossing extras, and the extension-lane
+  constraint (a level riding the Aggregator's extension lanes cannot join
+  more than ``interconnect.EXTENSION_LANES`` children).
+* ``compile_fabric`` → ``FabricPlan`` — the static hop graph: per-level
+  fan-ins, enables, compact-before-gather capacities, crossing extras
+  (integer ns, ``TimedWire``-compatible), and the per-destination merge
+  segment layout the pack units tile over.
+* ``fabric_route_step`` — the stacked single-device executor: one exchange
+  round for all leaves, N levels deep, reusing the existing Pallas
+  ``exchange_fwd`` (1-level fast path) and ``merge_pack_fwd`` kernels.
+* ``fabric_exchange`` — the per-shard executor for ``shard_map``: one mesh
+  axis per level (nested meshes), per-level ``all_gather`` + uplink packs,
+  16-bit wire words on every gather, same merge tail.
+* ``FabricInterconnect`` — the mesh binding (N nested axes), with
+  ``exchange_fn`` / ``stream_fn`` like the legacy ``StarInterconnect``.
+
+The four legacy entry points (``route_step``, ``route_step_hierarchical``,
+``star_exchange``, ``hierarchical_exchange``) and ``StarInterconnect`` in
+``repro.core.aggregator`` are thin wrappers over 1-level and 2-level plans —
+bit-exact with their pre-fabric implementations, timed lane included.
+
+Hop-graph semantics (generalizing §III/§V):
+
+Leaves are the ``prod(fan_in)`` Node-FPGA endpoints.  A tier-``i`` entity
+(tier 0 = leaf, tier 1 = backplane, tier 2 = 4U case, ...) uplinks its
+aggregated egress stream ``U_i`` into the tier-``i+1`` merge; crossing level
+``i+1`` optionally packs the stream to that level's ``link_capacity``
+(compact-before-gather; overflow is an uplink drop attributed to every leaf
+of the entity) — packs *cascade*, so an event crossing k levels must survive
+every intermediate uplink, exactly like the hardware path through each
+aggregator.  A destination leaf merges, nearest first:
+
+    level 1:  the ``U_0`` lanes of its own backplane (leaf-major),
+    level 2:  the ``U_1`` streams of the sibling backplanes in its case,
+    level 3:  the ``U_2`` streams of the sibling cases, ...
+
+gated by that level's route enables (own subtree excluded above level 1),
+then packs to the ingress ``capacity`` and applies the reverse LUT.  On the
+timed datapath every level-``i+1`` crossing adds its fixed extra (default:
+the §V ``second_layer_extra_ns`` per crossing) plus the uplink lane's
+serialization wait of the event's rank in the entity stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing
+from repro.core.events import (EventFrame, make_frame, make_frame_segmented,
+                               pack_wire16, unpack_wire16)
+from repro.core.interconnect import (BACKPLANES_PER_RACK, CHIPS_PER_BACKPLANE,
+                                     EXTENSION_LANES)
+from repro.core.latency import (LatencyParams, TimedWire,
+                                queue_wait_i32 as _queue_wait_i32)
+from repro.core.link import LinkConfig
+
+
+def fused_exchange_enabled() -> bool:
+    """Default for ``use_fused`` — env-gated, on unless REPRO_FUSED_EXCHANGE=0."""
+    import os
+
+    return os.environ.get("REPRO_FUSED_EXCHANGE", "1").lower() not in (
+        "0", "false", "off")
+
+
+class ExchangeDrops(NamedTuple):
+    """Loss accounting of one exchange round, split by drop point.
+
+    ``congestion``: destination pack-unit overflow (the receiving mux drops
+    under continued congestion — the paper's layer-1 loss semantics).
+    ``uplink``: sender-side overflow of the compact-before-gather stages —
+    events exceeding a level's ``link_capacity`` on any uplink of the hop
+    graph (higher-level overflow is attributed to every leaf of the packed
+    entity, whose gathered view loses the same events).
+    Both are 0-filled int32 arrays of matching shape; ``total`` sums them.
+    """
+
+    congestion: jax.Array
+    uplink: jax.Array
+
+    @property
+    def total(self) -> jax.Array:
+        return self.congestion + self.uplink
+
+
+# ---------------------------------------------------------------------------
+# Timed datapath helpers (integer-ns timestamp lane, see latency.timed_wire)
+# ---------------------------------------------------------------------------
+
+
+def _egress_times(frame_times: jax.Array, ev: jax.Array,
+                  timing: TimedWire) -> jax.Array:
+    """Sender-side arrival times at the first merge input: departure + fixed
+    sender path + the MGT uplink lane's serialization wait of each event's
+    egress rank.  Computed on the *unpacked* egress so the compact-before-
+    gather pack (which preserves order) cannot change timestamps —
+    capacity parity holds for the timestamp lane too."""
+    ok = ev.astype(jnp.int32)
+    rank = jnp.cumsum(ok, axis=-1) - ok
+    wait = _queue_wait_i32(rank, timing.uplink_queue)
+    return jnp.where(ev, frame_times.astype(jnp.int32)
+                     + timing.sender_fixed_ns + wait, 0)
+
+
+def _arrival_times(out_times: jax.Array, out_valid: jax.Array,
+                   timing: TimedWire) -> jax.Array:
+    """Receiver-side fixed path, applied after the merge (which already
+    added the destination's rank-dependent queueing in the pack)."""
+    return jnp.where(out_valid, out_times + timing.recv_fixed_ns, 0)
+
+
+def _timed_mode(use_fused: bool) -> str:
+    """Kernel mode for the timed merges, resolved *eagerly* (never ``None``)
+    so the ops-level jit caches one entry per concrete mode — parity tests
+    monkeypatch ``repro.kernels.default_mode`` and must not hit a stale
+    ``mode=None`` trace."""
+    from repro.kernels import default_mode
+
+    return default_mode() if use_fused else "jax"
+
+
+def _fused_merge(labels, valid, rev, capacity: int, *, seg_lens, compact,
+                 timing: TimedWire | None, use_fused: bool | None,
+                 times=None) -> tuple[EventFrame, jax.Array]:
+    """The shared merge tail of every exchange path: ``fused_merge_pack``
+    (timed lane + destination queue when ``timing`` is set) and assembly of
+    the ingress frame with arrival times (zeros on the untimed wire)."""
+    from repro.kernels.spike_router.ops import fused_merge_pack
+
+    outs = fused_merge_pack(
+        labels, valid, rev, capacity=capacity, seg_lens=seg_lens,
+        compact=compact, times=times,
+        queue=None if timing is None else timing.queue,
+        mode=None if timing is None else _timed_mode(use_fused))
+    if timing is not None:
+        out_l, out_v, out_t, dropped = outs
+        out_t = _arrival_times(out_t, out_v, timing)
+    else:
+        out_l, out_v, dropped = outs
+        out_t = jnp.zeros_like(out_l)
+    return EventFrame(labels=out_l, times=out_t, valid=out_v), dropped
+
+
+# ---------------------------------------------------------------------------
+# Topology description
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSpec:
+    """One level of the hop graph: a node joining ``fan_in`` children.
+
+    Attributes:
+      fan_in: children (leaves at level 1, lower-level subtrees above) one
+        node at this level joins.
+      enables: bool[fan_in, fan_in] static route-enable matrix between the
+        node's children (shared by every node of this level, like the
+        paper's per-backplane ``intra_enables``).  ``None`` = all-to-all
+        (without self-loops at level 1; own-subtree traffic above level 1 is
+        structurally excluded — it already travelled a lower level).
+      link_capacity: events each child's uplink admits per exchange round —
+        the compact-before-gather pack size into this level's merge
+        (``None`` = dense, the whole stream travels).  At level 1 this is
+        the Node-FPGA→Aggregator MGT lane; above it, the subtree's uplink
+        into the joining node (the two-level ``pod_capacity``).
+      link: derive ``link_capacity`` from the transceiver model instead —
+        the config's own ``link_capacity`` field if set, else
+        ``link.events_per_window(spec.window_us)`` (the hardware-faithful
+        sizing).  An explicit ``link_capacity`` wins over both.
+      latency: per-level ``LatencyParams`` for the *crossing extras* of the
+        timed datapath: events crossing this level (2+) pay
+        ``latency.second_layer_extra_ns()``.  ``None`` defers to the
+        executor's ``TimedWire.second_layer_extra_ns`` per crossing.
+      extension: this level's children ride the Aggregator's extension
+        lanes — ``fan_in`` may not exceed ``interconnect.EXTENSION_LANES``.
+    """
+
+    fan_in: int
+    enables: jax.Array | None = None
+    link_capacity: int | None = None
+    link: LinkConfig | None = None
+    latency: LatencyParams | None = None
+    extension: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """A declarative N-level topology, leaf level first.
+
+    ``window_us`` is the exchange-window duration used to derive
+    ``link_capacity`` for levels that specify a ``LinkConfig`` without an
+    event budget (``LinkConfig.events_per_window``).
+    """
+
+    levels: tuple[LevelSpec, ...]
+    capacity: int
+    window_us: float | None = None
+    name: str = ""
+
+    @property
+    def n_nodes(self) -> int:
+        return math.prod(lvl.fan_in for lvl in self.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelPlan:
+    """Compiled static state of one hop-graph level."""
+
+    fan_in: int
+    enables: jax.Array         # bool[fan_in, fan_in]
+    link_capacity: int | None  # per-child uplink pack into this level
+    extra_ns: int | None       # timed crossing extra; None = TimedWire default
+    leaves: int                # leaves under one node of this level
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricPlan:
+    """The compiled hop graph: what the executors consume.
+
+    ``merge_layout(cap_in)`` returns, per level, the static segment lengths
+    of that level's contribution to a destination's merge stream (the pack
+    units tile over these); ``compact`` says every segment is
+    front-compacted (leaf lanes packed), enabling the bounded per-segment
+    gather.
+    """
+
+    spec: FabricSpec
+    levels: tuple[LevelPlan, ...]
+    n_nodes: int
+    capacity: int
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    @property
+    def fan_ins(self) -> tuple[int, ...]:
+        return tuple(lvl.fan_in for lvl in self.levels)
+
+    @property
+    def compact(self) -> bool:
+        return self.levels[0].link_capacity is not None
+
+    def merge_layout(self, cap_in: int) -> tuple[tuple[int, ...], ...]:
+        """Per-level merge segment lengths for egress frames of ``cap_in``."""
+        u0 = self.levels[0].link_capacity
+        segs_u = (u0,) if u0 is not None else (cap_in,)
+        out = []
+        for i, lvl in enumerate(self.levels):
+            out.append(segs_u * lvl.fan_in)
+            if i + 1 < len(self.levels):
+                nxt = self.levels[i + 1]
+                segs_u = ((nxt.link_capacity,) if nxt.link_capacity is not None
+                          else segs_u * lvl.fan_in)
+        return tuple(out)
+
+    def identity_tables(self, n_labels: int | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+        """Stacked identity fwd/rev LUTs for every leaf (testing/benchmarks)."""
+        tables = routing.identity_tables(n_labels)
+        n = self.n_nodes
+        return (jnp.broadcast_to(tables.fwd, (n, tables.fwd.shape[0])),
+                jnp.broadcast_to(tables.rev, (n, tables.rev.shape[0])))
+
+    def describe(self) -> str:
+        """One-line human summary ('12 x 2 x 4 = 96 leaves, caps 8/30/58')."""
+        shape = " x ".join(str(f) for f in self.fan_ins)
+        caps = "/".join("-" if lvl.link_capacity is None
+                        else str(lvl.link_capacity) for lvl in self.levels)
+        name = f"{self.spec.name}: " if self.spec.name else ""
+        return (f"{name}{shape} = {self.n_nodes} leaves, "
+                f"capacity {self.capacity}, uplink caps {caps}")
+
+
+def compile_fabric(spec: FabricSpec) -> FabricPlan:
+    """Compile a topology description into the static hop-graph plan."""
+    if not spec.levels:
+        raise ValueError("a fabric needs at least one level")
+    if spec.capacity <= 0:
+        raise ValueError(f"ingress capacity must be positive: {spec.capacity}")
+    levels = []
+    leaves = 1
+    for i, lvl in enumerate(spec.levels):
+        if lvl.fan_in < 1:
+            raise ValueError(f"level {i} fan_in must be >= 1: {lvl.fan_in}")
+        if lvl.extension and lvl.fan_in > EXTENSION_LANES:
+            raise ValueError(
+                f"level {i} rides the {EXTENSION_LANES} Aggregator extension "
+                f"lanes but joins {lvl.fan_in} children")
+        if lvl.enables is None:
+            enables = (routing.full_route_enables(lvl.fan_in) if i == 0
+                       else jnp.ones((lvl.fan_in, lvl.fan_in), jnp.bool_))
+        else:
+            enables = jnp.asarray(lvl.enables).astype(jnp.bool_)
+            if enables.shape != (lvl.fan_in, lvl.fan_in):
+                raise ValueError(
+                    f"level {i} enables shape {enables.shape} does not match "
+                    f"fan_in {lvl.fan_in}")
+        cap = lvl.link_capacity
+        if cap is None and lvl.link is not None:
+            if lvl.link.link_capacity is not None:
+                cap = lvl.link.link_capacity
+            elif spec.window_us is not None:
+                cap = lvl.link.events_per_window(spec.window_us)
+            else:
+                raise ValueError(
+                    f"level {i} has a LinkConfig without an event budget; "
+                    "set LinkConfig.link_capacity or FabricSpec.window_us "
+                    "to derive it from events_per_window")
+        if cap is not None and cap < 1:
+            raise ValueError(f"level {i} link_capacity must be >= 1: {cap}")
+        extra = (None if lvl.latency is None
+                 else int(round(lvl.latency.second_layer_extra_ns())))
+        leaves *= lvl.fan_in
+        levels.append(LevelPlan(fan_in=lvl.fan_in, enables=enables,
+                                link_capacity=cap, extra_ns=extra,
+                                leaves=leaves))
+    return FabricPlan(spec=spec, levels=tuple(levels), n_nodes=leaves,
+                      capacity=spec.capacity)
+
+
+# -- convenience spec constructors (the legacy shapes + the §V extension) ----
+
+
+def star_spec(n_nodes: int, capacity: int, *, enables=None,
+              link_capacity: int | None = None,
+              link: LinkConfig | None = None,
+              window_us: float | None = None, name: str = "") -> FabricSpec:
+    """One backplane star: the 1-level fabric behind ``route_step`` /
+    ``star_exchange``."""
+    return FabricSpec(
+        levels=(LevelSpec(fan_in=n_nodes, enables=enables,
+                          link_capacity=link_capacity, link=link),),
+        capacity=capacity, window_us=window_us, name=name)
+
+
+def hierarchical_spec(n_pods: int, per_pod: int, capacity: int, *,
+                      intra_enables=None, inter_enables=None,
+                      link_capacity: int | None = None,
+                      pod_capacity: int | None = None,
+                      name: str = "") -> FabricSpec:
+    """The §V two-layer system: the 2-level fabric behind
+    ``route_step_hierarchical`` / ``hierarchical_exchange``."""
+    return FabricSpec(
+        levels=(LevelSpec(fan_in=per_pod, enables=intra_enables,
+                          link_capacity=link_capacity),
+                LevelSpec(fan_in=n_pods, enables=inter_enables,
+                          link_capacity=pod_capacity)),
+        capacity=capacity, name=name)
+
+
+def ext_4case_spec(capacity: int = 96, *,
+                   chips_per_backplane: int = CHIPS_PER_BACKPLANE,
+                   backplanes_per_case: int = BACKPLANES_PER_RACK,
+                   n_cases: int = 4,
+                   link_capacities: tuple[int | None, int | None, int | None]
+                   = (None, None, None)) -> FabricSpec:
+    """The 3-level extension scenario: two backplanes per 4U case, cases
+    chained over the Aggregator's 4 extension lanes (12 x 2 x 4 = 96 chips
+    by default)."""
+    u0, u1, u2 = link_capacities
+    n = chips_per_backplane * backplanes_per_case * n_cases
+    return FabricSpec(
+        levels=(LevelSpec(fan_in=chips_per_backplane, link_capacity=u0),
+                LevelSpec(fan_in=backplanes_per_case, link_capacity=u1),
+                LevelSpec(fan_in=n_cases, link_capacity=u2, extension=True)),
+        capacity=capacity, name=f"EXT_4CASE_{n}CHIP")
+
+
+# ---------------------------------------------------------------------------
+# Stacked executor: all leaves' frames on one device
+# ---------------------------------------------------------------------------
+
+
+def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
+                      use_fused: bool | None = None,
+                      timing: TimedWire | None = None,
+                      engine: str = "auto") -> tuple[EventFrame, ExchangeDrops]:
+    """One N-level hop-graph exchange round, all leaves stacked on one device.
+
+    Args:
+      state: routing state with stacked per-leaf ``fwd_tables`` /
+        ``rev_tables`` (``aggregator.RouterState``; its ``route_enables``
+        are ignored — enables live in the plan).
+      frames: per-leaf egress frames, arrays shaped [n_nodes, cap_in].
+      plan: compiled hop graph (``compile_fabric``).
+      use_fused: route the merge through the fused kernels (default: the
+        ``REPRO_FUSED_EXCHANGE`` env flag, on).
+      timing: timed datapath (``latency.timed_wire``) — ``frames.times`` are
+        int32 departure timestamps and the ingress ``times`` arrivals (fixed
+        per-stage path + deterministic queueing at every congested hop; each
+        level-2+ crossing adds its fixed extra and uplink wait).  ``None``
+        keeps the untimed wire (ingress times are zeros).
+      engine: ``"auto"`` lets the plain 1-level untimed fused round take the
+        original single-round Pallas kernel; ``"merge"`` forces the generic
+        broadcast/merge-pack engine (same observables — used as the
+        same-engine baseline by the timed benchmarks).
+
+    Returns:
+      (ingress frames [n_nodes, capacity],
+       ExchangeDrops(congestion [n_nodes], uplink [n_nodes])).
+    """
+    if use_fused is None:
+        use_fused = fused_exchange_enabled()
+    if engine not in ("auto", "merge"):
+        raise ValueError(f"unknown engine: {engine!r}")
+    levels = plan.levels
+    n, cap_in = frames.labels.shape
+    if n != plan.n_nodes:
+        raise ValueError(f"frames carry {n} leaf streams but the plan wires "
+                         f"{plan.n_nodes}")
+
+    # Fast path: the plain 1-level star is the original fused single-round
+    # kernel (bit-exact with the merge engine, pinned by the parity battery).
+    if (engine == "auto" and len(levels) == 1 and timing is None and use_fused
+            and levels[0].link_capacity is None):
+        from repro.kernels.spike_router.ops import fused_exchange
+
+        out_l, out_v, dropped = fused_exchange(
+            frames.labels, frames.valid, state.fwd_tables, state.rev_tables,
+            levels[0].enables, capacity=plan.capacity)
+        ingress = EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
+                             valid=out_v)
+        return ingress, ExchangeDrops(congestion=dropped,
+                                      uplink=jnp.zeros_like(dropped))
+
+    wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables,
+                                                frames.labels)
+    ev = frames.valid & fwd_en                             # [n, cap_in]
+    times = (_egress_times(frames.times, ev, timing)
+             if timing is not None else None)
+
+    # Leaf uplink — pack each leaf's egress to its MGT lane capacity.
+    u0 = levels[0].link_capacity
+    if u0 is not None:
+        packed, link_drop = make_frame(wire, times, ev, u0)
+        wire, ev = packed.labels, packed.valid             # [n, u0]
+        if timing is not None:
+            times = packed.times
+    else:
+        link_drop = jnp.zeros((n,), jnp.int32)
+    uplink = link_drop.astype(jnp.int32)
+
+    layout = plan.merge_layout(cap_in)
+    leaf = jnp.arange(n)
+    # U_i streams, one per tier-i entity (tier 0 = leaf): labels/valid/times.
+    cur_l, cur_v, cur_t = wire, ev, times
+    cur_len = u0 if u0 is not None else cap_in
+    gsize = 1                                 # leaves per tier-i entity
+    parts_l, parts_v, parts_t, seg_lens = [], [], [], []
+    for i, lvl in enumerate(levels):
+        f = lvl.fan_in
+        gnext = gsize * f
+        n_grp = n // gnext
+        s_len = f * cur_len
+        # S_i per tier-(i+1) entity: the concat of its children's U_i.
+        s_l = cur_l.reshape(n_grp, s_len)
+        s_v = cur_v.reshape(n_grp, f, cur_len)
+        anc = leaf // gnext                   # tier-(i+1) ancestor of each leaf
+        child = (leaf // gsize) % f           # leaf's child slot at this level
+        gate = lvl.enables.T[child]           # [n, f] src child → this dest
+        if i > 0:
+            gate = gate & (jnp.arange(f)[None, :] != child[:, None])
+        if n_grp == 1:
+            # Top-of-tree streams stay shared views (the hardware broadcasts
+            # a wire, not a buffer); only validity is per-destination.
+            part_l = jnp.broadcast_to(s_l.reshape(1, s_len), (n, s_len))
+            part_v = (s_v[0][None] & gate[:, :, None]).reshape(n, s_len)
+        else:
+            part_l = s_l[anc]
+            part_v = (s_v[anc] & gate[:, :, None]).reshape(n, s_len)
+        parts_l.append(part_l)
+        parts_v.append(part_v)
+        if timing is not None:
+            s_t = cur_t.reshape(n_grp, s_len)
+            parts_t.append(jnp.broadcast_to(s_t.reshape(1, s_len), (n, s_len))
+                           if n_grp == 1 else s_t[anc])
+        seg_lens += list(layout[i])
+
+        if i + 1 < len(levels):
+            # Prepare U_{i+1}: each tier-(i+1) entity uplinks its aggregated
+            # stream into the next level's merge — timed events pay the
+            # crossing extra plus the wait of their rank in the stream, and
+            # the pack cascades (an event crossing k levels must survive
+            # every intermediate uplink).
+            nxt = levels[i + 1]
+            s_vf = cur_v.reshape(n_grp, s_len)
+            if timing is not None:
+                okp = s_vf.astype(jnp.int32)
+                prank = jnp.cumsum(okp, axis=-1) - okp
+                extra = (nxt.extra_ns if nxt.extra_ns is not None
+                         else timing.second_layer_extra_ns)
+                s_t = jnp.where(
+                    s_vf, cur_t.reshape(n_grp, s_len) + extra
+                    + _queue_wait_i32(prank, timing.uplink_queue), 0)
+            else:
+                s_t = None
+            if nxt.link_capacity is not None:
+                up, drop = make_frame(s_l, s_t, s_vf, nxt.link_capacity)
+                cur_l, cur_v = up.labels, up.valid
+                cur_t = up.times if timing is not None else None
+                cur_len = nxt.link_capacity
+                uplink = uplink + drop[anc].astype(jnp.int32)
+            else:
+                cur_l, cur_v, cur_t = s_l, s_vf, s_t
+                cur_len = s_len
+            gsize = gnext
+
+    labels = jnp.concatenate(parts_l, axis=-1)
+    valid = jnp.concatenate(parts_v, axis=-1)
+    merge_times = (jnp.concatenate(parts_t, axis=-1)
+                   if timing is not None else None)
+    seg_lens = tuple(seg_lens)
+    if use_fused or timing is not None:
+        ingress, dropped = _fused_merge(labels, valid, state.rev_tables,
+                                        plan.capacity, seg_lens=seg_lens,
+                                        compact=plan.compact, timing=timing,
+                                        use_fused=use_fused,
+                                        times=merge_times)
+        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+    mixed, dropped = make_frame_segmented(labels, None, valid, plan.capacity,
+                                          seg_lens, compact=plan.compact)
+    chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
+    out_valid = mixed.valid & rev_en
+    ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
+                         times=mixed.times, valid=out_valid)
+    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+
+
+# ---------------------------------------------------------------------------
+# Sharded executor: call inside shard_map, one leaf per mesh slice
+# ---------------------------------------------------------------------------
+
+
+def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
+                    fwd_table: jax.Array, rev_table: jax.Array,
+                    plan: FabricPlan, *, use_fused: bool | None = None,
+                    timing: TimedWire | None = None
+                    ) -> tuple[EventFrame, ExchangeDrops]:
+    """One N-level exchange round from the perspective of a single leaf shard.
+
+    Must run inside ``shard_map`` on a nested mesh with one axis per level,
+    ``axis_names`` leaf level first (see ``parallel.sharding.fabric_mesh``).
+    Each level does one ``all_gather`` along its axis — level 1 is the
+    backplane star, level 2 the second-layer node, level 3 the extension
+    chain, ... — with the gathered stream optionally packed to the next
+    level's ``link_capacity`` before uplinking (packs cascade).  All gathers
+    move int16 wire words (``events.pack_wire16``); the timed lane, when
+    enabled, travels as a separate int32 plane.  Gating, segment layout,
+    drops and timestamps mirror ``fabric_route_step`` bit-exactly.
+    """
+    if use_fused is None:
+        use_fused = fused_exchange_enabled()
+    levels = plan.levels
+    if len(axis_names) != len(levels):
+        raise ValueError(f"{len(axis_names)} mesh axes for "
+                         f"{len(levels)} fabric levels")
+    cap_in = frame.labels.shape[-1]
+
+    wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
+    ev = frame.valid & fwd_en
+    times = (_egress_times(frame.times, ev, timing)
+             if timing is not None else None)
+    u0 = levels[0].link_capacity
+    if u0 is not None:
+        packed, uplink = make_frame(wire, times, ev, u0)
+        wire, ev = packed.labels, packed.valid
+        if timing is not None:
+            times = packed.times
+    else:
+        uplink = jnp.zeros((), jnp.int32)
+
+    layout = plan.merge_layout(cap_in)
+    cur_words = pack_wire16(wire, ev)
+    cur_times = times
+    parts_w, parts_en, parts_t, seg_lens = [], [], [], []
+    for i, lvl in enumerate(levels):
+        f = lvl.fan_in
+        g_words = jax.lax.all_gather(cur_words, axis_names[i], axis=0)
+        g_times = (jax.lax.all_gather(cur_times, axis_names[i], axis=0)
+                   if timing is not None else None)
+        me = jax.lax.axis_index(axis_names[i])
+        gate = lvl.enables[:, me]                       # [f]
+        if i > 0:
+            gate = gate & (jnp.arange(f) != me)
+        parts_w.append(g_words.reshape(-1))
+        parts_en.append(jnp.broadcast_to(gate[:, None],
+                                         g_words.shape).reshape(-1))
+        if timing is not None:
+            parts_t.append(g_times.reshape(-1))
+        seg_lens += list(layout[i])
+
+        if i + 1 < len(levels):
+            nxt = levels[i + 1]
+            s_words = g_words.reshape(-1)
+            s_labels, s_valid = unpack_wire16(s_words)
+            if timing is not None:
+                okp = s_valid.astype(jnp.int32)
+                prank = jnp.cumsum(okp) - okp
+                extra = (nxt.extra_ns if nxt.extra_ns is not None
+                         else timing.second_layer_extra_ns)
+                s_t = jnp.where(s_valid, g_times.reshape(-1) + extra
+                                + _queue_wait_i32(prank, timing.uplink_queue),
+                                0)
+            else:
+                s_t = None
+            if nxt.link_capacity is not None:
+                up, drop = make_frame(s_labels, s_t, s_valid,
+                                      nxt.link_capacity)
+                cur_words = pack_wire16(up.labels, up.valid)
+                cur_times = up.times if timing is not None else None
+                uplink = uplink + drop
+            else:
+                cur_words = s_words
+                cur_times = s_t
+
+    flat_words = jnp.concatenate(parts_w)
+    flat_en = jnp.concatenate(parts_en)
+    flat_times = (jnp.concatenate(parts_t) if timing is not None else None)
+    seg_lens = tuple(seg_lens)
+    if use_fused or timing is not None:
+        ingress, dropped = _fused_merge(flat_words, flat_en, rev_table,
+                                        plan.capacity, seg_lens=seg_lens,
+                                        compact=plan.compact, timing=timing,
+                                        use_fused=use_fused,
+                                        times=flat_times)
+        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+    g_labels, g_valid = unpack_wire16(flat_words)
+    mixed, dropped = make_frame_segmented(g_labels, None, g_valid & flat_en,
+                                          plan.capacity, seg_lens,
+                                          compact=plan.compact)
+    chip, rev_en = routing.lookup_rev(rev_table, mixed.labels)
+    out_valid = mixed.valid & rev_en
+    ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
+                         times=mixed.times, valid=out_valid)
+    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+
+
+# ---------------------------------------------------------------------------
+# Mesh binding: N nested axes, one per level
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricInterconnect:
+    """Builds shard_map'd N-level exchange functions over a nested mesh.
+
+    One mesh axis per fabric level, innermost (fastest) axis = level 1 —
+    ``parallel.sharding.fabric_mesh(plan)`` constructs a matching mesh.
+    ``axis_names`` lists them leaf level first; ``None`` derives them from
+    the mesh (reversed axis order, outermost = top level).
+
+    ``exchange_fn()`` dispatches one round; ``stream_fn()`` scans T rounds
+    inside a single ``shard_map`` with the routing tables hoisted to loop
+    invariants.  Unlike the legacy ``StarInterconnect``, route enables come
+    from the plan, so the returned functions take only
+    ``(frames, fwd_tables, rev_tables)``.
+    """
+
+    mesh: jax.sharding.Mesh
+    plan: FabricPlan
+    axis_names: tuple[str, ...] | None = None
+    use_fused: bool | None = None
+    timing: TimedWire | None = None
+
+    def _axes(self) -> tuple[str, ...]:
+        axes = (tuple(self.axis_names) if self.axis_names is not None
+                else tuple(reversed(self.mesh.axis_names)))
+        if len(axes) != self.plan.n_levels:
+            raise ValueError(f"{len(axes)} mesh axes for "
+                             f"{self.plan.n_levels} fabric levels")
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        for name, lvl in zip(axes, self.plan.levels):
+            if sizes.get(name) != lvl.fan_in:
+                raise ValueError(
+                    f"mesh axis {name!r} has size {sizes.get(name)} but the "
+                    f"fabric level expects fan_in {lvl.fan_in}")
+        return axes
+
+    def _round(self):
+        axes = self._axes()
+        plan, fused, timing = self.plan, self.use_fused, self.timing
+
+        def round_fn(frame, fwd, rev):
+            return fabric_exchange(frame, axes, fwd[0], rev[0], plan,
+                                   use_fused=fused, timing=timing)
+
+        from jax.sharding import PartitionSpec as P
+
+        shard = P(tuple(reversed(axes)))          # top level outermost
+        return round_fn, shard, (shard, shard)
+
+    def exchange_fn(self):
+        from repro.compat import shard_map as _shard_map
+
+        round_fn, shard, table_specs = self._round()
+
+        def fn(frame, *tables):
+            out, drops = round_fn(jax.tree.map(lambda x: x[0], frame),
+                                  *tables)
+            return (jax.tree.map(lambda x: x[None], out),
+                    jax.tree.map(lambda x: x[None], drops))
+
+        in_specs = (EventFrame(shard, shard, shard), *table_specs)
+        out_specs = (EventFrame(shard, shard, shard),
+                     ExchangeDrops(shard, shard))
+        return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                  out_specs=out_specs))
+
+    def stream_fn(self):
+        """Scan T rounds inside one ``shard_map`` (leading time axis)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map as _shard_map
+
+        round_fn, shard, table_specs = self._round()
+
+        def fn(frames, *tables):
+            frames = jax.tree.map(lambda x: x[:, 0], frames)
+
+            def body(_, fr):
+                return None, round_fn(fr, *tables)
+
+            _, (outs, drops) = jax.lax.scan(body, None, frames)
+            return (jax.tree.map(lambda x: x[:, None], outs),
+                    jax.tree.map(lambda x: x[:, None], drops))
+
+        tshard = P(None, *shard)
+        in_specs = (EventFrame(tshard, tshard, tshard), *table_specs)
+        out_specs = (EventFrame(tshard, tshard, tshard),
+                     ExchangeDrops(tshard, tshard))
+        return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                  out_specs=out_specs))

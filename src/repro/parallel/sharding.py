@@ -148,6 +148,33 @@ def replicated(mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# Fabric meshes: nested axes, one per hop-graph level
+# ---------------------------------------------------------------------------
+#
+# The exchange fabric (repro.core.fabric) maps every topology level to one
+# mesh axis — level 1 (the backplane star) innermost/fastest, the top level
+# outermost — generalizing the legacy (pod, data/chip) layout to N levels.
+# These helpers derive the mesh from the compiled plan instead of ad-hoc
+# axis-name flags; ``fabric.FabricInterconnect`` consumes the same names.
+
+
+def fabric_axis_names(plan) -> tuple[str, ...]:
+    """Mesh axis names for a fabric plan, leaf level first: fab0, fab1, ..."""
+    return tuple(f"fab{i}" for i in range(plan.n_levels))
+
+
+def fabric_mesh(plan) -> Mesh:
+    """Nested device mesh for a ``fabric.FabricPlan``: one axis per level,
+    top level outermost (needs ``plan.n_nodes`` devices — use
+    ``xla_force_host_platform_device_count`` for CPU tests)."""
+    from repro.compat import make_mesh
+
+    names = fabric_axis_names(plan)
+    shape = tuple(lvl.fan_in for lvl in reversed(plan.levels))
+    return make_mesh(shape, tuple(reversed(names)))
+
+
+# ---------------------------------------------------------------------------
 # Activation sharding constraints (in-graph)
 # ---------------------------------------------------------------------------
 #

@@ -25,8 +25,11 @@ back to shift order on exit).
 
 Modes and topologies mirror ``repro.snn.network``:
 
-* ``mode="event"``  — the faithful datapath through ``route_step`` (star)
-  or ``route_step_hierarchical`` (§V two-layer), fused or unfused.
+* ``mode="event"``  — the faithful datapath through the N-level hop-graph
+  executor (``repro.core.fabric``): the legacy ``"star"`` /
+  ``"hierarchical"`` topologies compile to 1-/2-level plans, and arbitrary
+  deeper topologies (extension-lane chains, §V and beyond) pass a compiled
+  ``FabricPlan`` via ``fabric=``; fused or unfused.
 * ``mode="dense"``  — the differentiable surrogate (routing matrices), so
   BPTT through ``run_stream`` is the training hot loop.
 
@@ -42,7 +45,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregator as agg
+from repro.core import fabric as fablib
 from repro.core import latency as latlib
 from repro.core.events import make_frame
 from repro.snn import chip as chiplib
@@ -100,6 +103,7 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                use_fused: bool | None = None,
                link_capacity: int | None = None,
                pod_capacity: int | None = None,
+               fabric: "fablib.FabricPlan | None" = None,
                timed: bool = False) -> StreamOut:
     """Scan the full emulation pipeline over ``ext_drives``.
 
@@ -110,12 +114,24 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
       topology: ``"star"`` (one backplane) or ``"hierarchical"`` (§V
         two-layer; requires ``n_pods`` / ``intra_enables`` /
         ``inter_enables``, event mode only — the dense surrogate encodes
-        topology in ``route_mats``).
+        topology in ``route_mats``).  Both compile to 1-/2-level fabric
+        plans internally; deeper topologies pass a plan via ``fabric``.
       use_fused: event mode only; forwarded to the exchange kernels.
       link_capacity / pod_capacity: hierarchical event mode only — the
         compact-before-gather uplink stages of
         ``route_step_hierarchical``; overflow lands in
         ``StreamOut.uplink_dropped``, not ``dropped``.
+      fabric: a compiled ``repro.core.fabric.FabricPlan`` — the exchange
+        runs the N-level hop-graph executor (event mode only; the plan's
+        leaf count and ingress capacity must match ``cfg``, and it replaces
+        the ad-hoc topology flags: ``topology`` must stay ``"star"`` and
+        the hierarchical/uplink arguments unset).  Route enables come from
+        the *plan's* levels, NOT from ``params.router.route_enables`` (only
+        the router's LUTs are used) — a plan built without explicit enables
+        is all-to-all per level, so gated routers must bake their gating
+        into the spec (``star_spec(..., enables=...)``) or the reverse
+        LUTs.  Per-level uplink overflow lands in
+        ``StreamOut.uplink_dropped``.
       timed: event mode only — thread the int32 timestamp lane through the
         exchange (``core.latency.timed_wire(cfg.latency)``): every spike of
         a window departs at the window open, and every delivered ingress
@@ -152,25 +168,45 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
     if timed and mode != "event":
         raise ValueError("timed streams require the event datapath (the "
                          "dense surrogate has no wire to time)")
+    if fabric is not None:
+        if mode != "event":
+            raise ValueError("fabric plans run the event datapath only")
+        if topology != "star":
+            raise ValueError("fabric replaces the topology flag — pass the "
+                             "plan alone (leave topology at its default)")
+        if fabric.n_nodes != cfg.n_chips:
+            raise ValueError(f"fabric plan wires {fabric.n_nodes} leaves "
+                             f"but the network has {cfg.n_chips} chips")
+        if fabric.capacity != cfg.capacity:
+            raise ValueError(f"fabric plan ingress capacity "
+                             f"{fabric.capacity} != cfg.capacity "
+                             f"{cfg.capacity}")
 
     n_steps = ext_drives.shape[0]
     delay = state.inflight.shape[0]
     labels_grid = _egress_label_grid(cfg)
     timing = latlib.timed_wire(cfg.latency) if timed else None
 
+    # Every event-mode topology is one hop-graph plan executed by the same
+    # N-level engine; the legacy star/hierarchical flags compile to 1-/2-level
+    # plans here (route enables come from the router state / the arguments).
+    if mode == "event":
+        if fabric is not None:
+            plan = fabric
+        elif topology == "star":
+            plan = fablib.compile_fabric(fablib.star_spec(
+                cfg.n_chips, cfg.capacity,
+                enables=params.router.route_enables))
+        else:
+            plan = fablib.compile_fabric(fablib.hierarchical_spec(
+                n_pods=n_pods, per_pod=cfg.n_chips // n_pods,
+                capacity=cfg.capacity, intra_enables=intra_enables,
+                inter_enables=inter_enables, link_capacity=link_capacity,
+                pod_capacity=pod_capacity))
+
     def exchange(frames):
-        if topology == "star":
-            ingress, congestion = agg.route_step(params.router, frames,
-                                                 cfg.capacity,
-                                                 use_fused=use_fused,
-                                                 timing=timing)
-            return ingress, agg.ExchangeDrops(
-                congestion=congestion, uplink=jnp.zeros_like(congestion))
-        return agg.route_step_hierarchical(
-            params.router, frames, cfg.capacity, n_pods=n_pods,
-            intra_enables=intra_enables, inter_enables=inter_enables,
-            use_fused=use_fused, link_capacity=link_capacity,
-            pod_capacity=pod_capacity, timing=timing)
+        return fablib.fabric_route_step(params.router, frames, plan,
+                                        use_fused=use_fused, timing=timing)
 
     def event_route(spikes):
         """Egress tap → exchange → ingress decode, vmapped over batch."""

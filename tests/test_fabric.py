@@ -1,0 +1,443 @@
+"""Fabric hop-graph executor (ISSUE 5 tentpole) + wrapper-parity battery.
+
+Two jobs:
+
+1. **Wrapper parity** — every legacy entry point (``route_step``,
+   ``route_step_hierarchical``, ``star_exchange`` / ``hierarchical_exchange``
+   via ``StarInterconnect``) must be bit-exact with an explicitly
+   constructed fabric plan run through the generic N-level executor, across
+   the conformance-matrix axes: occupancy × uplink capacities (the
+   segmented/compact pack) × timed lane × fused/unfused, plus the kernel
+   fast path vs the forced merge engine (``engine="merge"``).  The sharded
+   paths additionally exercise the 16-bit wire format (every fabric gather
+   moves int16 words); the real multi-axis meshes are pinned in
+   ``tests/test_multidevice.py``.
+
+2. **N-level semantics** — properties no 1-/2-level wrapper can reach:
+   nearest-first merge order on a 3-level fabric, cascaded uplink packs and
+   their drop accounting, per-crossing timed extras, flat-star set
+   equivalence, capacity parity (caps ≥ raw ⇒ bit-exact with dense,
+   timestamps included), and an end-to-end 3-level ``run_stream``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EventFrame, FabricInterconnect, FabricSpec,
+                        LevelSpec, StarInterconnect, compile_fabric,
+                        ext_4case_spec, fabric_route_step,
+                        full_route_enables, hierarchical_spec,
+                        identity_router, make_frame, route_step,
+                        route_step_hierarchical, star_exchange,
+                        star_spec, timed_wire)
+from repro.core.link import LinkConfig
+from repro.snn import network as netlib
+from repro.snn import stream as stlib
+from repro.snn import init_feedforward
+
+KEY = jax.random.key(71)
+TIMING = timed_wire()
+OCCUPANCIES = (0.0, 0.05, 0.5, 1.0)
+
+
+def _frames(key, n, cap_in, occupancy, timed=False):
+    labels = jax.random.randint(key, (n, cap_in), 0, 2 ** 15)
+    valid = jax.random.uniform(jax.random.fold_in(key, 1),
+                               (n, cap_in)) < occupancy
+    times = (jnp.where(valid, jax.random.randint(jax.random.fold_in(key, 2),
+                                                 (n, cap_in), 0, 1000), 0)
+             if timed else jnp.zeros_like(labels))
+    frames, _ = make_frame(labels, times, valid, cap_in)
+    return frames
+
+
+def _assert_rounds_equal(a, b):
+    (out_a, drops_a), (out_b, drops_b) = a, b
+    assert jnp.array_equal(out_a.labels, out_b.labels)
+    assert jnp.array_equal(out_a.valid, out_b.valid)
+    assert jnp.array_equal(out_a.times, out_b.times)
+    for x, y in zip(jax.tree.leaves(drops_a), jax.tree.leaves(drops_b)):
+        assert jnp.array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Spec compilation + validation
+# ---------------------------------------------------------------------------
+
+
+def test_compile_rejects_bad_specs():
+    with pytest.raises(ValueError, match="at least one level"):
+        compile_fabric(FabricSpec(levels=(), capacity=8))
+    with pytest.raises(ValueError, match="capacity"):
+        compile_fabric(FabricSpec(levels=(LevelSpec(2),), capacity=0))
+    with pytest.raises(ValueError, match="fan_in"):
+        compile_fabric(FabricSpec(levels=(LevelSpec(0),), capacity=8))
+    with pytest.raises(ValueError, match="enables shape"):
+        compile_fabric(FabricSpec(
+            levels=(LevelSpec(3, enables=jnp.ones((2, 2), bool)),),
+            capacity=8))
+    with pytest.raises(ValueError, match="extension"):
+        compile_fabric(FabricSpec(
+            levels=(LevelSpec(2), LevelSpec(5, extension=True)), capacity=8))
+    with pytest.raises(ValueError, match="link_capacity"):
+        compile_fabric(FabricSpec(
+            levels=(LevelSpec(2, link_capacity=0),), capacity=8))
+
+
+def test_compile_shapes_and_describe():
+    plan = compile_fabric(ext_4case_spec(capacity=96))
+    assert plan.n_nodes == 96 and plan.n_levels == 3
+    assert plan.fan_ins == (12, 2, 4)
+    assert [lvl.leaves for lvl in plan.levels] == [12, 24, 96]
+    assert "EXT_4CASE_96CHIP" in plan.describe()
+    assert "12 x 2 x 4 = 96" in plan.describe()
+    # Merge layout: own lanes, sibling-backplane streams, sibling-case
+    # streams — dense here, so segments recurse to the leaf lanes.
+    layout = plan.merge_layout(16)
+    assert layout[0] == (16,) * 12
+    assert layout[1] == (16,) * 24
+    assert layout[2] == (16,) * 96
+    capped = compile_fabric(ext_4case_spec(
+        capacity=96, link_capacities=(8, 30, 58)))
+    assert capped.merge_layout(16) == ((8,) * 12, (30,) * 2, (58,) * 4)
+    assert capped.compact and not plan.compact
+
+
+def test_link_derived_level_capacities():
+    """The plan derives per-level capacities from the transceiver model:
+    explicit > LinkConfig.link_capacity > events_per_window(window_us)."""
+    lane = LinkConfig()
+    spec = FabricSpec(
+        levels=(LevelSpec(2, link=lane),
+                LevelSpec(2, link=LinkConfig(link_capacity=40)),
+                LevelSpec(2, link=LinkConfig(link_capacity=40),
+                          link_capacity=7)),
+        capacity=32, window_us=1.0)
+    plan = compile_fabric(spec)
+    assert plan.levels[0].link_capacity == lane.events_per_window(1.0)
+    assert plan.levels[1].link_capacity == 40
+    assert plan.levels[2].link_capacity == 7
+    with pytest.raises(ValueError, match="window_us"):
+        compile_fabric(FabricSpec(levels=(LevelSpec(2, link=LinkConfig()),),
+                                  capacity=8))
+
+
+def test_executor_rejects_mismatched_frames():
+    plan = compile_fabric(star_spec(4, 8))
+    state = identity_router(6)
+    frames = _frames(KEY, 6, 8, 0.5)
+    with pytest.raises(ValueError, match="leaf streams"):
+        fabric_route_step(state, frames, plan)
+    with pytest.raises(ValueError, match="engine"):
+        fabric_route_step(identity_router(4), _frames(KEY, 4, 8, 0.5), plan,
+                          engine="warp")
+
+
+def test_legacy_docstrings_point_at_fabric():
+    from repro.core import aggregator as agg
+
+    for fn in (route_step, route_step_hierarchical, star_exchange,
+               agg.hierarchical_exchange):
+        assert "fabric" in fn.__doc__
+    assert "fabric" in StarInterconnect.__doc__
+
+
+# ---------------------------------------------------------------------------
+# Wrapper parity: the stacked entry points vs their explicit plans
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("occupancy", OCCUPANCIES)
+@pytest.mark.parametrize("timed", [False, True])
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_route_step_matches_star_plan(occupancy, timed, use_fused):
+    """route_step ≡ the 1-level plan, on the kernel fast path *and* forced
+    onto the generic merge engine (pins fast path ≡ merge engine too)."""
+    n, cap_in, cap = 4, 24, 16
+    state = identity_router(n)
+    frames = _frames(jax.random.fold_in(KEY, int(occupancy * 100)), n,
+                     cap_in, occupancy, timed)
+    timing = TIMING if timed else None
+    plan = compile_fabric(star_spec(n, cap, enables=state.route_enables))
+    ref_out, ref_drop = route_step(state, frames, cap, use_fused=use_fused,
+                                   timing=timing)
+    for engine in ("auto", "merge"):
+        out, drops = fabric_route_step(state, frames, plan,
+                                       use_fused=use_fused, timing=timing,
+                                       engine=engine)
+        assert jnp.array_equal(out.labels, ref_out.labels), engine
+        assert jnp.array_equal(out.valid, ref_out.valid), engine
+        assert jnp.array_equal(out.times, ref_out.times), engine
+        assert jnp.array_equal(drops.congestion, ref_drop), engine
+        assert int(drops.uplink.sum()) == 0
+
+
+@pytest.mark.parametrize("occupancy", OCCUPANCIES)
+@pytest.mark.parametrize("caps", [(None, None), (12, 30)],
+                         ids=["dense", "segmented"])
+@pytest.mark.parametrize("timed", [False, True])
+def test_route_step_hierarchical_matches_two_level_plan(occupancy, caps,
+                                                        timed):
+    n_pods, per, cap_in, cap = 2, 3, 24, 16
+    n = n_pods * per
+    state = identity_router(n)
+    frames = _frames(jax.random.fold_in(KEY, 300 + int(occupancy * 100)), n,
+                     cap_in, occupancy, timed)
+    timing = TIMING if timed else None
+    link_cap, pod_cap = caps
+    plan = compile_fabric(hierarchical_spec(
+        n_pods=n_pods, per_pod=per, capacity=cap,
+        intra_enables=full_route_enables(per),
+        inter_enables=full_route_enables(n_pods),
+        link_capacity=link_cap, pod_capacity=pod_cap))
+    ref = route_step_hierarchical(
+        state, frames, cap, n_pods=n_pods,
+        intra_enables=full_route_enables(per),
+        inter_enables=full_route_enables(n_pods), link_capacity=link_cap,
+        pod_capacity=pod_cap, timing=timing)
+    for use_fused in (True, False):
+        got = fabric_route_step(state, frames, plan, use_fused=use_fused,
+                                timing=timing)
+        _assert_rounds_equal(got, ref)
+
+
+@pytest.mark.parametrize("timed", [False, True])
+def test_star_interconnect_matches_fabric_interconnect(timed):
+    """The sharded wrappers (single-device mesh; the 16-bit wire format and
+    the gather path run regardless of the axis size — full meshes are
+    pinned in test_multidevice).  StarInterconnect takes enables as runtime
+    arguments; FabricInterconnect reads them from the plan."""
+    state = identity_router(1)
+    mesh = jax.make_mesh((1,), ("fab0",))
+    timing = TIMING if timed else None
+    frames = _frames(jax.random.fold_in(KEY, 7), 1, 32, 0.8, timed)
+    enables = jnp.ones((1, 1), bool)
+    legacy = StarInterconnect(mesh=mesh, node_axis="fab0", capacity=16,
+                              link_capacity=8, timing=timing)
+    plan = compile_fabric(star_spec(1, 16, enables=enables,
+                                    link_capacity=8))
+    fab = FabricInterconnect(mesh=mesh, plan=plan, timing=timing)
+    ref = legacy.exchange_fn()(frames, state.fwd_tables, state.rev_tables,
+                               enables)
+    got = fab.exchange_fn()(frames, state.fwd_tables, state.rev_tables)
+    _assert_rounds_equal(got, ref)
+    # And the scanned stream entry point agrees with the per-round one.
+    frames_t = jax.tree.map(lambda x: jnp.broadcast_to(x[None],
+                                                       (3, *x.shape)),
+                            frames)
+    outs, drops = fab.stream_fn()(frames_t, state.fwd_tables,
+                                  state.rev_tables)
+    _assert_rounds_equal((jax.tree.map(lambda x: x[1], outs),
+                          jax.tree.map(lambda x: x[1], drops)), got)
+
+
+def test_fabric_interconnect_validates_mesh():
+    plan = compile_fabric(star_spec(2, 8))
+    mesh = jax.make_mesh((1,), ("fab0",))
+    with pytest.raises(ValueError, match="fan_in"):
+        FabricInterconnect(mesh=mesh, plan=plan)._axes()
+    with pytest.raises(ValueError, match="mesh axes"):
+        FabricInterconnect(mesh=mesh, plan=plan,
+                           axis_names=("a", "b"))._axes()
+
+
+# ---------------------------------------------------------------------------
+# 3-level semantics (beyond any legacy wrapper)
+# ---------------------------------------------------------------------------
+
+
+def _plan3(capacity, caps=(None, None, None)):
+    return compile_fabric(FabricSpec(
+        levels=(LevelSpec(2, link_capacity=caps[0]),
+                LevelSpec(2, link_capacity=caps[1]),
+                LevelSpec(2, link_capacity=caps[2], extension=True)),
+        capacity=capacity))
+
+
+def test_three_level_merge_is_nearest_first():
+    """One event per leaf, ample capacity: every destination receives its
+    sibling leaf first, then its sibling backplane's leaves, then the other
+    case's leaves — the hop-graph generalization of 'local pod first'."""
+    plan = _plan3(16)
+    state = identity_router(8)
+    labels = (jnp.arange(1, 9, dtype=jnp.int32)[:, None]
+              * (jnp.arange(4) == 0)[None].astype(jnp.int32))
+    valid = jnp.zeros((8, 4), bool).at[:, 0].set(True)
+    frames, _ = make_frame(labels, jnp.zeros_like(labels), valid, 4)
+    out, drops = fabric_route_step(state, frames, plan)
+    # Leaf d's stream: sibling leaf, own-case sibling pod, other case.
+    expect = {
+        0: [2, 3, 4, 5, 6, 7, 8],
+        3: [3, 1, 2, 5, 6, 7, 8],
+        5: [5, 7, 8, 1, 2, 3, 4],
+    }
+    for d, want in expect.items():
+        got = np.asarray(out.labels[d])[np.asarray(out.valid[d])].tolist()
+        assert got == want, (d, got)
+    assert int(drops.congestion.sum()) == 0
+    assert int(drops.uplink.sum()) == 0
+
+
+def test_three_level_crossings_pay_per_level_extras():
+    """Zero congestion: same-pod delivery is the fixed path; each level
+    crossed beyond the backplane adds one ``second_layer_extra_ns``."""
+    plan = _plan3(16)
+    state = identity_router(8)
+    labels = jnp.zeros((8, 4), jnp.int32).at[7, 0].set(5)
+    valid = jnp.zeros((8, 4), bool).at[7, 0].set(True)
+    frames = EventFrame(labels=labels, times=jnp.zeros_like(labels),
+                        valid=valid)
+    out, _ = fabric_route_step(state, frames, plan, timing=TIMING)
+    fixed = TIMING.sender_fixed_ns + TIMING.recv_fixed_ns
+    t = {d: int(out.times[d][out.valid[d]][0]) for d in (6, 4, 0)}
+    assert t[6] == fixed                                    # same backplane
+    assert t[4] == fixed + TIMING.second_layer_extra_ns     # same case
+    assert t[0] == fixed + 2 * TIMING.second_layer_extra_ns  # other case
+
+
+def test_per_level_latency_overrides_crossing_extra():
+    """A level compiled with its own ``LatencyParams`` uses that level's
+    ``second_layer_extra_ns`` instead of the TimedWire default — extension
+    lanes may be slower than the in-case second layer."""
+    from repro.core.latency import LatencyParams
+
+    slow = LatencyParams(mux_arb_ns=500.0)
+    plan = compile_fabric(FabricSpec(
+        levels=(LevelSpec(2), LevelSpec(2),
+                LevelSpec(2, latency=slow, extension=True)),
+        capacity=16))
+    assert plan.levels[2].extra_ns == int(round(slow.second_layer_extra_ns()))
+    state = identity_router(8)
+    labels = jnp.zeros((8, 4), jnp.int32).at[7, 0].set(5)
+    valid = jnp.zeros((8, 4), bool).at[7, 0].set(True)
+    frames = EventFrame(labels=labels, times=jnp.zeros_like(labels),
+                        valid=valid)
+    out, _ = fabric_route_step(state, frames, plan, timing=TIMING)
+    fixed = TIMING.sender_fixed_ns + TIMING.recv_fixed_ns
+    inter_case = int(out.times[0][out.valid[0]][0])
+    assert inter_case == (fixed + TIMING.second_layer_extra_ns
+                          + plan.levels[2].extra_ns)
+
+
+def test_three_level_flat_star_set_equivalence():
+    """All-to-all 3-level fabric with ample capacity delivers exactly the
+    flat star's event set per destination (order is nearest-first instead
+    of source-major)."""
+    n, cap_in = 8, 16
+    state = identity_router(n)
+    frames = _frames(jax.random.fold_in(KEY, 9), n, cap_in, 0.6)
+    out3, d3 = fabric_route_step(state, frames, _plan3(n * cap_in))
+    star = compile_fabric(star_spec(n, n * cap_in,
+                                    enables=full_route_enables(n)))
+    out1, d1 = fabric_route_step(state, frames, star)
+    for d in range(n):
+        a = sorted(np.asarray(out3.labels[d])[np.asarray(out3.valid[d])])
+        b = sorted(np.asarray(out1.labels[d])[np.asarray(out1.valid[d])])
+        assert a == b, d
+    assert jnp.array_equal(d3.congestion, d1.congestion)
+
+
+def test_three_level_capacity_parity_including_timestamps():
+    """Cascaded uplink caps at ≥ the raw stream sizes are a no-op — labels,
+    order, drops and the timed lane all bit-exact with the dense fabric."""
+    n, cap_in = 8, 12
+    state = identity_router(n)
+    frames = _frames(jax.random.fold_in(KEY, 10), n, cap_in, 0.5, timed=True)
+    ref = fabric_route_step(state, frames, _plan3(16), timing=TIMING)
+    roomy = fabric_route_step(
+        state, frames, _plan3(16, caps=(cap_in, 2 * cap_in, 4 * cap_in)),
+        timing=TIMING)
+    _assert_rounds_equal(roomy, ref)
+
+
+def test_three_level_cascaded_uplink_drops():
+    """A tight top-level uplink drops events that survived the lower packs;
+    the loss is attributed to every leaf of the packed case."""
+    plan = _plan3(64, caps=(4, 8, 2))          # case uplink admits 2 events
+    state = identity_router(8)
+    # 4 events per leaf in case 0; case 1 silent — its nodes still *receive*.
+    labels = jnp.tile(jnp.arange(1, 5, dtype=jnp.int32)[None], (8, 1))
+    valid = jnp.concatenate([jnp.ones((4, 4), bool),
+                             jnp.zeros((4, 4), bool)])
+    frames, _ = make_frame(labels, None, valid, 4)
+    out, drops = fabric_route_step(state, frames, plan)
+    # Case 0 emits 16 events; its extension uplink carries only 2.
+    for d in range(4, 8):
+        assert int(out.valid[d].sum()) == 2 + int(valid[4:].sum())
+    # The 14 dropped events are charged to each of case 0's 4 leaves.
+    assert drops.uplink[:4].tolist() == [14] * 4
+    assert drops.uplink[4:].tolist() == [0] * 4
+
+
+def test_run_stream_three_level_end_to_end():
+    """A 3-level plan through the closed-loop emulation engine: with full
+    enables and ample capacity it is bit-exact with the star topology on
+    spikes/state (routing sets agree; row drives are order-insensitive),
+    and the timed run is functionally invariant with a live latency lane."""
+    cfg = netlib.NetworkConfig(n_chips=8, capacity=2048)
+    # All-to-all router (the plan's default gating): finer routing belongs
+    # in the reverse LUTs / row maps, as in hardware — the feedforward
+    # row_of_label still selects which delivered labels drive rows.
+    params = init_feedforward(KEY, cfg)._replace(router=identity_router(8))
+    drives = jnp.zeros((6, 8, 2, cfg.chip.n_rows)).at[:, 0].set(
+        (jax.random.uniform(jax.random.fold_in(KEY, 11),
+                            (6, 2, cfg.chip.n_rows)) < 0.4).astype(
+                                jnp.float32))
+    state = netlib.init_state(cfg, 2)
+    plan = _plan3(cfg.capacity)
+    ref = stlib.run_stream(params, state, drives, cfg, mode="event")
+    out = stlib.run_stream(params, state, drives, cfg, mode="event",
+                           fabric=plan)
+    assert jnp.array_equal(out.spikes, ref.spikes)
+    assert jnp.array_equal(out.dropped, ref.dropped)
+    assert int(out.dropped.sum()) == 0       # loss-free: the sets premise
+    assert jnp.array_equal(out.state.inflight, ref.state.inflight)
+    timed = stlib.run_stream(params, state, drives, cfg, mode="event",
+                             fabric=plan, timed=True)
+    assert jnp.array_equal(timed.spikes, out.spikes)
+    assert bool(timed.latency_valid.any())
+    lats = np.asarray(timed.latency_ns)[np.asarray(timed.latency_valid)]
+    fixed = TIMING.sender_fixed_ns + TIMING.recv_fixed_ns
+    assert np.all(lats >= fixed)
+    # Inter-case events exist and pay both crossings.
+    assert lats.max() >= fixed + 2 * TIMING.second_layer_extra_ns
+
+
+def test_run_stream_rejects_bad_fabric_configs():
+    cfg = netlib.NetworkConfig(n_chips=2)
+    params = init_feedforward(KEY, cfg)
+    state = netlib.init_state(cfg, 1)
+    drives = jnp.zeros((2, 2, 1, cfg.chip.n_rows))
+    wrong_n = compile_fabric(star_spec(4, cfg.capacity))
+    with pytest.raises(ValueError, match="leaves"):
+        stlib.run_stream(params, state, drives, cfg, fabric=wrong_n)
+    wrong_cap = compile_fabric(star_spec(2, cfg.capacity + 1))
+    with pytest.raises(ValueError, match="capacity"):
+        stlib.run_stream(params, state, drives, cfg, fabric=wrong_cap)
+    plan = compile_fabric(star_spec(2, cfg.capacity))
+    with pytest.raises(ValueError, match="topology"):
+        stlib.run_stream(params, state, drives, cfg, fabric=plan,
+                         topology="hierarchical",
+                         intra_enables=jnp.ones((1, 1), bool),
+                         inter_enables=jnp.ones((2, 2), bool))
+    with pytest.raises(ValueError, match="event"):
+        stlib.run_stream(params, state, drives, cfg, fabric=plan,
+                         mode="dense", route_mats=jnp.zeros(
+                             (2, 2, cfg.chip.n_neurons, cfg.chip.n_rows)))
+
+
+def test_fabric_mesh_helpers_consume_the_plan():
+    """parallel.sharding derives the nested mesh from the plan (no ad-hoc
+    axis flags); a 1-level plan fits the single-device test host."""
+    from repro.parallel import sharding as shardlib
+
+    plan3 = compile_fabric(ext_4case_spec())
+    assert shardlib.fabric_axis_names(plan3) == ("fab0", "fab1", "fab2")
+    plan1 = compile_fabric(star_spec(1, 8))
+    mesh = shardlib.fabric_mesh(plan1)
+    assert mesh.axis_names == ("fab0",)
+    assert mesh.devices.shape == (1,)
+    fab = FabricInterconnect(mesh=mesh, plan=plan1)
+    assert fab._axes() == ("fab0",)

@@ -1,0 +1,121 @@
+"""Direct coverage for the MGT link model (ISSUE 5 satellite).
+
+``core/link.py`` was only exercised transitively (through the latency model
+and the uplink sizing); this battery asserts the encoding/capacity math
+itself: 8b10b vs 64b66b payload rates and serialization, the sustained
+event rate, the clock-compensation interval derived from the ppm budget,
+and ``events_per_window`` — including the per-level capacities a fabric
+plan derives from it.
+"""
+
+import pytest
+
+from repro.core.link import (CC_SCHEDULING_MARGIN, CLOCK_TOLERANCE_PPM,
+                             ENC_8B10B, ENC_64B66B, LINK_BANDWIDTH_OPTIMIZED,
+                             LINK_LATENCY_OPTIMIZED, LinkConfig,
+                             MGT_USER_CLOCK_HZ, WORD_BITS, cc_interval_words,
+                             clock_compensation_stall_fraction)
+
+
+# ---------------------------------------------------------------------------
+# Encoding math: 8b10b@5G vs 64b66b@8G (§III)
+# ---------------------------------------------------------------------------
+
+
+def test_encoding_overhead_and_payload_rates():
+    assert ENC_8B10B.overhead == pytest.approx(10 / 8)
+    assert ENC_64B66B.overhead == pytest.approx(66 / 64)
+    assert ENC_8B10B.payload_rate_gbps(5.0) == pytest.approx(4.0)
+    assert ENC_64B66B.payload_rate_gbps(8.0) == pytest.approx(8 * 64 / 66)
+
+
+def test_word_serialization_latency():
+    """One 16-bit event word: two 8b10b groups (4 ns at 5G); 64b66b must
+    fill a whole 66-bit block first (8.25 ns at 8G) — the reason the paper
+    runs the slower encoding."""
+    assert LINK_LATENCY_OPTIMIZED.word_serialization_ns() == pytest.approx(
+        2 * 10 / 5.0)
+    assert LINK_BANDWIDTH_OPTIMIZED.word_serialization_ns() == pytest.approx(
+        66 / 8.0)
+    assert (LINK_LATENCY_OPTIMIZED.word_serialization_ns()
+            < LINK_BANDWIDTH_OPTIMIZED.word_serialization_ns())
+
+
+def test_hop_latency_calibration():
+    """One MGT hop ≈ 150 ns so two hops land on the paper's 0.3 µs."""
+    assert LINK_LATENCY_OPTIMIZED.hop_latency_ns() == pytest.approx(150.0)
+
+
+def test_line_rate_capped_by_encoding():
+    with pytest.raises(ValueError, match="8b10b"):
+        LinkConfig(encoding=ENC_8B10B, line_rate_gbps=8.0)
+
+
+# ---------------------------------------------------------------------------
+# Sustained event rate + clock compensation
+# ---------------------------------------------------------------------------
+
+
+def test_max_event_rate_is_min_of_clock_and_wire():
+    # 8b10b@5G: the 4 Gbit/s payload feeds exactly 16 bit per 250 MHz cycle.
+    assert LINK_LATENCY_OPTIMIZED.max_event_rate_hz() == pytest.approx(
+        MGT_USER_CLOCK_HZ)
+    # 64b66b@8G: wire is faster than the datapath — the user clock caps it.
+    assert LINK_BANDWIDTH_OPTIMIZED.max_event_rate_hz() == pytest.approx(
+        MGT_USER_CLOCK_HZ)
+    # Halved line rate: the wire becomes the bottleneck.
+    slow = LinkConfig(encoding=ENC_8B10B, line_rate_gbps=2.5)
+    assert slow.max_event_rate_hz() == pytest.approx(
+        slow.payload_rate_gbps() * 1e9 / WORD_BITS)
+    assert slow.max_event_rate_hz() < MGT_USER_CLOCK_HZ
+
+
+def test_cc_interval_words_from_ppm_budget():
+    """1/(2·ppm·margin) words between compensation pauses; scheduling
+    margin shortens it, a tighter ppm budget shortens it, floor at 1."""
+    assert cc_interval_words() == int(
+        1.0 / (2.0 * CLOCK_TOLERANCE_PPM * 1e-6 * CC_SCHEDULING_MARGIN))
+    assert cc_interval_words() == 1000
+    assert cc_interval_words(ppm=500.0) == 200
+    assert cc_interval_words(margin=1) == 5000
+    assert cc_interval_words(ppm=1e6, margin=10) == 1
+
+
+def test_clock_compensation_stall_fraction():
+    assert clock_compensation_stall_fraction() == pytest.approx(1 / 1000)
+    assert clock_compensation_stall_fraction(
+        interval_words=250) == pytest.approx(1 / 250)
+
+
+# ---------------------------------------------------------------------------
+# events_per_window: sizing the compact-before-gather capacities
+# ---------------------------------------------------------------------------
+
+
+def test_events_per_window_math():
+    """Event budget = sustained rate × (1 − cc stall share) × window."""
+    lane = LINK_LATENCY_OPTIMIZED
+    eff = lane.max_event_rate_hz() * (1 - clock_compensation_stall_fraction())
+    assert lane.events_per_window(1.0) == int(eff * 1e-6)
+    assert lane.events_per_window(1.0) == 249
+    assert lane.events_per_window(0.25) == 62
+    # Never sizes a lane below one event.
+    assert lane.events_per_window(1e-6) == 1
+
+
+def test_fabric_plan_derives_per_level_capacities_from_link_model():
+    """A fabric level declared with a ``LinkConfig`` gets its
+    compact-before-gather capacity from ``events_per_window`` — the
+    hardware-faithful sizing for a given exchange window."""
+    from repro.core.fabric import FabricSpec, LevelSpec, compile_fabric
+
+    lane = LinkConfig()
+    pod_link = LinkConfig(link_capacity=96)
+    plan = compile_fabric(FabricSpec(
+        levels=(LevelSpec(12, link=lane), LevelSpec(10, link=pod_link)),
+        capacity=128, window_us=0.25))
+    assert plan.levels[0].link_capacity == lane.events_per_window(0.25) == 62
+    assert plan.levels[1].link_capacity == 96      # explicit budget wins
+    assert plan.compact
+    # The merge layout tiles those capacities: 12 leaf lanes + 10 pods.
+    assert plan.merge_layout(256) == ((62,) * 12, (96,) * 10)
