@@ -35,6 +35,12 @@ the pack rank — and records its cost next to the untimed scan
 (``stream_timed_*`` keys: µs/step, overhead ratio, and the observed latency
 percentiles of the delivered events).
 
+``run_degraded`` drives the same scan on degraded EXT_4CASE_96CHIP plans
+(ISSUE 6): healthy vs one dead backplane uplink rerouted over the sibling's
+extension lanes vs reroute-exhausted (``stream_degraded_*`` keys — µs/step,
+overhead vs healthy, and the rerouted/unroutable event accounting), with
+the detour bit-exactness asserted before timing.
+
 Writes ``stream_*`` keys into ``BENCH_interconnect.json`` (merged with the
 single-round keys from ``interconnect_throughput.py``); see README.md for
 the key glossary.  ``benchmarks/run.py`` stamps the environment metadata
@@ -363,6 +369,84 @@ def run_timed(verbose: bool = True, n_steps: int = N_STEPS):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Degraded-mode streaming: dead uplinks, extension-lane detours, exhaustion
+# ---------------------------------------------------------------------------
+#
+# The ``stream_degraded_*`` family (ISSUE 6) times the scanned exchange on
+# the 3-level EXT_4CASE_96CHIP fabric in three health states — healthy,
+# one dead backplane uplink rerouted over the sibling's extension lanes,
+# and reroute-exhausted (both of one case's backplane uplinks dead, no
+# surviving detour) — and records the degraded plans' per-step cost next to
+# the healthy baseline plus the event accounting (rerouted / unroutable
+# totals).  Correctness is asserted before timing: the detoured plan must
+# deliver the healthy plan's exact label/valid set, and the exhausted plan
+# must lose exactly the dead subtree's traffic to ``unroutable``.
+
+DEGRADED_VARIANTS = (
+    ("healthy", ()),
+    ("1dead_uplink", ((1, 0),)),             # backplane 0 → detour via 1
+    ("exhausted", ((1, 0), (1, 1))),         # both case-0 uplinks dead
+)
+
+
+def run_degraded(verbose: bool = True, n_steps: int = N_STEPS):
+    """The ``stream_degraded_*`` family on EXT_4CASE_96CHIP."""
+    key = jax.random.key(0)
+    results = {}
+    rows = []
+    name, fan_ins, cap_in, cap = next(c for c in CASES if len(c[1]) == 3)
+    n = math.prod(fan_ins)
+    state = identity_router(n)
+    tag = f"[{name},T={n_steps}]"
+    frames = _frames_for(n, cap_in, n_steps,
+                         jax.random.fold_in(key, n), OCC_HEADLINE)
+    caps = _level_caps(fan_ins, cap_in, OCC_HEADLINE)
+    healthy = _plan_for(fan_ins, cap, caps)
+
+    outs = {}
+    t_healthy = None
+    for variant, dead in DEGRADED_VARIANTS:
+        plan = (healthy if not dead else
+                compile_fabric(fablib.degrade_spec(healthy.spec, dead)))
+        _, stream_fn = _build_fns(state, plan)
+        t_scan, (out_l, out_v, drops) = _time_scan(stream_fn, frames)
+        scan_us = t_scan / n_steps * 1e6
+        if t_healthy is None:
+            t_healthy = t_scan
+        rerouted = int(drops.rerouted.sum())
+        unroutable = int(drops.unroutable.sum())
+        outs[variant] = (out_l, out_v, drops)
+        vtag = f"[{variant},{name},T={n_steps}]"
+        results[f"stream_degraded_scan_us_per_step{vtag}"] = scan_us
+        results[f"stream_degraded_overhead{vtag}"] = t_scan / t_healthy
+        results[f"stream_degraded_rerouted_events{vtag}"] = float(rerouted)
+        results[f"stream_degraded_unroutable_events{vtag}"] = float(
+            unroutable)
+        rows.append((variant, n_steps, scan_us, rerouted, unroutable))
+        if verbose:
+            print(f"exchange_stream[{name} degraded {variant}],"
+                  f"{scan_us:.0f},us/step ({t_scan / t_healthy:.2f}x "
+                  f"healthy; rerouted={rerouted} unroutable={unroutable})")
+
+    # Correctness gates (cheap, on the already-computed outputs):
+    h_l, h_v, h_d = outs["healthy"]
+    d_l, d_v, d_d = outs["1dead_uplink"]
+    assert jnp.array_equal(h_v, d_v) and jnp.array_equal(
+        jnp.where(h_v, h_l, 0), jnp.where(d_v, d_l, 0)), (
+        "detoured plan must deliver the healthy label/valid set bit-exactly")
+    assert int(d_d.unroutable.sum()) == 0 and int(d_d.rerouted.sum()) > 0
+    x_d = outs["exhausted"][2]
+    assert int(x_d.unroutable.sum()) > 0 and int(x_d.rerouted.sum()) == 0
+    assert int(h_d.unroutable.sum()) == int(h_d.rerouted.sum()) == 0
+
+    path = _merge_bench_json(results)
+    if verbose:
+        print(f"exchange_stream[degraded json],0,wrote {path}")
+    return rows
+
+
 if __name__ == "__main__":
     run()
     run_timed()
+    run_degraded()

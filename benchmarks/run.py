@@ -16,6 +16,8 @@ from the calibration ratio instead of a prose footnote.
   stream                  §III/§V streaming engine vs per-step dispatch
                                   (star, two-layer, 3-level EXT_4CASE fabric)
   stream_timed            §IV     timed streaming datapath (timestamp lane)
+  stream_degraded         §III    degraded-mode fabric: dead uplinks,
+                                  extension-lane detours, reroute exhaustion
   moe_dispatch            DESIGN §4  event-frame dispatch at LM scale
   roofline_table          §Roofline  all dry-run cells (needs results/)
 """
@@ -41,6 +43,7 @@ ALL = [
     ("interconnect_throughput", interconnect_throughput.run),
     ("stream", exchange_stream.run),
     ("stream_timed", exchange_stream.run_timed),
+    ("stream_degraded", exchange_stream.run_degraded),
     ("moe_dispatch", moe_dispatch.run),
     ("grad_compression", grad_compression.run),
     ("roofline_table", roofline_table.run),
@@ -94,9 +97,16 @@ def environment_metadata() -> dict:
 def stamp_environment(bench_json: str | None = None,
                       history_jsonl: str | None = None, *,
                       ran: list[str] | None = None,
-                      failures: list[str] | None = None) -> dict:
+                      failures: list[str] | None = None,
+                      errors: dict[str, str] | None = None) -> dict:
     """Write ``_environment`` into the benchmark JSON and append the full
-    run record (environment + results + what ran) to the history log."""
+    run record (environment + results + what ran) to the history log.
+
+    ``errors`` maps a failed benchmark name to the tail of its traceback;
+    it is stamped as an ``_errors`` block next to the numbers (and cleared
+    again by the next clean run), so a red CI artifact carries its own
+    diagnosis instead of requiring the job log.
+    """
     bench_json = bench_json or interconnect_throughput.BENCH_JSON
     history_jsonl = history_jsonl or HISTORY_JSONL
     payload = {}
@@ -105,6 +115,9 @@ def stamp_environment(bench_json: str | None = None,
             payload = json.load(f)
     env = environment_metadata()
     payload["_environment"] = env
+    payload.pop("_errors", None)
+    if errors:
+        payload["_errors"] = errors
     with open(bench_json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     record = {
@@ -112,8 +125,10 @@ def stamp_environment(bench_json: str | None = None,
             timespec="seconds"),
         "benchmarks": ran or [],
         "failures": failures or [],
+        "errors": errors or {},
         "environment": env,
-        "results": {k: v for k, v in payload.items() if k != "_environment"},
+        "results": {k: v for k, v in payload.items()
+                    if k not in ("_environment", "_errors")},
     }
     with open(history_jsonl, "a") as f:
         f.write(json.dumps(record, sort_keys=True) + "\n")
@@ -140,6 +155,7 @@ def main(argv: list[str] | None = None) -> None:
         selected = [(name, fn) for name, fn in ALL if name in wanted]
 
     failures = []
+    errors: dict[str, str] = {}
     for name, fn in selected:
         print(f"\n=== {name} ===")
         try:
@@ -147,9 +163,11 @@ def main(argv: list[str] | None = None) -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures.append(name)
+            errors[name] = "".join(
+                traceback.format_exc().splitlines(keepends=True)[-12:])
 
     env = stamp_environment(ran=[name for name, _ in selected],
-                            failures=failures)
+                            failures=failures, errors=errors)
     print(f"\nenvironment: jax {env['jax']} / python {env['python']} / "
           f"{env['cpu_count']} cpus / calibration "
           f"{env['calibration_matmul_us']} us (history: {HISTORY_JSONL})")

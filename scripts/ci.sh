@@ -3,8 +3,9 @@
 # stages into a fast PR job and a full job + benchmark artifacts): repo
 # hygiene first, then the fast suite (quick signal, includes the fabric
 # wrapper-parity battery), then the full tier-1 suite, then the streaming
-# benchmarks (the 3-level EXT_4CASE fabric scenario + the timed lane) — all
-# with the repo's src/ on PYTHONPATH, as documented in README.
+# benchmarks (the 3-level EXT_4CASE fabric scenario, the timed lane, and the
+# degraded-mode variants) — all with the repo's src/ on PYTHONPATH, as
+# documented in README.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -15,11 +16,14 @@ if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
   exit 1
 fi
 
+echo "=== degraded-mode battery (health, detours, watchdog recovery) ==="
+python -m pytest -q tests/test_degraded.py tests/test_watchdog.py
+
 echo "=== fast suite (-m 'not slow') ==="
 python -m pytest -q -m "not slow"
 
 echo "=== full tier-1 suite ==="
 python -m pytest -x -q
 
-echo "=== streaming benchmarks (3-level fabric + timed lane) ==="
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed
+echo "=== streaming benchmarks (3-level fabric + timed lane + degraded mode) ==="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed --only stream_degraded

@@ -17,6 +17,8 @@ from repro.core.fabric import (  # noqa: F401
     LevelSpec, FabricSpec, LevelPlan, FabricPlan, compile_fabric,
     fabric_route_step, fabric_exchange, FabricInterconnect,
     star_spec, hierarchical_spec, ext_4case_spec,
+    FabricHealth, FaultEvent, full_health, degrade_spec, health_schedule,
+    dead_edges_at, fault_boundaries,
 )
 from repro.core.aggregator import (  # noqa: F401
     RouterState, ExchangeDrops, identity_router, route_step,

@@ -398,7 +398,7 @@ class StarInterconnect:
 
         in_specs = (EventFrame(shard, shard, shard), *table_specs)
         out_specs = (EventFrame(shard, shard, shard),
-                     ExchangeDrops(shard, shard))
+                     ExchangeDrops(shard, shard, shard, shard))
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                   out_specs=out_specs))
 
@@ -428,6 +428,6 @@ class StarInterconnect:
         tshard = P(None, *shard)                  # leading time axis
         in_specs = (EventFrame(tshard, tshard, tshard), *table_specs)
         out_specs = (EventFrame(tshard, tshard, tshard),
-                     ExchangeDrops(tshard, tshard))
+                     ExchangeDrops(tshard, tshard, tshard, tshard))
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                   out_specs=out_specs))

@@ -56,10 +56,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple
+from typing import Iterable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import routing
 from repro.core.events import (EventFrame, make_frame, make_frame_segmented,
@@ -88,15 +89,26 @@ class ExchangeDrops(NamedTuple):
     events exceeding a level's ``link_capacity`` on any uplink of the hop
     graph (higher-level overflow is attributed to every leaf of the packed
     entity, whose gathered view loses the same events).
-    Both are 0-filled int32 arrays of matching shape; ``total`` sums them.
+    ``unroutable``: events killed by a dead edge with no surviving route —
+    a dead uplink without an extension-lane detour masks the whole entity
+    stream (attributed, like uplink drops, to every leaf of the subtree); a
+    dead downlink masks the destinations below it (attributed per
+    destination leaf, once per destination that lost the event).
+    ``rerouted`` is *not* a loss: events that crossed a dead uplink via a
+    sibling's spare extension lanes (they arrive, paying the detour's extra
+    crossing on the timed lane), attributed like uplink drops.
+    All four are 0-filled int32 arrays of matching shape; ``total`` sums
+    the three loss classes (``rerouted`` excluded — those events arrive).
     """
 
     congestion: jax.Array
     uplink: jax.Array
+    unroutable: jax.Array
+    rerouted: jax.Array
 
     @property
     def total(self) -> jax.Array:
-        return self.congestion + self.uplink
+        return self.congestion + self.uplink + self.unroutable
 
 
 # ---------------------------------------------------------------------------
@@ -189,6 +201,18 @@ class LevelSpec:
         executor's ``TimedWire.second_layer_extra_ns`` per crossing.
       extension: this level's children ride the Aggregator's extension
         lanes — ``fan_in`` may not exceed ``interconnect.EXTENSION_LANES``.
+      uplink_health: static per-edge health of this level's uplinks — one
+        bool per child entity crossing into this level's merge, *globally*
+        (length ``n_nodes // prod(fan_in below)``; entity-major, so edge
+        ``e`` is slot ``e % fan_in`` of group ``e // fan_in``).  ``None`` /
+        all-True = healthy.  A dead uplink above level 1 is detoured
+        through a healthy sibling's spare extension lanes when one has
+        budget (see ``compile_fabric``); dead leaf lanes (level 1) and
+        detour-exhausted edges make the subtree's events ``unroutable``.
+      downlink_health: static per-edge health of the node→child broadcast
+        downlinks, same indexing.  No detour exists downstream (the merge
+        result descends one fixed path), so destinations below a dead
+        downlink count every event addressed to them as ``unroutable``.
     """
 
     fan_in: int
@@ -197,6 +221,8 @@ class LevelSpec:
     link: LinkConfig | None = None
     latency: LatencyParams | None = None
     extension: bool = False
+    uplink_health: tuple[bool, ...] | None = None
+    downlink_health: tuple[bool, ...] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,13 +231,17 @@ class FabricSpec:
 
     ``window_us`` is the exchange-window duration used to derive
     ``link_capacity`` for levels that specify a ``LinkConfig`` without an
-    event budget (``LinkConfig.events_per_window``).
+    event budget (``LinkConfig.events_per_window``).  ``reroute`` lets
+    ``compile_fabric`` assign extension-lane detours around dead uplinks
+    (the paper's 4 spare transceiver lanes); ``False`` compiles pure
+    masking — dead edges drop their traffic as ``unroutable`` instead.
     """
 
     levels: tuple[LevelSpec, ...]
     capacity: int
     window_us: float | None = None
     name: str = ""
+    reroute: bool = True
 
     @property
     def n_nodes(self) -> int:
@@ -227,6 +257,20 @@ class LevelPlan:
     link_capacity: int | None  # per-child uplink pack into this level
     extra_ns: int | None       # timed crossing extra; None = TimedWire default
     leaves: int                # leaves under one node of this level
+    uplink_ok: np.ndarray | None = None    # bool[n_edges]; None = all healthy
+    detour: np.ndarray | None = None       # int32[n_edges] host edge, -1 none
+    downlink_ok: np.ndarray | None = None  # bool[n_edges]; None = all healthy
+
+    @property
+    def routable(self) -> np.ndarray | None:
+        """Edges whose traffic survives: alive, or detoured via a host."""
+        if self.uplink_ok is None:
+            return None
+        return self.uplink_ok | (self.detour >= 0)
+
+    @property
+    def degraded(self) -> bool:
+        return self.uplink_ok is not None or self.downlink_ok is not None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +300,20 @@ class FabricPlan:
     @property
     def compact(self) -> bool:
         return self.levels[0].link_capacity is not None
+
+    @property
+    def degraded(self) -> bool:
+        """Any level carries static per-edge health (dead uplink/downlink)."""
+        return any(lvl.degraded for lvl in self.levels)
+
+    @property
+    def edge_counts(self) -> tuple[int, ...]:
+        """Per-level uplink/downlink edge counts (children crossing level i)."""
+        out, gsize = [], 1
+        for lvl in self.levels:
+            out.append(self.n_nodes // gsize)
+            gsize *= lvl.fan_in
+        return tuple(out)
 
     def merge_layout(self, cap_in: int) -> tuple[tuple[int, ...], ...]:
         """Per-level merge segment lengths for egress frames of ``cap_in``."""
@@ -288,12 +346,49 @@ class FabricPlan:
                 f"capacity {self.capacity}, uplink caps {caps}")
 
 
+def _parse_health(raw, n_edges: int, what: str) -> np.ndarray | None:
+    """Normalize a per-edge health vector: ``None``/all-True → ``None``."""
+    if raw is None:
+        return None
+    health = np.asarray(raw, dtype=bool).reshape(-1)
+    if health.shape[0] != n_edges:
+        raise ValueError(f"{what} has {health.shape[0]} entries but the "
+                         f"level crosses {n_edges} edges")
+    return None if bool(health.all()) else health
+
+
+def _assign_detours(alive: np.ndarray, fan_in: int) -> np.ndarray:
+    """Host assignment for dead uplinks: each dead child entity detours its
+    stream through the nearest healthy sibling's spare Aggregator lanes
+    (ring distance within the group, ties to the lower slot), each host
+    taking at most ``EXTENSION_LANES`` detours — the paper's 4 spare
+    transceiver lanes.  Returns the global host edge index per edge, -1 for
+    healthy edges and for dead edges with no host (detour-exhausted)."""
+    n_edges = alive.shape[0]
+    detour = np.full(n_edges, -1, np.int32)
+    budget = np.zeros(n_edges, np.int32)
+    for base in range(0, n_edges, fan_in):
+        for j in range(fan_in):
+            if alive[base + j]:
+                continue
+            cands = sorted(
+                (min((k - j) % fan_in, (j - k) % fan_in), k)
+                for k in range(fan_in) if k != j and alive[base + k])
+            for _, k in cands:
+                if budget[base + k] < EXTENSION_LANES:
+                    detour[base + j] = base + k
+                    budget[base + k] += 1
+                    break
+    return detour
+
+
 def compile_fabric(spec: FabricSpec) -> FabricPlan:
     """Compile a topology description into the static hop-graph plan."""
     if not spec.levels:
         raise ValueError("a fabric needs at least one level")
     if spec.capacity <= 0:
         raise ValueError(f"ingress capacity must be positive: {spec.capacity}")
+    n_nodes = spec.n_nodes
     levels = []
     leaves = 1
     for i, lvl in enumerate(spec.levels):
@@ -327,10 +422,24 @@ def compile_fabric(spec: FabricSpec) -> FabricPlan:
             raise ValueError(f"level {i} link_capacity must be >= 1: {cap}")
         extra = (None if lvl.latency is None
                  else int(round(lvl.latency.second_layer_extra_ns())))
+        n_edges = n_nodes // leaves
+        up_ok = _parse_health(lvl.uplink_health, n_edges,
+                              f"level {i} uplink_health")
+        down_ok = _parse_health(lvl.downlink_health, n_edges,
+                                f"level {i} downlink_health")
+        detour = None
+        if up_ok is not None:
+            # Leaf MGT lanes (level 1) have no sibling interconnect to
+            # detour over — only Aggregator-tier uplinks can borrow a
+            # sibling's spare lanes.
+            detour = (_assign_detours(up_ok, lvl.fan_in)
+                      if spec.reroute and i > 0
+                      else np.full(n_edges, -1, np.int32))
         leaves *= lvl.fan_in
         levels.append(LevelPlan(fan_in=lvl.fan_in, enables=enables,
                                 link_capacity=cap, extra_ns=extra,
-                                leaves=leaves))
+                                leaves=leaves, uplink_ok=up_ok,
+                                detour=detour, downlink_ok=down_ok))
     return FabricPlan(spec=spec, levels=tuple(levels), n_nodes=leaves,
                       capacity=spec.capacity)
 
@@ -384,6 +493,201 @@ def ext_4case_spec(capacity: int = 96, *,
 
 
 # ---------------------------------------------------------------------------
+# Degraded mode: dynamic health overlays and fault schedules
+# ---------------------------------------------------------------------------
+
+
+class FabricHealth(NamedTuple):
+    """Dynamic per-edge health overlay for the executors — one bool vector
+    per level for uplinks and downlinks (``plan.edge_counts`` lengths; a
+    ``None`` entry means that level is fully healthy).  Unlike the static
+    health compiled into the plan, the overlay is *traced*: it masks flows
+    in-graph (within-plan degradation, no recompile) but cannot reroute —
+    an edge masked here loses its traffic as ``unroutable`` even if the
+    static plan had assigned it a detour.  Arrays may carry a leading time
+    axis when scanned (``health_schedule``)."""
+
+    uplink: tuple
+    downlink: tuple
+
+
+def full_health(plan: FabricPlan) -> FabricHealth:
+    """All-healthy dynamic overlay matching ``plan`` (identity element)."""
+    counts = plan.edge_counts
+    return FabricHealth(
+        uplink=tuple(jnp.ones((c,), jnp.bool_) for c in counts),
+        downlink=tuple(jnp.ones((c,), jnp.bool_) for c in counts))
+
+
+def _check_health(plan: FabricPlan, health: FabricHealth) -> None:
+    counts = plan.edge_counts
+    for side in ("uplink", "downlink"):
+        vecs = getattr(health, side)
+        if len(vecs) != plan.n_levels:
+            raise ValueError(f"health.{side} has {len(vecs)} levels but the "
+                             f"plan wires {plan.n_levels}")
+        for i, vec in enumerate(vecs):
+            if vec is not None and vec.shape[-1] != counts[i]:
+                raise ValueError(
+                    f"health.{side}[{i}] covers {vec.shape[-1]} edges but "
+                    f"level {i} crosses {counts[i]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled link fault for the stream fault injector: the edge
+    ``(level, edge)`` dies at ``kill_step`` (inclusive) and — unless
+    ``restore_step`` is ``None`` (permanent) — comes back at
+    ``restore_step`` (exclusive).  ``kind`` picks the direction."""
+
+    level: int
+    edge: int
+    kill_step: int
+    restore_step: int | None = None
+    kind: str = "uplink"
+
+
+def _check_faults(plan: FabricPlan, faults: Sequence[FaultEvent]) -> None:
+    counts = plan.edge_counts
+    for ev in faults:
+        if ev.kind not in ("uplink", "downlink"):
+            raise ValueError(f"unknown fault kind: {ev.kind!r}")
+        if not 0 <= ev.level < plan.n_levels:
+            raise ValueError(f"fault level {ev.level} outside the "
+                             f"{plan.n_levels}-level plan")
+        if not 0 <= ev.edge < counts[ev.level]:
+            raise ValueError(f"fault edge {ev.edge} outside level "
+                             f"{ev.level}'s {counts[ev.level]} edges")
+        if ev.restore_step is not None and ev.restore_step <= ev.kill_step:
+            raise ValueError(f"fault restore_step {ev.restore_step} must be "
+                             f"> kill_step {ev.kill_step}")
+
+
+def health_schedule(plan: FabricPlan, faults: Sequence[FaultEvent],
+                    n_steps: int) -> FabricHealth:
+    """Expand a fault schedule into per-step dynamic health masks,
+    ``bool[n_steps, n_edges]`` per level (``None`` for untouched levels) —
+    the scan inputs of ``run_stream``'s in-graph masking mode."""
+    _check_faults(plan, faults)
+    counts = plan.edge_counts
+    masks = {side: [None] * plan.n_levels for side in ("uplink", "downlink")}
+    for ev in faults:
+        tbl = masks[ev.kind]
+        if tbl[ev.level] is None:
+            tbl[ev.level] = np.ones((n_steps, counts[ev.level]), bool)
+        stop = n_steps if ev.restore_step is None else min(ev.restore_step,
+                                                           n_steps)
+        tbl[ev.level][ev.kill_step:stop, ev.edge] = False
+    as_jnp = lambda tbl: tuple(None if m is None else jnp.asarray(m)
+                               for m in tbl)
+    return FabricHealth(uplink=as_jnp(masks["uplink"]),
+                        downlink=as_jnp(masks["downlink"]))
+
+
+def dead_edges_at(faults: Sequence[FaultEvent], step: int
+                  ) -> tuple[tuple[int, int, str], ...]:
+    """The set of ``(level, edge, kind)`` dead at ``step`` (sorted)."""
+    dead = {(ev.level, ev.edge, ev.kind) for ev in faults
+            if ev.kill_step <= step
+            and (ev.restore_step is None or step < ev.restore_step)}
+    return tuple(sorted(dead))
+
+
+def fault_boundaries(faults: Sequence[FaultEvent], n_steps: int
+                     ) -> tuple[int, ...]:
+    """Segment starts where the dead-edge set changes (always includes 0) —
+    the recompile points of ``run_stream``'s reroute mode."""
+    marks = {0}
+    for ev in faults:
+        marks.add(ev.kill_step)
+        if ev.restore_step is not None:
+            marks.add(ev.restore_step)
+    return tuple(sorted(m for m in marks if 0 <= m < n_steps))
+
+
+def degrade_spec(spec: FabricSpec,
+                 dead: Iterable[tuple[int, int] | tuple[int, int, str]],
+                 *, reroute: bool | None = None) -> FabricSpec:
+    """Copy ``spec`` with the given edges marked dead — ``dead`` holds
+    ``(level, edge)`` or ``(level, edge, kind)`` tuples (kind defaults to
+    ``'uplink'``).  Existing health on the spec is preserved and further
+    degraded; ``reroute`` overrides the spec's detour policy.  Compile the
+    result to get the degraded plan (detours assigned there)."""
+    n_nodes = spec.n_nodes
+    health = {}
+    gsize = 1
+    for i, lvl in enumerate(spec.levels):
+        n_edges = n_nodes // gsize
+        health[(i, "uplink")] = np.ones(n_edges, bool) if (
+            lvl.uplink_health is None) else np.asarray(lvl.uplink_health,
+                                                       bool).copy()
+        health[(i, "downlink")] = np.ones(n_edges, bool) if (
+            lvl.downlink_health is None) else np.asarray(lvl.downlink_health,
+                                                         bool).copy()
+        gsize *= lvl.fan_in
+    for entry in dead:
+        level, edge, kind = entry if len(entry) == 3 else (*entry, "uplink")
+        if (level, kind) not in health:
+            raise ValueError(f"unknown fault kind or level: {kind!r}/{level}")
+        if not 0 <= edge < health[(level, kind)].shape[0]:
+            raise ValueError(f"edge {edge} outside level {level}'s "
+                             f"{health[(level, kind)].shape[0]} edges")
+        health[(level, kind)][edge] = False
+    new_levels = tuple(
+        dataclasses.replace(
+            lvl,
+            uplink_health=tuple(bool(b) for b in health[(i, "uplink")]),
+            downlink_health=tuple(bool(b) for b in health[(i, "downlink")]))
+        for i, lvl in enumerate(spec.levels))
+    return dataclasses.replace(
+        spec, levels=new_levels,
+        reroute=spec.reroute if reroute is None else reroute)
+
+
+def _flow_masks(lvl: LevelPlan, dyn_up, n_ent: int):
+    """Combined static+dynamic uplink masks for one level: ``flow_ok`` (the
+    edge's traffic survives — alive or detoured, and not dynamically
+    masked) and ``live_detour`` (actually travelling a detour), both
+    bool[n_ent]; ``(None, None)`` when the level is fully healthy."""
+    if lvl.uplink_ok is None and dyn_up is None:
+        return None, None
+    if lvl.uplink_ok is not None:
+        routable = jnp.asarray(lvl.routable)
+        detoured = jnp.asarray(~lvl.uplink_ok & (lvl.detour >= 0))
+    else:
+        routable = jnp.ones((n_ent,), jnp.bool_)
+        detoured = jnp.zeros((n_ent,), jnp.bool_)
+    if dyn_up is not None:
+        return routable & dyn_up, detoured & dyn_up
+    return routable, detoured
+
+
+def _down_mask(lvl: LevelPlan, dyn_down, ent):
+    """Per-leaf downlink health of one level (``ent`` = each leaf's child
+    entity index at this level), or ``None`` when fully healthy."""
+    if lvl.downlink_ok is None and dyn_down is None:
+        return None
+    ok = None
+    if lvl.downlink_ok is not None:
+        ok = jnp.asarray(lvl.downlink_ok)[ent]
+    if dyn_down is not None:
+        dyn = dyn_down[ent]
+        ok = dyn if ok is None else ok & dyn
+    return ok
+
+
+def _detour_penalty(lvl: LevelPlan, timing: TimedWire, valid) -> jax.Array:
+    """Timed cost of the extension-lane detour: one extra crossing of this
+    level (its ``extra_ns``) plus the host lane's serialization wait of the
+    event's rank within the detoured stream."""
+    ok = valid.astype(jnp.int32)
+    rank = jnp.cumsum(ok, axis=-1) - ok
+    extra = (lvl.extra_ns if lvl.extra_ns is not None
+             else timing.second_layer_extra_ns)
+    return extra + _queue_wait_i32(rank, timing.uplink_queue)
+
+
+# ---------------------------------------------------------------------------
 # Stacked executor: all leaves' frames on one device
 # ---------------------------------------------------------------------------
 
@@ -391,7 +695,9 @@ def ext_4case_spec(capacity: int = 96, *,
 def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
                       use_fused: bool | None = None,
                       timing: TimedWire | None = None,
-                      engine: str = "auto") -> tuple[EventFrame, ExchangeDrops]:
+                      engine: str = "auto",
+                      health: FabricHealth | None = None
+                      ) -> tuple[EventFrame, ExchangeDrops]:
     """One N-level hop-graph exchange round, all leaves stacked on one device.
 
     Args:
@@ -411,15 +717,22 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
         original single-round Pallas kernel; ``"merge"`` forces the generic
         broadcast/merge-pack engine (same observables — used as the
         same-engine baseline by the timed benchmarks).
+      health: dynamic per-edge health overlay (``FabricHealth``), traced —
+        masks flows in-graph on top of the plan's static health.  Dynamic
+        masking never reroutes; a masked edge loses its traffic as
+        ``unroutable`` (recompile a statically degraded plan to detour).
 
     Returns:
       (ingress frames [n_nodes, capacity],
-       ExchangeDrops(congestion [n_nodes], uplink [n_nodes])).
+       ExchangeDrops(congestion, uplink, unroutable, rerouted), each
+       int32[n_nodes]).
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
     if engine not in ("auto", "merge"):
         raise ValueError(f"unknown engine: {engine!r}")
+    if health is not None:
+        _check_health(plan, health)
     levels = plan.levels
     n, cap_in = frames.labels.shape
     if n != plan.n_nodes:
@@ -429,7 +742,8 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
     # Fast path: the plain 1-level star is the original fused single-round
     # kernel (bit-exact with the merge engine, pinned by the parity battery).
     if (engine == "auto" and len(levels) == 1 and timing is None and use_fused
-            and levels[0].link_capacity is None):
+            and levels[0].link_capacity is None and not plan.degraded
+            and health is None):
         from repro.kernels.spike_router.ops import fused_exchange
 
         out_l, out_v, dropped = fused_exchange(
@@ -437,8 +751,9 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
             levels[0].enables, capacity=plan.capacity)
         ingress = EventFrame(labels=out_l, times=jnp.zeros_like(out_l),
                              valid=out_v)
-        return ingress, ExchangeDrops(congestion=dropped,
-                                      uplink=jnp.zeros_like(dropped))
+        zeros = jnp.zeros_like(dropped)
+        return ingress, ExchangeDrops(congestion=dropped, uplink=zeros,
+                                      unroutable=zeros, rerouted=zeros)
 
     wire, fwd_en = jax.vmap(routing.lookup_fwd)(state.fwd_tables,
                                                 frames.labels)
@@ -463,17 +778,47 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
     cur_l, cur_v, cur_t = wire, ev, times
     cur_len = u0 if u0 is not None else cap_in
     gsize = 1                                 # leaves per tier-i entity
+    unroutable = jnp.zeros((n,), jnp.int32)
+    rerouted = jnp.zeros((n,), jnp.int32)
+    recv_ok = None                            # per-leaf downlink path health
     parts_l, parts_v, parts_t, seg_lens = [], [], [], []
     for i, lvl in enumerate(levels):
         f = lvl.fan_in
         gnext = gsize * f
         n_grp = n // gnext
+        ent = leaf // gsize                   # each leaf's entity at this level
+
+        # Degraded mode — uplink health gates the tier-i entity streams
+        # before they join this merge (and before they cascade upward):
+        # detoured streams keep their merge slot (the host relays the same
+        # wire content, so delivery is bit-exact) but pay the detour on the
+        # timed lane; streams with no surviving route are masked and their
+        # events counted unroutable, attributed to every leaf of the subtree.
+        dyn_up = None if health is None else health.uplink[i]
+        flow_ok, live_detour = _flow_masks(lvl, dyn_up, n // gsize)
+        if flow_ok is not None:
+            counts = cur_v.sum(axis=-1).astype(jnp.int32)
+            if timing is not None:
+                pen = _detour_penalty(lvl, timing, cur_v)
+                cur_t = jnp.where(live_detour[:, None] & cur_v,
+                                  cur_t + pen, cur_t)
+            cur_v = cur_v & flow_ok[:, None]
+            unroutable = unroutable + jnp.where(flow_ok, 0, counts)[ent]
+            rerouted = rerouted + jnp.where(live_detour, counts, 0)[ent]
+        # Downlink health accumulates along each leaf's descent path: the
+        # level-i part reaches a destination through its downlinks at
+        # levels i..1, so a dead edge kills this and every higher part.
+        dyn_down = None if health is None else health.downlink[i]
+        d_ok = _down_mask(lvl, dyn_down, ent)
+        if d_ok is not None:
+            recv_ok = d_ok if recv_ok is None else recv_ok & d_ok
+
         s_len = f * cur_len
         # S_i per tier-(i+1) entity: the concat of its children's U_i.
         s_l = cur_l.reshape(n_grp, s_len)
         s_v = cur_v.reshape(n_grp, f, cur_len)
         anc = leaf // gnext                   # tier-(i+1) ancestor of each leaf
-        child = (leaf // gsize) % f           # leaf's child slot at this level
+        child = ent % f                       # leaf's child slot at this level
         gate = lvl.enables.T[child]           # [n, f] src child → this dest
         if i > 0:
             gate = gate & (jnp.arange(f)[None, :] != child[:, None])
@@ -485,6 +830,10 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
         else:
             part_l = s_l[anc]
             part_v = (s_v[anc] & gate[:, :, None]).reshape(n, s_len)
+        if recv_ok is not None:
+            lost = part_v.sum(axis=-1).astype(jnp.int32)
+            part_v = part_v & recv_ok[:, None]
+            unroutable = unroutable + jnp.where(recv_ok, 0, lost)
         parts_l.append(part_l)
         parts_v.append(part_v)
         if timing is not None:
@@ -533,14 +882,17 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
                                         compact=plan.compact, timing=timing,
                                         use_fused=use_fused,
                                         times=merge_times)
-        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink,
+                                      unroutable=unroutable,
+                                      rerouted=rerouted)
     mixed, dropped = make_frame_segmented(labels, None, valid, plan.capacity,
                                           seg_lens, compact=plan.compact)
     chip, rev_en = jax.vmap(routing.lookup_rev)(state.rev_tables, mixed.labels)
     out_valid = mixed.valid & rev_en
     ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
                          times=mixed.times, valid=out_valid)
-    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink,
+                                  unroutable=unroutable, rerouted=rerouted)
 
 
 # ---------------------------------------------------------------------------
@@ -551,7 +903,8 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
 def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
                     fwd_table: jax.Array, rev_table: jax.Array,
                     plan: FabricPlan, *, use_fused: bool | None = None,
-                    timing: TimedWire | None = None
+                    timing: TimedWire | None = None,
+                    health: FabricHealth | None = None
                     ) -> tuple[EventFrame, ExchangeDrops]:
     """One N-level exchange round from the perspective of a single leaf shard.
 
@@ -563,7 +916,11 @@ def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
     level's ``link_capacity`` before uplinking (packs cascade).  All gathers
     move int16 wire words (``events.pack_wire16``); the timed lane, when
     enabled, travels as a separate int32 plane.  Gating, segment layout,
-    drops and timestamps mirror ``fabric_route_step`` bit-exactly.
+    drops and timestamps mirror ``fabric_route_step`` bit-exactly — a
+    degraded plan masks dead slots on the gathered planes (a dead link
+    still clocks its gather; the words are zeroed, i.e. invalid) and
+    retimes detoured streams identically.  ``health`` is the dynamic
+    overlay; under ``shard_map`` pass it as replicated constants.
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
@@ -571,6 +928,9 @@ def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
     if len(axis_names) != len(levels):
         raise ValueError(f"{len(axis_names)} mesh axes for "
                          f"{len(levels)} fabric levels")
+    if health is not None:
+        _check_health(plan, health)
+    degraded = plan.degraded or health is not None
     cap_in = frame.labels.shape[-1]
 
     wire, fwd_en = routing.lookup_fwd(fwd_table, frame.labels)
@@ -586,25 +946,74 @@ def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
     else:
         uplink = jnp.zeros((), jnp.int32)
 
+    if degraded:
+        # This shard's global leaf index, from the per-level coordinates.
+        from repro.parallel.sharding import fabric_leaf_index
+
+        leaf = fabric_leaf_index(axis_names,
+                                 tuple(lvl.fan_in for lvl in levels))
+    unroutable = jnp.zeros((), jnp.int32)
+    rerouted = jnp.zeros((), jnp.int32)
+    recv_ok = None
+
     layout = plan.merge_layout(cap_in)
     cur_words = pack_wire16(wire, ev)
     cur_times = times
+    gsize = 1
     parts_w, parts_en, parts_t, seg_lens = [], [], [], []
     for i, lvl in enumerate(levels):
         f = lvl.fan_in
+        if degraded:
+            # Every leaf of a tier-i entity redundantly carries the entity
+            # stream, so per-leaf attribution mirrors the stacked executor:
+            # count this entity's (pre-mask) events against my own leaf.
+            ent_me = leaf // gsize
+            dyn_up = None if health is None else health.uplink[i]
+            flow_ok, live_detour = _flow_masks(lvl, dyn_up,
+                                               plan.n_nodes // gsize)
+            if flow_ok is not None:
+                _, my_v = unpack_wire16(cur_words)
+                my_count = my_v.sum().astype(jnp.int32)
+                unroutable = unroutable + jnp.where(flow_ok[ent_me], 0,
+                                                    my_count)
+                rerouted = rerouted + jnp.where(live_detour[ent_me],
+                                                my_count, 0)
+            dyn_down = None if health is None else health.downlink[i]
+            d_ok = _down_mask(lvl, dyn_down, ent_me)
+            if d_ok is not None:
+                recv_ok = d_ok if recv_ok is None else recv_ok & d_ok
+        else:
+            flow_ok = None
         g_words = jax.lax.all_gather(cur_words, axis_names[i], axis=0)
         g_times = (jax.lax.all_gather(cur_times, axis_names[i], axis=0)
                    if timing is not None else None)
         me = jax.lax.axis_index(axis_names[i])
+        if flow_ok is not None:
+            # Gathered slot s holds the entity (leaf // gnext) * f + s.
+            slots = (leaf // (gsize * f)) * f + jnp.arange(f)
+            flow_s = flow_ok[slots]
+            if timing is not None:
+                _, g_v = unpack_wire16(g_words)
+                pen = _detour_penalty(lvl, timing, g_v)
+                g_times = jnp.where(live_detour[slots][:, None] & g_v,
+                                    g_times + pen, g_times)
+                g_times = jnp.where(flow_s[:, None], g_times, 0)
+            g_words = jnp.where(flow_s[:, None], g_words, 0)
         gate = lvl.enables[:, me]                       # [f]
         if i > 0:
             gate = gate & (jnp.arange(f) != me)
+        en = jnp.broadcast_to(gate[:, None], g_words.shape).reshape(-1)
+        if recv_ok is not None:
+            _, g_v = unpack_wire16(g_words.reshape(-1))
+            lost = (g_v & en).sum().astype(jnp.int32)
+            unroutable = unroutable + jnp.where(recv_ok, 0, lost)
+            en = en & recv_ok
         parts_w.append(g_words.reshape(-1))
-        parts_en.append(jnp.broadcast_to(gate[:, None],
-                                         g_words.shape).reshape(-1))
+        parts_en.append(en)
         if timing is not None:
             parts_t.append(g_times.reshape(-1))
         seg_lens += list(layout[i])
+        gsize = gsize * f
 
         if i + 1 < len(levels):
             nxt = levels[i + 1]
@@ -640,7 +1049,9 @@ def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
                                         compact=plan.compact, timing=timing,
                                         use_fused=use_fused,
                                         times=flat_times)
-        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+        return ingress, ExchangeDrops(congestion=dropped, uplink=uplink,
+                                      unroutable=unroutable,
+                                      rerouted=rerouted)
     g_labels, g_valid = unpack_wire16(flat_words)
     mixed, dropped = make_frame_segmented(g_labels, None, g_valid & flat_en,
                                           plan.capacity, seg_lens,
@@ -649,7 +1060,8 @@ def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
     out_valid = mixed.valid & rev_en
     ingress = EventFrame(labels=jnp.where(out_valid, chip, 0),
                          times=mixed.times, valid=out_valid)
-    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink)
+    return ingress, ExchangeDrops(congestion=dropped, uplink=uplink,
+                                  unroutable=unroutable, rerouted=rerouted)
 
 
 # ---------------------------------------------------------------------------
@@ -678,6 +1090,8 @@ class FabricInterconnect:
     axis_names: tuple[str, ...] | None = None
     use_fused: bool | None = None
     timing: TimedWire | None = None
+    health: FabricHealth | None = None  # dynamic overlay, closed over
+    #                                     (replicated constants per round)
 
     def _axes(self) -> tuple[str, ...]:
         axes = (tuple(self.axis_names) if self.axis_names is not None
@@ -696,10 +1110,12 @@ class FabricInterconnect:
     def _round(self):
         axes = self._axes()
         plan, fused, timing = self.plan, self.use_fused, self.timing
+        health = self.health
 
         def round_fn(frame, fwd, rev):
             return fabric_exchange(frame, axes, fwd[0], rev[0], plan,
-                                   use_fused=fused, timing=timing)
+                                   use_fused=fused, timing=timing,
+                                   health=health)
 
         from jax.sharding import PartitionSpec as P
 
@@ -719,7 +1135,7 @@ class FabricInterconnect:
 
         in_specs = (EventFrame(shard, shard, shard), *table_specs)
         out_specs = (EventFrame(shard, shard, shard),
-                     ExchangeDrops(shard, shard))
+                     ExchangeDrops(shard, shard, shard, shard))
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                   out_specs=out_specs))
 
@@ -744,6 +1160,6 @@ class FabricInterconnect:
         tshard = P(None, *shard)
         in_specs = (EventFrame(tshard, tshard, tshard), *table_specs)
         out_specs = (EventFrame(tshard, tshard, tshard),
-                     ExchangeDrops(tshard, tshard))
+                     ExchangeDrops(tshard, tshard, tshard, tshard))
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
                                   out_specs=out_specs))

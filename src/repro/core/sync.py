@@ -15,6 +15,16 @@ timeout/refractory recovery semantics live at two levels:
     functionally (used by tests + the latency model);
   * host-level: ``runtime.watchdog`` applies the same timeout → recover →
     refractory cycle to training steps (checkpoint/restart).
+
+The two layers share one policy by construction:
+``runtime.watchdog.WatchdogConfig.from_sync(SyncConfig(...))`` converts the
+barrier's ``timeout_cycles`` / ``refractory_cycles`` into the host
+watchdog's deadline / refractory seconds at the 8 ns system clock, and the
+degraded-fabric recovery loop (``runtime.elastic.run_supervised_stream``)
+reacts to a fired watchdog exactly like the barrier reacts to a missing
+participant: release (restore the last window checkpoint), reroute around
+the dead peer (recompile the fabric plan), refractory (ignore further
+triggers while the resumed stream warms up).
 """
 
 from __future__ import annotations

@@ -25,6 +25,7 @@ import math
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -172,6 +173,25 @@ def fabric_mesh(plan) -> Mesh:
     names = fabric_axis_names(plan)
     shape = tuple(lvl.fan_in for lvl in reversed(plan.levels))
     return make_mesh(shape, tuple(reversed(names)))
+
+
+def fabric_leaf_index(axis_names: tuple, fan_ins: tuple) -> jax.Array:
+    """This shard's global leaf index, in-graph, from its mesh coordinates.
+
+    Leaf-major layout: axis 0 (the backplane star) is innermost/fastest, so
+    ``leaf = sum_i axis_index(fab_i) * prod(fan_in[:i])``.  The degraded
+    exchange path (``fabric.fabric_exchange`` with per-edge health) uses this
+    to look up which health-mask entries govern *this* shard's uplinks and
+    downlinks — static replication of the masks plus a per-shard index keeps
+    the dead-edge gating inside the partitioned program, identical on every
+    mesh shape the plan compiles to.
+    """
+    leaf = jnp.zeros((), jnp.int32)
+    stride = 1
+    for name, f in zip(axis_names, fan_ins):
+        leaf = leaf + jax.lax.axis_index(name) * stride
+        stride *= int(f)
+    return leaf
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,5 @@
-"""Elastic resume: re-instantiate a checkpointed run on a different mesh.
+"""Elastic resume: re-instantiate a checkpointed run on a different mesh —
+and the degraded-fabric recovery loop for streamed emulation.
 
 Checkpoints are mesh-agnostic host arrays; resharding happens on load
 (`ckpt.restore(..., shardings=...)`).  Changing the *data* axis size changes
@@ -7,11 +8,27 @@ only the per-device batch slice — the data pipeline is a pure function of
 deterministic across a resize.  Changing the *model* axis requires the same
 divisibility the sharding rules already check; incompatible dims degrade to
 replication rather than failing.
+
+``run_supervised_stream`` is the stream-side recovery loop: the emulation
+advances in windows, each window checkpointed at its boundary and run under
+a ``runtime.watchdog.StepWatchdog`` (the host twin of the Aggregator
+barrier's timeout → recover → refractory cycle, ``core.sync``).  When the
+watchdog fires — a stalled stream, e.g. a dead peer holding the barrier —
+the loop restores the last window-boundary checkpoint, swaps in the
+degraded fabric plan (``on_recover``, typically
+``compile_fabric(degrade_spec(...))`` so dead uplinks detour over the spare
+extension lanes), and reruns from the boundary: the resumed stream is
+bit-exact with a run that had started on the degraded plan at that
+boundary, because ``snn.stream.run_stream`` is a pure function of
+(params, state, drives, plan).
 """
 
 from __future__ import annotations
 
+from typing import Callable
+
 import jax
+import jax.numpy as jnp
 
 from repro.ckpt import checkpoint as ckpt
 from repro.parallel import sharding as shardlib
@@ -37,3 +54,115 @@ def resume_on_mesh(directory: str, state_like, mesh, params_key="params",
             m=pshard, v=pshard)
     return ckpt.restore(directory, state_like, step=step,
                         shardings=shardings)
+
+
+# ---------------------------------------------------------------------------
+# Degraded-fabric stream recovery (watchdog → checkpoint-restore → resume)
+# ---------------------------------------------------------------------------
+
+
+def _stream_tree(state) -> dict:
+    """NetworkState as a checkpointable tree (named leaves, mesh-agnostic)."""
+    return {"chips": state.chips, "inflight": state.inflight}
+
+
+def save_stream_state(directory: str, step: int, state,
+                      metadata: dict | None = None) -> str:
+    """Checkpoint a ``snn.network.NetworkState`` at a window boundary."""
+    return ckpt.save(directory, step, _stream_tree(state), metadata=metadata)
+
+
+def restore_stream_state(directory: str, state_like, step: int | None = None):
+    """Restore a window-boundary checkpoint back into a ``NetworkState``.
+
+    ``state_like`` supplies the pytree structure (a freshly initialized or
+    current state).  Returns ``(state, manifest)``.
+    """
+    tree, manifest = ckpt.restore(directory, _stream_tree(state_like),
+                                  step=step)
+    return (type(state_like)(chips=tree["chips"], inflight=tree["inflight"]),
+            manifest)
+
+
+def run_supervised_stream(params, state, ext_drives, cfg, *,
+                          fabric, window: int, ckpt_dir: str,
+                          watchdog=None,
+                          on_recover: Callable | None = None,
+                          stall_probe: Callable | None = None,
+                          stream_kwargs: dict | None = None):
+    """Run ``snn.stream.run_stream`` in watchdog-supervised windows.
+
+    The drive sequence advances ``window`` steps at a time; each window's
+    starting state is checkpointed (``ckpt_dir``, step = start index) before
+    the window runs under the watchdog's deadline.  A fired watchdog marks
+    the window failed: its outputs are discarded, the boundary checkpoint is
+    restored, ``on_recover(window_index, plan)`` supplies the plan to resume
+    on (default: keep the current plan), and the window reruns on it — all
+    subsequent windows stay on the recovered plan.  The rerun happens inside
+    the watchdog's refractory period, mirroring the barrier's post-release
+    lockout (``core.sync``): a slow recovery step cannot cascade.
+
+    Args:
+      fabric: the (healthy) ``FabricPlan`` the stream starts on.
+      window: steps per supervised window (> 0; the last may be short).
+      watchdog: a ``runtime.watchdog.StepWatchdog``; default constructs one
+        with stock config (10 s minimum deadline — effectively disabled
+        unless the stream really stalls).
+      on_recover: plan supplier after a timeout — typically closes over the
+        fault diagnosis and returns
+        ``compile_fabric(degrade_spec(fabric.spec, dead_edges))``.
+      stall_probe: test/diagnostic hook called (with the window index) while
+        the watchdog is armed, *after* the window's outputs are ready — a
+        probe that blocks past the deadline simulates a stalled stream.
+      stream_kwargs: forwarded to every ``run_stream`` call (e.g.
+        ``timed=True``, ``use_fused=False``).
+
+    Returns:
+      ``(out, recoveries)`` — ``out`` is a ``StreamOut`` covering all steps
+      (windows concatenated on the time axis, final state from the last
+      window), ``recoveries`` a list of dicts describing each recovery
+      (window index, start step, plan summary).
+    """
+    from repro.runtime.watchdog import StepWatchdog
+    from repro.snn import stream as stlib
+
+    if window <= 0:
+        raise ValueError(f"window must be positive: {window}")
+    kwargs = dict(stream_kwargs or {})
+    wd = StepWatchdog() if watchdog is None else watchdog
+    n_steps = ext_drives.shape[0]
+    plan = fabric
+    recoveries: list[dict] = []
+    outs: list = []
+
+    def run_window(drives_w, st, pl):
+        out = stlib.run_stream(params, st, drives_w, cfg, fabric=pl, **kwargs)
+        jax.block_until_ready(out.spikes)
+        return out
+
+    for start in range(0, n_steps, window):
+        drives_w = ext_drives[start:start + window]
+        save_stream_state(ckpt_dir, start, state,
+                          metadata={"plan": plan.describe()})
+        fired_before = wd.timeouts
+        with wd:
+            out = run_window(drives_w, state, plan)
+            if stall_probe is not None:
+                stall_probe(start // window)
+        if wd.timeouts > fired_before:
+            # Timeout → recover: drop the window, restore its boundary
+            # checkpoint, resume on the (degraded) plan.  The rerun sits in
+            # the refractory period — the watchdog stays quiet.
+            state, _ = restore_stream_state(ckpt_dir, state, step=start)
+            if on_recover is not None:
+                plan = on_recover(start // window, plan)
+            recoveries.append({"window": start // window, "step": start,
+                               "plan": plan.describe()})
+            out = run_window(drives_w, state, plan)
+        state = out.state
+        outs.append(out)
+
+    merged = jax.tree.map(lambda *a: jnp.concatenate(a, axis=0),
+                          *[o._replace(state=None) for o in outs]) \
+        if len(outs) > 1 else outs[0]._replace(state=None)
+    return merged._replace(state=state), recoveries

@@ -6,6 +6,14 @@ steps get the same treatment: a deadline derived from an EMA of recent step
 times detects hangs/stragglers; recovery (checkpoint restore) is followed by
 a refractory window during which the watchdog will not fire again (so a slow
 post-restore step doesn't cascade).
+
+The semantics are deliberately *shared* with ``core.sync`` — timeout →
+release/recover → refractory lockout is one mechanism at two levels:
+in-graph cycles for the Aggregator barrier (``SyncConfig.timeout_cycles`` /
+``refractory_cycles``), host seconds here.  ``WatchdogConfig.from_sync``
+converts a barrier configuration into the equivalent host-side watchdog
+(cycles × the 8 ns system clock), and ``runtime.elastic.run_supervised_stream``
+wires the fired watchdog to checkpoint-restore onto a degraded fabric plan.
 """
 
 from __future__ import annotations
@@ -22,11 +30,27 @@ class WatchdogConfig:
     ema_alpha: float = 0.2
     refractory_s: float = 30.0       # suppress triggers after a recovery
 
+    @classmethod
+    def from_sync(cls, sync_cfg, *, clock_ns: float | None = None,
+                  deadline_factor: float = 5.0,
+                  ema_alpha: float = 0.2) -> "WatchdogConfig":
+        """Host-side twin of an Aggregator barrier config: the barrier's
+        cycle counts become wall-clock seconds at the system clock, keeping
+        the two recovery layers on one timeout/refractory policy."""
+        from repro.core.sync import SYSTEM_CLOCK_NS
+
+        ns = SYSTEM_CLOCK_NS if clock_ns is None else clock_ns
+        return cls(deadline_factor=deadline_factor,
+                   min_deadline_s=sync_cfg.timeout_cycles * ns * 1e-9,
+                   ema_alpha=ema_alpha,
+                   refractory_s=sync_cfg.refractory_cycles * ns * 1e-9)
+
 
 class StepWatchdog:
-    def __init__(self, cfg: WatchdogConfig = WatchdogConfig(),
-                 on_timeout=None):
-        self.cfg = cfg
+    def __init__(self, cfg: WatchdogConfig | None = None, on_timeout=None):
+        # Default constructed per instance — a shared module-level default
+        # would leak config mutations across unrelated watchdogs.
+        self.cfg = WatchdogConfig() if cfg is None else cfg
         self.on_timeout = on_timeout
         self.ema: float | None = None
         self._timer: threading.Timer | None = None

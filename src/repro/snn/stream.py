@@ -40,7 +40,7 @@ kernel behind the fused exchange is ``repro.kernels.spike_router``.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +68,12 @@ class StreamOut(NamedTuple):
     # ingress slots; padding slots carry 0.
     latency_ns: jax.Array      # i32[T, n_chips, batch, capacity | 0]
     latency_valid: jax.Array   # bool[T, n_chips, batch, capacity | 0]
+    # Degraded-mode accounting (zeros on a healthy fabric / in dense mode):
+    # per-step events lost to dead edges with no surviving route, and events
+    # delivered over an extension-lane detour (``ExchangeDrops`` attribution
+    # — subtree leaves for uplinks, destinations for downlinks).
+    unroutable: jax.Array      # i32[T, n_chips, batch]
+    rerouted: jax.Array        # i32[T, n_chips, batch]
 
 
 def stream_latency_stats(out: StreamOut) -> dict[str, float]:
@@ -104,7 +110,9 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                link_capacity: int | None = None,
                pod_capacity: int | None = None,
                fabric: "fablib.FabricPlan | None" = None,
-               timed: bool = False) -> StreamOut:
+               timed: bool = False,
+               faults: "Sequence[fablib.FaultEvent] | None" = None,
+               fault_mode: str = "mask") -> StreamOut:
     """Scan the full emulation pipeline over ``ext_drives``.
 
     Args:
@@ -141,11 +149,25 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         observables (spikes, dropped, uplink_dropped, state) are bit-exact
         with the untimed run.
 
+      faults: event mode only — a schedule of ``fabric.FaultEvent`` link
+        faults injected into the stream (each edge dies at ``kill_step``
+        and optionally restores).  The per-step rerouted / lost counts
+        surface in ``StreamOut.rerouted`` / ``StreamOut.unroutable``.
+      fault_mode: how the schedule degrades the datapath.  ``"mask"``
+        (default) drives dynamic health masks through the scan — one
+        compiled program, in-graph within-plan degradation, dead edges
+        lose their traffic as unroutable (no reroute).  ``"reroute"``
+        splits the run at the health-change boundaries
+        (``fabric.fault_boundaries``) and *recompiles* the plan per
+        constant-health segment, so dead uplinks detour through the spare
+        extension lanes where a healthy sibling has budget; the segments
+        chain bit-exactly (the carried state crosses untouched).
+
     Returns:
       ``StreamOut(state, spikes, dropped, uplink_dropped, latency_ns,
-      latency_valid)`` — bit-exact with the equivalent per-step loop
-      (``run_event_steps`` / ``step_dense`` iterated); the latency planes
-      are zero-width unless ``timed``.
+      latency_valid, unroutable, rerouted)`` — bit-exact with the
+      equivalent per-step loop (``run_event_steps`` / ``step_dense``
+      iterated); the latency planes are zero-width unless ``timed``.
     """
     if mode not in ("event", "dense"):
         raise ValueError(f"unknown mode: {mode!r}")
@@ -168,6 +190,11 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
     if timed and mode != "event":
         raise ValueError("timed streams require the event datapath (the "
                          "dense surrogate has no wire to time)")
+    if fault_mode not in ("mask", "reroute"):
+        raise ValueError(f"unknown fault_mode: {fault_mode!r}")
+    if faults is not None and mode != "event":
+        raise ValueError("fault injection requires the event datapath (the "
+                         "dense surrogate has no links to kill)")
     if fabric is not None:
         if mode != "event":
             raise ValueError("fabric plans run the event datapath only")
@@ -204,11 +231,7 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                 inter_enables=inter_enables, link_capacity=link_capacity,
                 pod_capacity=pod_capacity))
 
-    def exchange(frames):
-        return fablib.fabric_route_step(params.router, frames, plan,
-                                        use_fused=use_fused, timing=timing)
-
-    def event_route(spikes):
+    def event_route(spikes, plan_seg, health_t):
         """Egress tap → exchange → ingress decode, vmapped over batch."""
 
         def one_batch(spk_b):  # [n_chips, n_neurons]
@@ -218,7 +241,9 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
             times = jnp.zeros_like(labels_grid) if timed else None
             frames, egress_drop = make_frame(labels_grid, times, spk_b > 0.5,
                                              cfg.capacity)
-            ingress, drops = exchange(frames)
+            ingress, drops = fablib.fabric_route_step(
+                params.router, frames, plan_seg, use_fused=use_fused,
+                timing=timing, health=health_t)
             drives = jax.vmap(
                 lambda lab, val, rmap: chiplib.labels_to_rows(
                     lab[None], val[None], rmap, cfg.chip.n_rows)[0])(
@@ -229,38 +254,80 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                 lat = jnp.zeros((*ingress.valid.shape[:-1], 0), jnp.int32)
                 lat_valid = jnp.zeros(lat.shape, jnp.bool_)
             return (drives, egress_drop + drops.congestion, drops.uplink,
-                    lat, lat_valid)
+                    lat, lat_valid, drops.unroutable, drops.rerouted)
 
         return jax.vmap(one_batch, in_axes=1,
-                        out_axes=(1, 1, 1, 1, 1))(spikes)
+                        out_axes=(1, 1, 1, 1, 1, 1, 1))(spikes)
 
-    def body(carry, drive_t):
-        chips, inflight, t = carry
-        slot = jax.lax.rem(t, delay)
-        # Ingress: consume the delay-line slot written ``delay`` steps ago.
-        drive = drive_t + jax.lax.dynamic_index_in_dim(inflight, slot, 0,
-                                                       keepdims=False)
-        new_chips, spikes = jax.vmap(
-            lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
-                params.chips, chips, drive)
-        if mode == "dense":
-            routed = jnp.einsum("sbn,sdnr->dbr", spikes, route_mats)
-            dropped = jnp.zeros(spikes.shape[:2], jnp.int32)
-            uplink = dropped
-            lat = jnp.zeros((*spikes.shape[:2], 0), jnp.int32)
-            lat_valid = jnp.zeros(lat.shape, jnp.bool_)
-        else:
-            routed, dropped, uplink, lat, lat_valid = event_route(spikes)
-        # Egress: the consumed slot is exactly the one due ``delay`` steps
-        # out — overwrite it in place (double buffering, no shift copy).
-        inflight = jax.lax.dynamic_update_index_in_dim(inflight, routed,
-                                                       slot, 0)
-        return ((new_chips, inflight, t + 1),
-                (spikes, dropped, uplink, lat, lat_valid))
+    def make_body(plan_seg):
+        """Scan body over ``(drive_t, health_t)`` for one constant-plan
+        segment (``health_t`` is ``None`` without a mask schedule)."""
 
-    (chips, inflight, _), (spikes, dropped, uplink, lat, lat_valid) = \
-        jax.lax.scan(body, (state.chips, state.inflight, jnp.int32(0)),
-                     ext_drives)
+        def body(carry, xs):
+            drive_t, health_t = xs
+            chips, inflight, t = carry
+            slot = jax.lax.rem(t, delay)
+            # Ingress: consume the delay-line slot written ``delay`` steps
+            # ago.
+            drive = drive_t + jax.lax.dynamic_index_in_dim(inflight, slot, 0,
+                                                           keepdims=False)
+            new_chips, spikes = jax.vmap(
+                lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
+                    params.chips, chips, drive)
+            if mode == "dense":
+                routed = jnp.einsum("sbn,sdnr->dbr", spikes, route_mats)
+                dropped = jnp.zeros(spikes.shape[:2], jnp.int32)
+                uplink = unroutable = rerouted = dropped
+                lat = jnp.zeros((*spikes.shape[:2], 0), jnp.int32)
+                lat_valid = jnp.zeros(lat.shape, jnp.bool_)
+            else:
+                (routed, dropped, uplink, lat, lat_valid, unroutable,
+                 rerouted) = event_route(spikes, plan_seg, health_t)
+            # Egress: the consumed slot is exactly the one due ``delay``
+            # steps out — overwrite it in place (double buffering, no shift
+            # copy).
+            inflight = jax.lax.dynamic_update_index_in_dim(inflight, routed,
+                                                           slot, 0)
+            return ((new_chips, inflight, t + 1),
+                    (spikes, dropped, uplink, lat, lat_valid, unroutable,
+                     rerouted))
+
+        return body
+
+    # Fault schedule → constant-plan segments.  Mask mode scans dynamic
+    # health masks through one program; reroute mode recompiles the plan at
+    # each health-change boundary and chains the scans (the carried state —
+    # chip states, delay line, step counter — crosses segments untouched, so
+    # the chain is bit-exact with a single scan of the same per-step plans).
+    sched = None
+    if mode != "event":
+        segments = [(0, n_steps, None)]
+    elif faults and fault_mode == "reroute":
+        starts = fablib.fault_boundaries(faults, n_steps)
+        segments = []
+        for k, s in enumerate(starts):
+            end = starts[k + 1] if k + 1 < len(starts) else n_steps
+            dead = fablib.dead_edges_at(faults, s)
+            plan_seg = (fablib.compile_fabric(
+                fablib.degrade_spec(plan.spec, dead)) if dead else plan)
+            segments.append((s, end, plan_seg))
+    else:
+        if faults:
+            sched = fablib.health_schedule(plan, faults, n_steps)
+        segments = [(0, n_steps, plan)]
+
+    carry = (state.chips, state.inflight, jnp.int32(0))
+    ys_parts = []
+    for start, end, plan_seg in segments:
+        h = (None if sched is None else
+             jax.tree.map(lambda a: a[start:end], sched))
+        carry, ys = jax.lax.scan(make_body(plan_seg), carry,
+                                 (ext_drives[start:end], h))
+        ys_parts.append(ys)
+    chips, inflight, _ = carry
+    (spikes, dropped, uplink, lat, lat_valid, unroutable, rerouted) = (
+        ys_parts[0] if len(ys_parts) == 1
+        else jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *ys_parts))
     # Restore shift-register order so the final state is bit-exact with the
     # per-step path (slot ``t % delay`` was written last).
     if delay > 1 and n_steps % delay:
@@ -268,4 +335,5 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
     return StreamOut(state=netlib.NetworkState(chips=chips,
                                                inflight=inflight),
                      spikes=spikes, dropped=dropped, uplink_dropped=uplink,
-                     latency_ns=lat, latency_valid=lat_valid)
+                     latency_ns=lat, latency_valid=lat_valid,
+                     unroutable=unroutable, rerouted=rerouted)

@@ -250,6 +250,57 @@ def test_three_level_fabric_stacked_matches_shard_map():
     assert "FABRIC3_MATCH True" in out
 
 
+def test_degraded_fabric_shard_map_matches_stacked():
+    """Degraded-mesh parity (ISSUE 6): the shard_map'd exchange on a plan
+    with a dead (detoured) uplink, a reroute-exhausted group, a dead
+    downlink, and a dynamic health overlay is bit-exact with the stacked
+    executor on every observable — labels, valid, timestamps, and all four
+    drop fields (unroutable/rerouted attribution included)."""
+    out = _run("""
+        from repro.core import (FabricHealth, FabricInterconnect, FabricSpec,
+                                LevelSpec, compile_fabric, degrade_spec,
+                                fabric_route_step, identity_router,
+                                make_frame, timed_wire)
+        from repro.parallel.sharding import fabric_mesh
+        w = timed_wire()
+        spec = FabricSpec(levels=(LevelSpec(2), LevelSpec(2),
+                                  LevelSpec(2, extension=True)), capacity=24)
+        st = identity_router(8)
+        key = jax.random.key(17)
+        labels = jax.random.randint(key, (8, 12), 0, 2**15)
+        valid = jax.random.uniform(jax.random.fold_in(key, 1), (8, 12)) < 0.6
+        frames, _ = make_frame(labels, jnp.zeros_like(labels), valid, 12)
+        up = [None] * 3
+        up[1] = jnp.array([True, False, True, True])
+        overlay = FabricHealth(uplink=tuple(up), downlink=(None,) * 3)
+        cases = [
+            (compile_fabric(degrade_spec(spec, [(1, 0)])), None),   # detour
+            (compile_fabric(degrade_spec(spec, [(1, 0), (1, 1)])),  # exhausted
+             None),
+            (compile_fabric(degrade_spec(spec, [(1, 2),             # mixed
+                                                (0, 3, "downlink")])), None),
+            (compile_fabric(spec), overlay),                        # dynamic
+        ]
+        ok = True
+        for plan, health in cases:
+            mesh = fabric_mesh(plan)
+            ic = FabricInterconnect(mesh=mesh, plan=plan, timing=w,
+                                    health=health)
+            out_f, d_f = ic.exchange_fn()(frames, st.fwd_tables,
+                                          st.rev_tables)
+            ref, d_r = fabric_route_step(st, frames, plan, timing=w,
+                                         health=health)
+            ok &= bool(jnp.array_equal(out_f.labels, ref.labels))
+            ok &= bool(jnp.array_equal(out_f.valid, ref.valid))
+            ok &= bool(jnp.array_equal(out_f.times, ref.times))
+            for fld in ("congestion", "uplink", "unroutable", "rerouted"):
+                ok &= bool(jnp.array_equal(getattr(d_f, fld),
+                                           getattr(d_r, fld)))
+        print("DEGRADED_MATCH", ok)
+    """)
+    assert "DEGRADED_MATCH True" in out
+
+
 def test_sharded_train_step_matches_single_device():
     """The FSDP×TP-sharded train loss equals the unsharded one."""
     out = _run("""

@@ -1,0 +1,134 @@
+"""Direct tier-1 coverage for ``runtime.watchdog`` (ISSUE 6).
+
+The watchdog is the host-side twin of the Aggregator barrier's timeout →
+recover → refractory cycle (``core.sync``); these tests pin the deadline
+arithmetic, the firing/suppression behavior, EMA seeding, the per-instance
+config default, and the ``from_sync`` conversion that keeps the two layers
+on one policy.
+"""
+
+import time
+
+import pytest
+
+from repro.core.sync import SYSTEM_CLOCK_NS, SyncConfig
+from repro.runtime.watchdog import StepWatchdog, WatchdogConfig
+
+
+# ---------------------------------------------------------------------------
+# config construction
+# ---------------------------------------------------------------------------
+
+
+def test_default_config_is_per_instance():
+    """Regression: a shared mutable default config would leak mutations
+    between unrelated watchdogs."""
+    a, b = StepWatchdog(), StepWatchdog()
+    assert a.cfg is not b.cfg
+    a.cfg.min_deadline_s = 0.001
+    assert b.cfg.min_deadline_s == WatchdogConfig().min_deadline_s
+
+
+def test_explicit_config_is_used_verbatim():
+    cfg = WatchdogConfig(min_deadline_s=1.25)
+    wd = StepWatchdog(cfg)
+    assert wd.cfg is cfg
+    assert wd.deadline_s == 1.25
+
+
+def test_from_sync_converts_cycles_to_seconds():
+    """Barrier cycles × the 8 ns system clock = host seconds: the stock
+    SyncConfig (1 s timeout at 125 MHz, 100 µs refractory) round-trips."""
+    sync = SyncConfig()
+    cfg = WatchdogConfig.from_sync(sync)
+    assert cfg.min_deadline_s == pytest.approx(
+        sync.timeout_cycles * SYSTEM_CLOCK_NS * 1e-9)
+    assert cfg.min_deadline_s == pytest.approx(1.0)
+    assert cfg.refractory_s == pytest.approx(
+        sync.refractory_cycles * SYSTEM_CLOCK_NS * 1e-9)
+    assert cfg.refractory_s == pytest.approx(100e-6)
+    # Overridable clock for faster links.
+    fast = WatchdogConfig.from_sync(sync, clock_ns=4.0)
+    assert fast.min_deadline_s == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# deadline-from-EMA arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_floor_before_any_observation():
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=3.0, min_deadline_s=2.0))
+    assert wd.ema is None
+    assert wd.deadline_s == 2.0
+
+
+def test_deadline_tracks_ema_above_floor():
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=3.0, min_deadline_s=0.1,
+                                     ema_alpha=0.5))
+    wd.observe(1.0)                       # seed: ema = 1.0
+    assert wd.ema == pytest.approx(1.0)
+    assert wd.deadline_s == pytest.approx(3.0)
+    wd.observe(2.0)                       # ema = 0.5·1.0 + 0.5·2.0 = 1.5
+    assert wd.ema == pytest.approx(1.5)
+    assert wd.deadline_s == pytest.approx(4.5)
+
+
+def test_deadline_floor_dominates_small_ema():
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=2.0, min_deadline_s=5.0))
+    wd.observe(0.01)
+    assert wd.deadline_s == 5.0
+
+
+def test_context_exit_feeds_ema():
+    wd = StepWatchdog(WatchdogConfig(min_deadline_s=10.0, ema_alpha=1.0))
+    with wd:
+        time.sleep(0.02)
+    assert wd.ema is not None and wd.ema >= 0.02
+    assert wd.timeouts == 0               # well under the deadline
+
+
+# ---------------------------------------------------------------------------
+# firing + refractory
+# ---------------------------------------------------------------------------
+
+
+def test_timeout_fires_callback_and_counts():
+    fired = []
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=1.0, min_deadline_s=0.05,
+                                     ema_alpha=1.0, refractory_s=10.0),
+                      on_timeout=lambda: fired.append(True))
+    with wd:
+        time.sleep(0.15)
+    assert fired == [True]
+    assert wd.timeouts == 1
+
+
+def test_refractory_suppresses_second_fire():
+    fired = []
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=1.0, min_deadline_s=0.05,
+                                     ema_alpha=1.0, refractory_s=10.0),
+                      on_timeout=lambda: fired.append(True))
+    with wd:
+        time.sleep(0.15)
+    with wd:
+        time.sleep(0.12)                  # would fire, but refractory
+    assert len(fired) == 1 and wd.timeouts == 1
+
+
+def test_fires_again_after_refractory_expires():
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=1.0, min_deadline_s=0.04,
+                                     ema_alpha=1.0, refractory_s=0.0))
+    with wd:
+        time.sleep(0.12)
+    # ema is now ~0.12 → deadline = 0.12; exceed it again.
+    with wd:
+        time.sleep(0.3)
+    assert wd.timeouts == 2
+
+
+def test_no_fire_within_deadline():
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=1.0, min_deadline_s=5.0))
+    with wd:
+        time.sleep(0.01)
+    assert wd.timeouts == 0
