@@ -58,22 +58,19 @@ import jax.numpy as jnp
 from repro.core import fabric as fablib
 from repro.core import identity_router, make_frame, timed_wire
 from repro.core.events import EventFrame
-from repro.core.fabric import FabricSpec, LevelSpec, compile_fabric
+from repro.core.fabric import compile_fabric
 from repro.kernels.spike_router.ops import fused_exchange_stream
+
+# The scenario catalogue (shapes, occupancies, uplink sizing, degraded
+# variants) is shared with the fabric verifier — every plan timed here is
+# statically linted by `python -m repro.analysis.lint` in CI.
+from repro.analysis.scenarios import (CASES, OCC_HEADLINE, OCC_SWEEP,
+                                      level_caps as _level_caps,
+                                      plan_for as _plan_for)
 
 BENCH_JSON = os.environ.get("BENCH_INTERCONNECT_JSON",
                             "BENCH_interconnect.json")
 N_STEPS = 64
-OCC_HEADLINE = 0.05                 # §IV paper-typical frame occupancy
-OCC_SWEEP = (0.02, 0.10, 0.50)
-
-# (name, per-level fan-ins leaf-first, cap_in, ingress capacity).  The leaf
-# order is top-major (chip k lives in backplane k//12, case k//24, ...).
-CASES = (
-    ("FULL_BACKPLANE", (12,), 64, 256),
-    ("PROJECTED_120CHIP", (12, 10), 32, 128),
-    ("EXT_4CASE_96CHIP", (12, 2, 4), 24, 96),
-)
 
 
 def _merge_bench_json(updates, path=BENCH_JSON):
@@ -95,37 +92,6 @@ def _frames_for(n_nodes: int, cap_in: int, n_steps: int, key,
                                (n_steps, n_nodes, cap_in)) < occupancy
     frames, _ = make_frame(labels, None, valid, cap_in)
     return frames
-
-
-def _level_caps(fan_ins, cap_in: int, occupancy: float):
-    """Per-level compact-before-gather capacities with 2-4x headroom (the
-    hardware provisions each uplink for the spike-rate budget, not the worst
-    case); at high occupancy they saturate at the raw stream sizes.  The
-    1-level star keeps its dense lanes (no uplink stage), matching the
-    pre-fabric benchmark."""
-    if len(fan_ins) == 1:
-        return (None,)
-    lane = min(cap_in, max(4, 4 * math.ceil(cap_in * occupancy)))
-    caps = [lane]
-    raw = lane
-    leaves = 1
-    for f in fan_ins[:-1]:
-        leaves *= f
-        raw = raw * f
-        caps.append(min(raw, max(8, 2 * math.ceil(leaves * cap_in
-                                                  * occupancy))))
-        raw = caps[-1]
-    return tuple(caps)
-
-
-def _plan_for(fan_ins, cap: int, level_caps) -> "fablib.FabricPlan":
-    """Compile the topology's hop-graph plan (top level rides the extension
-    lanes on 3+-level fabrics)."""
-    levels = tuple(
-        LevelSpec(fan_in=f, link_capacity=c,
-                  extension=(len(fan_ins) > 2 and i == len(fan_ins) - 1))
-        for i, (f, c) in enumerate(zip(fan_ins, level_caps)))
-    return compile_fabric(FabricSpec(levels=levels, capacity=cap))
 
 
 def _time_loop(step_fn, frames, n_steps, trials=3):
@@ -383,11 +349,7 @@ def run_timed(verbose: bool = True, n_steps: int = N_STEPS):
 # deliver the healthy plan's exact label/valid set, and the exhausted plan
 # must lose exactly the dead subtree's traffic to ``unroutable``.
 
-DEGRADED_VARIANTS = (
-    ("healthy", ()),
-    ("1dead_uplink", ((1, 0),)),             # backplane 0 → detour via 1
-    ("exhausted", ((1, 0), (1, 1))),         # both case-0 uplinks dead
-)
+from repro.analysis.scenarios import DEGRADED_VARIANTS  # shared with lint
 
 
 def run_degraded(verbose: bool = True, n_steps: int = N_STEPS):

@@ -16,6 +16,11 @@ if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
   exit 1
 fi
 
+echo "=== fabric static analysis ==="
+# Plan + jaxpr + kernel passes over every benchmark scenario (<60 s); the
+# optimized-HLO audit (--hlo) stays in the full CI job.
+python -m repro.analysis.lint -q
+
 echo "=== degraded-mode battery (health, detours, watchdog recovery) ==="
 python -m pytest -q tests/test_degraded.py tests/test_watchdog.py
 
@@ -24,6 +29,9 @@ python -m pytest -q -m "not slow"
 
 echo "=== full tier-1 suite ==="
 python -m pytest -x -q
+
+echo "=== fabric static analysis (full: optimized-HLO collective audit) ==="
+python -m repro.analysis.lint -q --hlo
 
 echo "=== streaming benchmarks (3-level fabric + timed lane + degraded mode) ==="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed --only stream_degraded

@@ -20,10 +20,19 @@ _DTYPE_BYTES = {
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
 
-# e.g.  %all-gather.3 = bf16[8,512,1024] all-gather(%param.1), ...
+# e.g.  %all-gather.3 = bf16[8,512,1024]{2,1,0} all-gather(%param.1), ...
+# Two shapes the original pattern missed, both undercounting to zero:
+# optimized HLO suffixes every shape with a layout annotation (``{2,1,0}``),
+# and the overlapping optimizer splits collectives into async
+# ``-start``/``-done`` pairs.  Each pair is counted once, on the ``-start``
+# op (whose tuple output carries the in-flight operand *and* the
+# destination buffer — only the largest element is the wire payload); the
+# matching ``-done`` is skipped via the trailing lookahead so the pair is
+# never double-counted.
 _OP_RE = re.compile(
-    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\])\s*"
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\](?:\{[^}]*\})?)\s*"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?(?![\w-])"
 )
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
@@ -41,10 +50,13 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     out: dict[str, int] = defaultdict(int)
     counts: dict[str, int] = defaultdict(int)
     for m in _OP_RE.finditer(hlo_text):
-        tuple_body, dtype, dims, kind = m.groups()
+        tuple_body, dtype, dims, kind, started = m.groups()
         if tuple_body is not None:
-            nbytes = sum(_shape_bytes(dt, dm)
-                         for dt, dm in _SHAPE_RE.findall(tuple_body))
+            sizes = [_shape_bytes(dt, dm)
+                     for dt, dm in _SHAPE_RE.findall(tuple_body)]
+            # -start tuples bundle (operand, destination) buffers of one
+            # transfer; the destination (largest) is the wire payload.
+            nbytes = max(sizes, default=0) if started else sum(sizes)
         else:
             nbytes = _shape_bytes(dtype, dims)
         out[kind] += nbytes

@@ -1,0 +1,131 @@
+"""Fabric verifier CLI: ``python -m repro.analysis.lint``.
+
+Runs every static pass over every benchmark scenario (healthy and
+degraded):
+
+  * plan verifier   (``planlint``)    — invariants on each compiled plan;
+  * program lint    (``jaxprlint``)   — jaxpr weight-class checks on
+    ``fabric_route_step``, ``fabric_exchange`` (shrunk twins on 8 virtual
+    CPU devices) and ``run_stream``;
+  * kernel checker  (``kernelcheck``) — pack-unit write-set model check at
+    every plan capacity + Pallas grid tilings of the router kernels;
+  * suppression lint — stale/undocumented waivers fail the run.
+
+``--hlo`` adds the optimized-HLO pass (compiles the exchange and audits
+collective bytes against the plan budget via ``analysis.hlo``) — slower,
+run by the full CI job only; the default set is the <60 s fast-CI stage.
+Exit status 0 iff no error-severity finding survives suppression.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# fabric_exchange lints need one device per (shrunk) leaf; must be set
+# before jax initializes.  Respect an explicit user XLA_FLAGS.
+if "jax" not in sys.modules:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+from repro.analysis import hlo as hlolib
+from repro.analysis import jaxprlint, kernelcheck, planlint
+from repro.analysis.diagnostics import (Diagnostic, WARNING,
+                                        apply_suppressions)
+from repro.analysis.scenarios import benchmark_plans
+from repro.analysis.suppressions import SUPPRESSIONS
+
+
+def _hlo_pass(scenario) -> list[Diagnostic]:
+    """Compile the (shrunk) exchange and audit its optimized HLO: the
+    all-gather bytes on the wire must stay within the plan-derived budget
+    (2x slack for layout padding) — and must be *visible* at all, which is
+    what the async ``all-gather-start`` regex fix protects."""
+    import jax
+
+    twin, cap_small = jaxprlint.shrink_plan(scenario.plan, scenario.cap_in)
+    if len(jax.devices()) < twin.n_nodes:
+        return [Diagnostic(
+            "program.devices", f"{scenario.name}/hlo",
+            f"skipped HLO pass: {twin.n_nodes} devices needed", WARNING)]
+    _, (fn, args) = jaxprlint.trace_fabric_exchange(twin, cap_small)
+    text = fn.lower(*args).compile().as_text()
+    per = hlolib.collective_bytes(text)
+    measured = per.get("all-gather", 0)
+    budget = (jaxprlint.gather_budget_bytes(twin, cap_small)
+              * twin.n_nodes)                     # whole-program, all shards
+    diags = []
+    if measured == 0:
+        diags.append(Diagnostic(
+            "program.collective-budget", f"{scenario.name}/hlo",
+            "no all-gather bytes visible in the optimized HLO — either "
+            "the exchange lost its collectives or the parser missed an "
+            "async variant", WARNING))
+    elif measured > 2 * budget:
+        diags.append(Diagnostic(
+            "program.collective-budget", f"{scenario.name}/hlo",
+            f"optimized HLO moves {measured} all-gather bytes but the "
+            f"plan budgets {budget} ({2 * budget} with layout slack)"))
+    return diags
+
+
+def run_lint(hlo: bool = False, verbose: bool = False) -> list[Diagnostic]:
+    """All passes over all scenarios; returns raw (unsuppressed) findings."""
+    diags: list[Diagnostic] = []
+    capacities: set[int] = set()
+    exchange_seen: set[str] = set()
+    for sc in benchmark_plans():
+        if verbose:
+            print(f"lint: {sc.name}: {sc.plan.describe()}", file=sys.stderr)
+        diags += planlint.lint_plan(sc.plan, sc.cap_in, sc.name)
+        diags += jaxprlint.lint_route_step(
+            sc.plan, sc.cap_in, f"{sc.name}/fabric_route_step")
+        # One shrunk-twin exchange lint per health signature (the twin only
+        # depends on the level structure + which levels carry dead edges).
+        sig = (sc.name.split("/")[0],
+               tuple((lvl.uplink_ok is not None, lvl.downlink_ok is not None)
+                     for lvl in sc.plan.levels))
+        if str(sig) not in exchange_seen:
+            exchange_seen.add(str(sig))
+            diags += jaxprlint.lint_fabric_exchange(
+                sc.plan, sc.cap_in, f"{sc.name}/fabric_exchange")
+            if hlo:
+                diags += _hlo_pass(sc)
+        capacities.add(sc.plan.capacity)
+        capacities.update(lvl.link_capacity for lvl in sc.plan.levels
+                          if lvl.link_capacity is not None)
+    diags += jaxprlint.lint_run_stream("run_stream")
+    diags += kernelcheck.check_pack_units(capacities)
+    diags += kernelcheck.check_router_kernels()
+    return diags
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Static invariant checks on fabric plans, compiled "
+                    "programs and Pallas pack units.")
+    parser.add_argument("--hlo", action="store_true",
+                        help="also audit optimized-HLO collective bytes "
+                             "(slower; full CI job)")
+    parser.add_argument("-q", "--quiet", action="store_true",
+                        help="suppress the per-scenario progress lines")
+    args = parser.parse_args(argv)
+
+    findings = run_lint(hlo=args.hlo, verbose=not args.quiet)
+    active, suppressed = apply_suppressions(findings, SUPPRESSIONS)
+    errors = [d for d in active if d.severity != WARNING]
+    for d in active:
+        print(d.format())
+    n_checks = len({d.check for d in findings}) if findings else 0
+    print(f"fabric lint: {len(errors)} error(s), "
+          f"{len(active) - len(errors)} warning(s), "
+          f"{len(suppressed)} suppressed"
+          + (f" across {n_checks} failing check(s)" if n_checks else ""))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

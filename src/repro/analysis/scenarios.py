@@ -1,0 +1,99 @@
+"""Canonical fabric scenarios shared by benchmarks and the verifier.
+
+One source of truth for the paper's deployment shapes — the benchmark
+driver (``benchmarks/exchange_stream.py``) times them, the fabric verifier
+(``repro.analysis.lint``) proves invariants on every one of them in CI.
+Moving the catalogue here means a new scenario added for benchmarking is
+automatically linted, and a plan the linter rejects can never be the one
+the paper numbers were measured on.
+
+  * ``FULL_BACKPLANE``   — 12 chips, one star (the deployed system, §IV);
+  * ``PROJECTED_120CHIP``— 10 backplanes x 12 chips, two-layer (§V);
+  * ``EXT_4CASE_96CHIP`` — 12 chips x 2 backplanes x 4 cases chained over
+    the Aggregator's 4 extension lanes, a 3-level plan (ISSUE 5), plus its
+    degraded variants (ISSUE 6: one detoured dead uplink / reroute-
+    exhausted).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterator, NamedTuple
+
+from repro.core import fabric as fablib
+from repro.core.fabric import FabricPlan, FabricSpec, LevelSpec, compile_fabric
+
+OCC_HEADLINE = 0.05                 # §IV paper-typical frame occupancy
+OCC_SWEEP = (0.02, 0.10, 0.50)
+
+# (name, per-level fan-ins leaf-first, cap_in, ingress capacity).  The leaf
+# order is top-major (chip k lives in backplane k//12, case k//24, ...).
+CASES = (
+    ("FULL_BACKPLANE", (12,), 64, 256),
+    ("PROJECTED_120CHIP", (12, 10), 32, 128),
+    ("EXT_4CASE_96CHIP", (12, 2, 4), 24, 96),
+)
+
+# Health states of the 3-level extension fabric (ISSUE 6): (variant name,
+# dead (level, edge) pairs fed to ``fabric.degrade_spec``).
+DEGRADED_VARIANTS = (
+    ("healthy", ()),
+    ("1dead_uplink", ((1, 0),)),             # backplane 0 → detour via 1
+    ("exhausted", ((1, 0), (1, 1))),         # both case-0 uplinks dead
+)
+
+
+def level_caps(fan_ins, cap_in: int, occupancy: float):
+    """Per-level compact-before-gather capacities with 2-4x headroom (the
+    hardware provisions each uplink for the spike-rate budget, not the worst
+    case); at high occupancy they saturate at the raw stream sizes.  The
+    1-level star keeps its dense lanes (no uplink stage), matching the
+    pre-fabric benchmark."""
+    if len(fan_ins) == 1:
+        return (None,)
+    lane = min(cap_in, max(4, 4 * math.ceil(cap_in * occupancy)))
+    caps = [lane]
+    raw = lane
+    leaves = 1
+    for f in fan_ins[:-1]:
+        leaves *= f
+        raw = raw * f
+        caps.append(min(raw, max(8, 2 * math.ceil(leaves * cap_in
+                                                  * occupancy))))
+        raw = caps[-1]
+    return tuple(caps)
+
+
+def plan_for(fan_ins, cap: int, caps) -> FabricPlan:
+    """Compile the topology's hop-graph plan (top level rides the extension
+    lanes on 3+-level fabrics)."""
+    levels = tuple(
+        LevelSpec(fan_in=f, link_capacity=c,
+                  extension=(len(fan_ins) > 2 and i == len(fan_ins) - 1))
+        for i, (f, c) in enumerate(zip(fan_ins, caps)))
+    return compile_fabric(FabricSpec(levels=levels, capacity=cap))
+
+
+class Scenario(NamedTuple):
+    """One lintable deployment: a compiled plan plus its egress frame width."""
+
+    name: str          # e.g. "EXT_4CASE_96CHIP/1dead_uplink"
+    plan: FabricPlan
+    cap_in: int
+
+
+def benchmark_plans(occupancy: float = OCC_HEADLINE) -> Iterator[Scenario]:
+    """Every plan the benchmarks drive at the given occupancy: the three
+    deployment shapes, plus the degraded health states of the 3-level
+    extension fabric (the only scenario ``run_degraded`` exercises)."""
+    for name, fan_ins, cap_in, cap in CASES:
+        healthy = plan_for(fan_ins, cap, level_caps(fan_ins, cap_in,
+                                                    occupancy))
+        yield Scenario(name, healthy, cap_in)
+        if len(fan_ins) != 3:
+            continue
+        for variant, dead in DEGRADED_VARIANTS:
+            if not dead:
+                continue           # "healthy" already yielded under the name
+            plan = compile_fabric(fablib.degrade_spec(healthy.spec, dead))
+            yield Scenario(f"{name}/{variant}", plan, cap_in)

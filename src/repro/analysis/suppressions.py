@@ -1,0 +1,15 @@
+"""In-repo waiver list of the fabric verifier.
+
+Add a ``Suppression(check=..., path_prefix=..., reason=...)`` here when a
+check must be waived — e.g. a known-benign widening while a wire-format
+migration is in flight.  Keep the reason honest: it is the review record.
+Stale entries (matching no current finding) and entries without a reason
+fail ``python -m repro.analysis.lint`` — waivers cannot outlive their
+defect.  See README "Verification layer".
+"""
+
+from __future__ import annotations
+
+from repro.analysis.diagnostics import Suppression
+
+SUPPRESSIONS: tuple[Suppression, ...] = ()

@@ -272,6 +272,15 @@ class LevelPlan:
     def degraded(self) -> bool:
         return self.uplink_ok is not None or self.downlink_ok is not None
 
+    def detour_counts(self) -> np.ndarray | None:
+        """Detours hosted per uplink edge (index = the *host* edge) — the
+        static-analysis view of the extension-lane budget: every entry must
+        stay ≤ ``interconnect.EXTENSION_LANES``.  ``None`` when healthy."""
+        if self.detour is None:
+            return None
+        hosts = self.detour[self.detour >= 0]
+        return np.bincount(hosts, minlength=self.detour.shape[0])
+
 
 @dataclasses.dataclass(frozen=True)
 class FabricPlan:
@@ -314,6 +323,56 @@ class FabricPlan:
             out.append(self.n_nodes // gsize)
             gsize *= lvl.fan_in
         return tuple(out)
+
+    # -- introspection hooks (the static-analysis surface, repro.analysis) --
+    #
+    # These expose the hop graph's *addressing* — which entity a leaf is at
+    # each tier, through which level a (src, dst) pair's traffic travels,
+    # and what the route-enable gate says there — as plain numpy, so the
+    # fabric verifier (analysis/planlint.py) can type every pair's delivery
+    # without re-deriving the executors' index arithmetic.
+
+    @property
+    def group_sizes(self) -> tuple[int, ...]:
+        """Leaves per tier-``i`` entity feeding level ``i``'s merge (tier 0 =
+        leaf): ``(1, f0, f0·f1, ...)``, one entry per level."""
+        out, g = [], 1
+        for lvl in self.levels:
+            out.append(g)
+            g *= lvl.fan_in
+        return tuple(out)
+
+    def leaf_entities(self, level: int) -> np.ndarray:
+        """int[n_nodes]: each leaf's tier-``level`` entity index — the global
+        uplink/downlink edge its traffic crosses into that level's merge."""
+        return np.arange(self.n_nodes) // self.group_sizes[level]
+
+    def delivery_levels(self) -> np.ndarray:
+        """int32[n, n]: the unique hop-graph level through which ``src``'s
+        stream joins ``dst``'s merge — the lowest level whose joining node
+        covers both leaves (health and gating not applied)."""
+        n = self.n_nodes
+        out = np.full((n, n), -1, np.int32)
+        leaf = np.arange(n)
+        for i in reversed(range(self.n_levels)):
+            anc = leaf // (self.group_sizes[i] * self.levels[i].fan_in)
+            same = anc[:, None] == anc[None, :]
+            out = np.where(same, np.int32(i), out)
+        return out
+
+    def level_gate(self, level: int) -> np.ndarray:
+        """bool[n, n]: the route-enable gate the executors apply to (src,
+        dst) pairs whose traffic merges at ``level`` —
+        ``enables[src_child, dst_child]`` plus the structural own-subtree
+        exclusion above level 0.  Only meaningful where
+        ``delivery_levels() == level``."""
+        lvl = self.levels[level]
+        child = self.leaf_entities(level) % lvl.fan_in
+        en = np.asarray(lvl.enables)
+        gate = en[np.ix_(child, child)]
+        if level > 0:
+            gate = gate & (child[:, None] != child[None, :])
+        return gate
 
     def merge_layout(self, cap_in: int) -> tuple[tuple[int, ...], ...]:
         """Per-level merge segment lengths for egress frames of ``cap_in``."""

@@ -89,7 +89,7 @@ def linear_scan_chunked(q, k, v, w, u=None, *, mode: str = "inclusive",
         expo = beta[:, :, :, None, :] - b[:, :, None, :, :]   # [B,H,C,C,K]
         a = jnp.einsum("bhtk,bhsk,bhtsk->bhts", qc, kc,
                        jnp.exp(jnp.minimum(expo, 0.0)))
-        a = a * mask
+        a = jnp.where(mask, a, 0.0)
         y = y + jnp.einsum("bhts,bhsv->bhtv", a, vc)
         if strict:
             diag = jnp.einsum("bhck,hk,bhck->bhc", qc, u, kc)

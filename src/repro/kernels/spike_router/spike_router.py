@@ -80,6 +80,35 @@ from repro.core.routing import (CHIP_LABEL_MASK as CHIP_MASK,
                                 REV_TABLE_SIZE, WIRE_LABEL_MASK as WIRE_MASK)
 
 
+def _pack_indices(ok: jax.Array, capacity: int):
+    """Scatter index map of the global pack unit: exclusive-prefix-sum ranks
+    bounded by ``capacity``, rejected events parked in overflow slot
+    ``capacity`` (sliced away by the caller).  Returns ``(idx, keep)``.
+
+    This is the *write-set* of the cumsum-scatter — factored out so the
+    static kernel checker (``repro.analysis.kernelcheck``) can prove
+    in-bounds/disjointness on the exact index arithmetic the kernels run.
+    """
+    pos = jnp.cumsum(ok) - ok                    # exclusive prefix sum
+    keep = (ok == 1) & (pos < capacity)
+    return jnp.where(keep, pos, capacity), keep
+
+
+def _pack_segmented_indices(ok: jax.Array, capacity: int):
+    """Scatter index map of the segmented pack unit (``ok``: [n_seg,
+    seg_len]): per-segment exclusive ranks + an exclusive scan over segment
+    totals for the base offsets — ``base[seg] + within`` is exactly the
+    global arrival rank.  Returns ``(idx, keep)`` on the flattened stream,
+    overflow parked in slot ``capacity`` as in ``_pack_indices``."""
+    counts = jnp.sum(ok, axis=-1)                # [n_seg] per-segment totals
+    base = jnp.cumsum(counts) - counts           # exclusive scan, S elements
+    within = jnp.cumsum(ok, axis=-1) - ok        # per-segment exclusive ranks
+    pos = (base[:, None] + within).reshape(-1)
+    okf = ok.reshape(-1)
+    keep = (okf == 1) & (pos < capacity)
+    return jnp.where(keep, pos, capacity), keep
+
+
 def _pack(ok: jax.Array, payload: jax.Array, capacity: int,
           payload2: jax.Array | None = None):
     """The global pack unit: cumsum-compact ``payload`` where ``ok``, bounded
@@ -87,10 +116,8 @@ def _pack(ok: jax.Array, payload: jax.Array, capacity: int,
     [capacity], dropped scalar); with ``payload2`` (the timed datapath's
     timestamp lane) a fourth array rides the same scatter:
     (packed_payload, packed_payload2, packed_valid, dropped)."""
-    pos = jnp.cumsum(ok) - ok                    # exclusive prefix sum
-    keep = (ok == 1) & (pos < capacity)
     # Park rejected events in an overflow slot, then slice it away.
-    idx = jnp.where(keep, pos, capacity)
+    idx, keep = _pack_indices(ok, capacity)
     out_p = jnp.zeros((capacity + 1,), jnp.int32).at[idx].set(
         jnp.where(keep, payload, 0))
     out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(
@@ -118,13 +145,8 @@ def _pack_segmented(ok: jax.Array, payload: jax.Array, capacity: int,
     with ``payload2`` the timestamp lane rides the same scatter, as in
     ``_pack``.
     """
-    counts = jnp.sum(ok, axis=-1)                # [n_seg] per-segment totals
-    base = jnp.cumsum(counts) - counts           # exclusive scan, S elements
-    within = jnp.cumsum(ok, axis=-1) - ok        # per-segment exclusive ranks
-    pos = (base[:, None] + within).reshape(-1)
     okf = ok.reshape(-1)
-    keep = (okf == 1) & (pos < capacity)
-    idx = jnp.where(keep, pos, capacity)
+    idx, keep = _pack_segmented_indices(ok, capacity)
     out_p = jnp.zeros((capacity + 1,), jnp.int32).at[idx].set(
         jnp.where(keep, payload.reshape(-1), 0))
     out_v = jnp.zeros((capacity + 1,), jnp.int32).at[idx].max(

@@ -3,11 +3,19 @@
 ``pytest --regen-golden`` rewrites the frozen fixtures under
 ``tests/golden/`` in place (the golden tests then skip instead of compare);
 without the flag, golden tests assert bit-exactness against the files.
+
+The whole suite runs under strict dtype promotion: the wire formats are
+exact-width (int16 words, int32 timestamps) and a silent weak-type
+promotion is exactly the class of regression the fabric verifier exists to
+keep out of the datapath (ISSUE 7).
 """
 
 import pathlib
 
+import jax
 import pytest
+
+jax.config.update("jax_numpy_dtype_promotion", "strict")
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
 
