@@ -408,7 +408,161 @@ def run_degraded(verbose: bool = True, n_steps: int = N_STEPS):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Durable long-run streams: checkpoint cost and windowed-supervision overhead
+# ---------------------------------------------------------------------------
+#
+# The ``stream_ckpt_*`` family (ISSUE 8) prices durability on the 3-level
+# EXT_4CASE_96CHIP fabric running the *full* SNN stream with online
+# plasticity — the heaviest checkpointable state (96 chips' evolving
+# 256x512 weight arrays + STDP traces + chip states + delay line + RNG,
+# ~50 MB): the crash-consistent save (fsync + sha256 + atomic rename), the
+# verified restore, the newest-valid-checkpoint scan, and the end-to-end
+# overhead of running under ``runtime.elastic.run_supervised_stream``
+# (window boundaries checkpointed, retention pruned) vs the bare
+# unsupervised scan.  Bit-exactness of the supervised outputs (spikes and
+# final plasticity state) is asserted before timing.
+
+# Soft budget for windowed-checkpoint supervision (the acceptance target:
+# durability costs at most 15% on the 96-chip case at the stock window) and
+# a generous hard bound for noisy shared runners.
+CKPT_OVERHEAD_BUDGET = 1.15
+CKPT_OVERHEAD_HARD_LIMIT = 2.0
+CKPT_N_STEPS = 128
+CKPT_WINDOW = 64
+
+
+def run_ckpt(verbose: bool = True, n_steps: int = CKPT_N_STEPS,
+             window: int = CKPT_WINDOW, trials: int = 2):
+    """The ``stream_ckpt_*`` family on EXT_4CASE_96CHIP."""
+    import shutil
+    import tempfile
+
+    from repro.ckpt import checkpoint as ckptlib
+    from repro.runtime import elastic
+    from repro.snn import network as netlib
+    from repro.snn import stream as stlib
+    from repro.snn.plasticity import STDPConfig
+
+    name, fan_ins, cap_in, cap = next(c for c in CASES if len(c[1]) == 3)
+    n = math.prod(fan_ins)
+    cfg = netlib.NetworkConfig(n_chips=n, capacity=cap)
+    params = netlib.init_feedforward(
+        jax.random.PRNGKey(0), cfg)._replace(router=identity_router(n))
+    state0 = netlib.init_state(cfg, 1)
+    plan = _plan_for(fan_ins, cap, _level_caps(fan_ins, cap_in, OCC_HEADLINE))
+    drives = (jax.random.uniform(
+        jax.random.PRNGKey(1), (n_steps, n, 1, cfg.chip.n_rows))
+        < OCC_HEADLINE).astype(jnp.float32)
+    pcfg = STDPConfig()
+    rng = jax.random.key(0)
+    tag = f"[{name},T={n_steps}]"
+    results = {}
+
+    # -- bare plastic scan: the durability-free baseline (jitted, like the
+    # supervised runner's cached window program) ----------------------------
+    bare_fn = jax.jit(lambda st, dr: stlib.run_stream(
+        params, st, dr, cfg, fabric=plan, plasticity=pcfg))
+
+    def bare():
+        out = bare_fn(state0, drives)
+        jax.block_until_ready(out.spikes)
+        return out
+
+    ref = bare()                                          # compile + warm
+    t_scan = min(_timed_call(bare) for _ in range(trials))
+    scan_us = t_scan / n_steps * 1e6
+
+    # -- checkpoint micro-costs on the full stream state --------------------
+    # Checkpoint on the working volume (where real run checkpoints live)
+    # rather than /tmp — container /tmp is often a different, slower fs.
+    workdir = tempfile.mkdtemp(prefix="bench_ckpt_", dir=".")
+    try:
+        fp = elastic.stream_fingerprint(cfg, fabric=plan, plasticity=pcfg)
+        t_save = min(_timed_call(
+            lambda i=i: elastic.save_stream_state(
+                workdir, i, ref.state, plasticity=ref.plasticity, rng=rng,
+                fingerprint=fp)) for i in range(3))
+        plast_like = netlib.init_stream_plasticity(params, 1)
+        t_restore = min(_timed_call(
+            lambda: elastic.restore_stream_checkpoint(
+                workdir, state0, step=2, plasticity_like=plast_like,
+                expect_fingerprint=fp)) for _ in range(3))
+        t_verify = min(_timed_call(lambda: ckptlib.latest_step(workdir))
+                       for _ in range(3))
+        manifest = ckptlib.read_manifest(workdir, 2)
+        state_mb = sum(e["bytes"] for e in manifest["leaves"]) / 1e6
+
+        # -- supervised windows: checkpoint every boundary, keep 3 ----------
+        def supervised(d):
+            out, recs = elastic.run_supervised_stream(
+                params, state0, drives, cfg, fabric=plan, window=window,
+                ckpt_dir=d, plasticity=pcfg, rng=rng, keep=3)
+            assert not recs
+            return out
+
+        # Fresh directory per trial: each measures the first-writer path
+        # (no rename-over of a previous run's checkpoints).
+        sup_dirs = [tempfile.mkdtemp(prefix="bench_ckpt_sup_", dir=".")
+                    for _ in range(trials + 1)]
+        try:
+            out_sup = supervised(sup_dirs[0])             # warm (compiled)
+            assert jnp.array_equal(out_sup.spikes, ref.spikes), (
+                "supervised windows must be bit-exact with the bare scan")
+            for a, b in zip(jax.tree.leaves(out_sup.plasticity),
+                            jax.tree.leaves(ref.plasticity)):
+                assert jnp.array_equal(a, b), (
+                    "supervised plasticity state diverged from the bare scan")
+            t_sup = min(_timed_call(lambda d=d: supervised(d))
+                        for d in sup_dirs[1:])
+        finally:
+            for d in sup_dirs:
+                shutil.rmtree(d, ignore_errors=True)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    sup_us = t_sup / n_steps * 1e6
+    overhead = t_sup / t_scan
+    results[f"stream_ckpt_scan_us_per_step{tag}"] = scan_us
+    results[f"stream_ckpt_supervised_us_per_step{tag}"] = sup_us
+    results[f"stream_ckpt_overhead{tag}"] = overhead
+    results[f"stream_ckpt_save_us{tag}"] = t_save * 1e6
+    results[f"stream_ckpt_restore_us{tag}"] = t_restore * 1e6
+    results[f"stream_ckpt_verify_us{tag}"] = t_verify * 1e6
+    results[f"stream_ckpt_state_mb{tag}"] = state_mb
+    if verbose:
+        print(f"exchange_stream[{name} ckpt save],{t_save*1e6:.0f},us "
+              f"({state_mb:.1f} MB full stream state, fsync+sha256+rename)")
+        print(f"exchange_stream[{name} ckpt restore],{t_restore*1e6:.0f},us "
+              f"(verified, fingerprint-checked)")
+        print(f"exchange_stream[{name} ckpt verify],{t_verify*1e6:.0f},us "
+              f"(newest-valid-checkpoint scan)")
+        print(f"exchange_stream[{name} ckpt supervised],{sup_us:.0f},"
+              f"us/step ({overhead:.2f}x bare scan {scan_us:.0f}, "
+              f"window={window})")
+    if overhead >= CKPT_OVERHEAD_BUDGET and verbose:
+        print(f"exchange_stream[{name} ckpt WARNING],0,overhead "
+              f"{overhead:.2f}x exceeds the {CKPT_OVERHEAD_BUDGET}x budget "
+              f"(noisy runner, or checkpoints got expensive)")
+    assert overhead < CKPT_OVERHEAD_HARD_LIMIT, (
+        f"windowed checkpointing costs {overhead:.2f}x over the bare scan "
+        f"(hard limit {CKPT_OVERHEAD_HARD_LIMIT}x)")
+
+    path = _merge_bench_json(results)
+    if verbose:
+        print(f"exchange_stream[ckpt json],0,wrote {path}")
+    return [(name, n_steps, scan_us, sup_us, overhead)]
+
+
+def _timed_call(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
 if __name__ == "__main__":
     run()
     run_timed()
     run_degraded()
+    run_ckpt()

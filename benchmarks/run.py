@@ -18,6 +18,9 @@ from the calibration ratio instead of a prose footnote.
   stream_timed            §IV     timed streaming datapath (timestamp lane)
   stream_degraded         §III    degraded-mode fabric: dead uplinks,
                                   extension-lane detours, reroute exhaustion
+  stream_ckpt             §III    durable long-run streams: crash-consistent
+                                  checkpoint cost + windowed-supervision
+                                  overhead (full plastic stream state)
   moe_dispatch            DESIGN §4  event-frame dispatch at LM scale
   roofline_table          §Roofline  all dry-run cells (needs results/)
 """
@@ -44,6 +47,7 @@ ALL = [
     ("stream", exchange_stream.run),
     ("stream_timed", exchange_stream.run_timed),
     ("stream_degraded", exchange_stream.run_degraded),
+    ("stream_ckpt", exchange_stream.run_ckpt),
     ("moe_dispatch", moe_dispatch.run),
     ("grad_compression", grad_compression.run),
     ("roofline_table", roofline_table.run),

@@ -24,6 +24,9 @@ python -m repro.analysis.lint -q
 echo "=== degraded-mode battery (health, detours, watchdog recovery) ==="
 python -m pytest -q tests/test_degraded.py tests/test_watchdog.py
 
+echo "=== durability battery (crash-consistent checkpoints, kill-resume) ==="
+python -m pytest -q tests/test_checkpoint.py
+
 echo "=== fast suite (-m 'not slow') ==="
 python -m pytest -q -m "not slow"
 
@@ -33,5 +36,5 @@ python -m pytest -x -q
 echo "=== fabric static analysis (full: optimized-HLO collective audit) ==="
 python -m repro.analysis.lint -q --hlo
 
-echo "=== streaming benchmarks (3-level fabric + timed lane + degraded mode) ==="
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed --only stream_degraded
+echo "=== streaming benchmarks (3-level fabric + timed + degraded + durable) ==="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed --only stream_degraded --only stream_ckpt

@@ -664,6 +664,30 @@ def fault_boundaries(faults: Sequence[FaultEvent], n_steps: int
     return tuple(sorted(m for m in marks if 0 <= m < n_steps))
 
 
+def shift_faults(faults: Sequence[FaultEvent], start: int, n_steps: int
+                 ) -> tuple[FaultEvent, ...]:
+    """Rebase a global-step fault schedule onto the window
+    ``[start, start + n_steps)`` — the per-window view that windowed
+    supervision (``runtime.elastic.run_supervised_stream``) feeds each
+    ``run_stream`` call, so a schedule expressed in whole-run steps degrades
+    every window exactly as one long run would.  Events entirely outside the
+    window are dropped; a kill before the window clamps to local step 0; a
+    restore at or past the window end becomes permanent within the window.
+    """
+    end = start + n_steps
+    out = []
+    for ev in faults:
+        if ev.kill_step >= end:
+            continue
+        if ev.restore_step is not None and ev.restore_step <= start:
+            continue
+        restore = (None if ev.restore_step is None or ev.restore_step >= end
+                   else ev.restore_step - start)
+        out.append(dataclasses.replace(
+            ev, kill_step=max(ev.kill_step - start, 0), restore_step=restore))
+    return tuple(out)
+
+
 def degrade_spec(spec: FabricSpec,
                  dead: Iterable[tuple[int, int] | tuple[int, int, str]],
                  *, reroute: bool | None = None) -> FabricSpec:

@@ -1,5 +1,5 @@
 """Elastic resume: re-instantiate a checkpointed run on a different mesh —
-and the degraded-fabric recovery loop for streamed emulation.
+and the durable long-run stream harness (checkpoint → watchdog → resume).
 
 Checkpoints are mesh-agnostic host arrays; resharding happens on load
 (`ckpt.restore(..., shardings=...)`).  Changing the *data* axis size changes
@@ -9,28 +9,50 @@ deterministic across a resize.  Changing the *model* axis requires the same
 divisibility the sharding rules already check; incompatible dims degrade to
 replication rather than failing.
 
-``run_supervised_stream`` is the stream-side recovery loop: the emulation
-advances in windows, each window checkpointed at its boundary and run under
-a ``runtime.watchdog.StepWatchdog`` (the host twin of the Aggregator
-barrier's timeout → recover → refractory cycle, ``core.sync``).  When the
-watchdog fires — a stalled stream, e.g. a dead peer holding the barrier —
-the loop restores the last window-boundary checkpoint, swaps in the
-degraded fabric plan (``on_recover``, typically
-``compile_fabric(degrade_spec(...))`` so dead uplinks detour over the spare
-extension lanes), and reruns from the boundary: the resumed stream is
-bit-exact with a run that had started on the degraded plan at that
-boundary, because ``snn.stream.run_stream`` is a pure function of
-(params, state, drives, plan).
+The stream side captures the *full* state a long emulation run needs to
+survive preemption:
+
+* ``save_stream_state`` / ``restore_stream_checkpoint`` checkpoint the
+  ``NetworkState`` (chip states + the in-flight delay line, kept in shift
+  order so any window length resumes bit-exactly), the online-plasticity
+  traces and evolving weights (``snn.plasticity.StreamPlasticityState`` —
+  the chips' weights at step t exist nowhere else), the PRNG key, the
+  global step counter, and a ``stream_fingerprint`` of the fabric spec +
+  network config that ``restore`` validates — resuming a checkpoint onto a
+  different topology or config fails loudly instead of silently diverging.
+
+* ``run_supervised_stream`` advances the emulation in watchdog-supervised
+  windows (the host twin of the Aggregator barrier's timeout → recover →
+  refractory cycle, ``core.sync``), checkpointing on a configurable cadence
+  (``ckpt_every``) with bounded retention (``keep`` → ``ckpt.prune``, which
+  never removes the only checkpoint that verifies).  A fired watchdog
+  restores the newest *valid* on-disk checkpoint — not necessarily the
+  current window's boundary — and reruns the whole span from there as one
+  stream call, so cadence > 1 still recovers bit-exactly.
+
+* ``resume_supervised_stream`` is the preemption entry point: after a kill
+  (crash, SIGKILL, revoked node) a fresh process points it at the same
+  checkpoint directory and drive schedule, and it restarts from the newest
+  checkpoint that verifies (quarantining corrupt ones), validates the
+  fingerprint, and produces outputs bit-exact with the uninterrupted run —
+  plasticity included, and composable with the link-fault schedules
+  (``faults`` rebased per window via ``fabric.shift_faults``).
 """
 
 from __future__ import annotations
 
-from typing import Callable
+import dataclasses
+import hashlib
+import json
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
+from repro.ckpt.checkpoint import CheckpointError
 from repro.parallel import sharding as shardlib
 
 
@@ -57,31 +79,200 @@ def resume_on_mesh(directory: str, state_like, mesh, params_key="params",
 
 
 # ---------------------------------------------------------------------------
-# Degraded-fabric stream recovery (watchdog → checkpoint-restore → resume)
+# Full stream-state capture
 # ---------------------------------------------------------------------------
 
 
-def _stream_tree(state) -> dict:
-    """NetworkState as a checkpointable tree (named leaves, mesh-agnostic)."""
-    return {"chips": state.chips, "inflight": state.inflight}
+class StreamCheckpoint(NamedTuple):
+    """Everything a streamed run needs to continue from a checkpoint."""
+
+    state: object                 # snn.network.NetworkState
+    plasticity: object | None    # snn.plasticity.StreamPlasticityState
+    rng: jax.Array | None        # PRNG key (typed keys round-trip)
+    step: int                    # global stream step of the checkpoint
+    manifest: dict
+
+
+def _canon(x):
+    """Canonical JSON-able form of configs/specs for fingerprinting."""
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        return {"__type__": type(x).__name__,
+                **{f.name: _canon(getattr(x, f.name))
+                   for f in dataclasses.fields(x)}}
+    if isinstance(x, dict):
+        return {str(k): _canon(v)
+                for k, v in sorted(x.items(), key=lambda kv: str(kv[0]))}
+    if isinstance(x, (list, tuple)):
+        return [_canon(v) for v in x]
+    if hasattr(x, "tolist"):                    # numpy / jax arrays
+        return _canon(np.asarray(x).tolist())
+    return repr(x)
+
+
+def stream_fingerprint(cfg, *, fabric=None, plasticity=None,
+                       extra=None) -> str:
+    """Identity of a streamed run's static configuration — sha256 over the
+    canonical JSON of the network config, the fabric *spec* (topology,
+    capacities, enables, health — not the compiled tables), and the
+    plasticity config.  Stored in every stream checkpoint's metadata and
+    validated on restore: state from one topology cannot silently seed a
+    run on another."""
+    payload = {"cfg": _canon(cfg),
+               "fabric": None if fabric is None else _canon(fabric.spec),
+               "plasticity": _canon(plasticity),
+               "extra": _canon(extra)}
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def _stream_tree(state, *, plasticity=None, rng=None,
+                 step: int | None = None) -> dict:
+    """The checkpointable stream tree (named leaves, mesh-agnostic).
+
+    Optional capture rides as extra top-level keys so old two-leaf
+    checkpoints keep restoring: the reader decides what to expect from the
+    manifest, not from the code version.
+    """
+    tree = {"chips": state.chips, "inflight": state.inflight}
+    if plasticity is not None:
+        tree["plasticity"] = plasticity
+    if rng is not None:
+        tree["rng"] = rng
+    if step is not None:
+        tree["step"] = jnp.asarray(step, jnp.int32)
+    return tree
 
 
 def save_stream_state(directory: str, step: int, state,
-                      metadata: dict | None = None) -> str:
-    """Checkpoint a ``snn.network.NetworkState`` at a window boundary."""
-    return ckpt.save(directory, step, _stream_tree(state), metadata=metadata)
+                      metadata: dict | None = None, *,
+                      plasticity=None, rng=None,
+                      fingerprint: str | None = None) -> str:
+    """Checkpoint the full stream state at a window boundary.
+
+    Beyond the ``NetworkState`` (chip states + shift-order in-flight delay
+    line), captures the online-plasticity traces/weights, the PRNG key
+    (typed keys stored as raw key data), the global step, and the run
+    fingerprint — everything ``restore_stream_checkpoint`` needs to resume
+    bit-exactly.
+    """
+    meta = dict(metadata or {})
+    meta["stream_step"] = int(step)
+    meta["has_plasticity"] = plasticity is not None
+    if fingerprint is not None:
+        meta["fingerprint"] = fingerprint
+    if rng is not None:
+        if jnp.issubdtype(rng.dtype, jax.dtypes.prng_key):
+            meta["rng_impl"] = str(jax.random.key_impl(rng))
+            rng = jax.random.key_data(rng)
+        else:
+            meta["rng_impl"] = None
+    tree = _stream_tree(state, plasticity=plasticity, rng=rng, step=step)
+    return ckpt.save(directory, step, tree, metadata=meta)
+
+
+def restore_stream_checkpoint(directory: str, state_like, *,
+                              step: int | None = None,
+                              plasticity_like=None,
+                              expect_fingerprint: str | None = None,
+                              quarantine: bool = False) -> StreamCheckpoint:
+    """Restore a stream checkpoint with everything it captured.
+
+    ``state_like`` supplies the ``NetworkState`` structure; when the
+    checkpoint carries plasticity state, ``plasticity_like`` (e.g.
+    ``snn.network.init_stream_plasticity(params, batch)``) must supply that
+    structure too — restoring a plastic run without it raises instead of
+    silently dropping the evolved weights.  ``step=None`` resumes from the
+    newest checkpoint that *verifies* (corrupt/partial ones skipped, and
+    quarantined when ``quarantine``).  ``expect_fingerprint`` (from
+    ``stream_fingerprint``) must match the checkpoint's recorded
+    fingerprint.
+    """
+    if step is None:
+        step = ckpt.latest_step(directory, quarantine=quarantine)
+        if step is None:
+            raise FileNotFoundError(
+                f"no valid stream checkpoints under {directory}")
+    manifest = ckpt.read_manifest(directory, step)
+    by_name = {e["name"]: e for e in manifest.get("leaves", [])}
+    meta = manifest.get("metadata", {})
+
+    has_plast = any(n.startswith("plasticity") for n in by_name)
+    if has_plast and plasticity_like is None:
+        raise CheckpointError(
+            f"stream checkpoint step {step} carries online-plasticity state "
+            f"(evolved weights + traces); pass plasticity_like= (e.g. "
+            f"snn.network.init_stream_plasticity(params, batch)) so it can "
+            f"be restored — dropping it would silently lose the run")
+    if expect_fingerprint is not None:
+        got = meta.get("fingerprint")
+        if got != expect_fingerprint:
+            raise CheckpointError(
+                f"stream checkpoint step {step} was written by a different "
+                f"run configuration: fingerprint {got!r} != expected "
+                f"{expect_fingerprint!r} (fabric spec / network config / "
+                f"plasticity config changed)")
+
+    rng_like = None
+    if "rng" in by_name:
+        e = by_name["rng"]
+        rng_like = jnp.zeros(tuple(e["shape"]), np.dtype(e["dtype"]))
+    tree_like = _stream_tree(
+        state_like, plasticity=plasticity_like if has_plast else None,
+        rng=rng_like, step=step if "step" in by_name else None)
+    tree, manifest = ckpt.restore(directory, tree_like, step=step,
+                                  quarantine=quarantine)
+
+    rng = tree.get("rng")
+    if rng is not None and meta.get("rng_impl"):
+        rng = jax.random.wrap_key_data(rng, impl=meta["rng_impl"])
+    return StreamCheckpoint(
+        state=type(state_like)(chips=tree["chips"],
+                               inflight=tree["inflight"]),
+        plasticity=tree.get("plasticity"), rng=rng,
+        step=int(tree.get("step", step)), manifest=manifest)
 
 
 def restore_stream_state(directory: str, state_like, step: int | None = None):
-    """Restore a window-boundary checkpoint back into a ``NetworkState``.
+    """Back-compat wrapper: restore just the ``NetworkState`` of a
+    (non-plastic) stream checkpoint.  Returns ``(state, manifest)``."""
+    ck = restore_stream_checkpoint(directory, state_like, step=step)
+    return ck.state, ck.manifest
 
-    ``state_like`` supplies the pytree structure (a freshly initialized or
-    current state).  Returns ``(state, manifest)``.
-    """
-    tree, manifest = ckpt.restore(directory, _stream_tree(state_like),
-                                  step=step)
-    return (type(state_like)(chips=tree["chips"], inflight=tree["inflight"]),
-            manifest)
+
+# ---------------------------------------------------------------------------
+# Watchdog-supervised windows (stall recovery + durable checkpoints)
+# ---------------------------------------------------------------------------
+
+
+# Jitted window programs, cached across run_supervised_stream calls: the
+# window body is identical every window on a given (params, cfg, plan,
+# plasticity, stream_kwargs), so windows — and repeated supervised runs in
+# one process, e.g. resume after preemption — dispatch a compiled program
+# instead of retracing the scan at every boundary.  Keys are object ids;
+# the cached entries hold the objects themselves so an id can't be
+# recycled while its entry lives.  Faulted runs bypass the cache (each
+# window's rebased schedule is a different trace).  Bounded FIFO.
+_RUNNER_CACHE: dict[tuple, tuple] = {}
+_RUNNER_CACHE_MAX = 16
+
+
+def _window_runner(params, cfg, plan, plasticity, kwargs):
+    from repro.snn import stream as stlib
+
+    key = (id(params), id(cfg), id(plan), plasticity,
+           tuple(sorted((k, id(v)) for k, v in kwargs.items())))
+    entry = _RUNNER_CACHE.get(key)
+    if entry is None:
+        fn = jax.jit(lambda st_, dr_, ps_: stlib.run_stream(
+            params, st_, dr_, cfg, fabric=plan, plasticity=plasticity,
+            plasticity_state=ps_, **kwargs))
+        entry = ((params, cfg, plan, kwargs), fn)
+        _RUNNER_CACHE[key] = entry
+        while len(_RUNNER_CACHE) > _RUNNER_CACHE_MAX:
+            _RUNNER_CACHE.pop(next(iter(_RUNNER_CACHE)))
+    return entry[1]
 
 
 def run_supervised_stream(params, state, ext_drives, cfg, *,
@@ -89,18 +280,30 @@ def run_supervised_stream(params, state, ext_drives, cfg, *,
                           watchdog=None,
                           on_recover: Callable | None = None,
                           stall_probe: Callable | None = None,
-                          stream_kwargs: dict | None = None):
+                          stream_kwargs: dict | None = None,
+                          plasticity=None, plasticity_state=None,
+                          rng=None,
+                          ckpt_every: int = 1, keep: int | None = None,
+                          step_offset: int = 0,
+                          faults: Sequence | None = None,
+                          fault_mode: str = "mask",
+                          async_checkpoint: bool = True):
     """Run ``snn.stream.run_stream`` in watchdog-supervised windows.
 
-    The drive sequence advances ``window`` steps at a time; each window's
-    starting state is checkpointed (``ckpt_dir``, step = start index) before
-    the window runs under the watchdog's deadline.  A fired watchdog marks
-    the window failed: its outputs are discarded, the boundary checkpoint is
-    restored, ``on_recover(window_index, plan)`` supplies the plan to resume
-    on (default: keep the current plan), and the window reruns on it — all
-    subsequent windows stay on the recovered plan.  The rerun happens inside
-    the watchdog's refractory period, mirroring the barrier's post-release
-    lockout (``core.sync``): a slow recovery step cannot cascade.
+    The drive sequence advances ``window`` steps at a time; window
+    boundaries checkpoint the *full* stream state (network + plasticity +
+    RNG + step + fingerprint) on the ``ckpt_every`` cadence, with retention
+    bounded by ``keep`` (``ckpt.prune`` — never the last verified
+    checkpoint).  Each window runs under the watchdog's deadline; a fired
+    watchdog marks the window failed: its outputs are discarded, the newest
+    *valid* checkpoint at or before the window start is restored
+    (corrupt/partial ones quarantined), ``on_recover(window_index, plan)``
+    supplies the plan to resume on (default: keep the current plan), and
+    the whole span from the restored step through the window end reruns as
+    one stream call — all subsequent windows stay on the recovered plan.
+    The rerun happens inside the watchdog's refractory period, mirroring
+    the barrier's post-release lockout (``core.sync``): a slow recovery
+    step cannot cascade.
 
     Args:
       fabric: the (healthy) ``FabricPlan`` the stream starts on.
@@ -116,53 +319,214 @@ def run_supervised_stream(params, state, ext_drives, cfg, *,
         probe that blocks past the deadline simulates a stalled stream.
       stream_kwargs: forwarded to every ``run_stream`` call (e.g.
         ``timed=True``, ``use_fused=False``).
+      plasticity / plasticity_state: online plasticity
+        (``snn.plasticity.STDPConfig`` + optional initial state) — the
+        evolving traces/weights thread through the windows and every
+        checkpoint, bit-exact with one long plastic run.
+      rng: a PRNG key carried as durable state (checkpointed and returned
+        by ``resume_supervised_stream``; the stream itself is
+        deterministic).
+      ckpt_every: checkpoint every Nth window boundary (≥ 1; the first
+        window of the invocation always checkpoints, so recovery always
+        has a floor).
+      keep: retain only the newest ``keep`` verified checkpoints
+        (``None`` = keep everything).
+      step_offset: global step of ``ext_drives[0]`` — set by
+        ``resume_supervised_stream`` so checkpoints, fault schedules and
+        window indices stay in whole-run coordinates.
+      faults / fault_mode: a whole-run ``fabric.FaultEvent`` schedule
+        (global steps); each window sees its slice via
+        ``fabric.shift_faults``, so degradation lands exactly as in one
+        long faulted run.
+      async_checkpoint: write checkpoints from a single background writer
+        thread, overlapping the (fsync-bound) IO with the next window's
+        compute — the durability cost of a boundary shrinks to the writer's
+        CPU share.  The directory stays single-writer (each save joins the
+        previous one first), and every consumer of the checkpoint —
+        recovery, the final return, the next save — joins the writer before
+        touching disk, so the observable behaviour is identical to
+        synchronous mode; writer errors surface at the next join.  Set
+        ``False`` for strictly synchronous saves (e.g. crash-injection
+        harnesses that need the failure at the exact save site).
 
     Returns:
       ``(out, recoveries)`` — ``out`` is a ``StreamOut`` covering all steps
       (windows concatenated on the time axis, final state from the last
-      window), ``recoveries`` a list of dicts describing each recovery
-      (window index, start step, plan summary).
+      window, final plasticity state in ``out.plasticity``), ``recoveries``
+      a list of dicts describing each recovery (window index, fired step,
+      restored step, plan summary).
     """
+    from repro.core import fabric as fablib
     from repro.runtime.watchdog import StepWatchdog
+    from repro.snn import plasticity as plaslib
     from repro.snn import stream as stlib
 
     if window <= 0:
         raise ValueError(f"window must be positive: {window}")
+    if ckpt_every < 1:
+        raise ValueError(f"ckpt_every must be >= 1: {ckpt_every}")
     kwargs = dict(stream_kwargs or {})
     wd = StepWatchdog() if watchdog is None else watchdog
     n_steps = ext_drives.shape[0]
     plan = fabric
+    fingerprint = stream_fingerprint(cfg, fabric=fabric,
+                                     plasticity=plasticity)
+    plast = plasticity_state
+    if plasticity is not None and plast is None:
+        plast = plaslib.init_stream_stdp(params.chips.weights,
+                                         ext_drives.shape[2])
     recoveries: list[dict] = []
-    outs: list = []
+    outs: list[tuple] = []            # (StreamOut, global start, length)
+    writer = (ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")
+              if async_checkpoint else None)
+    pending: list = []                # in-flight writer futures (≤ 1)
 
-    def run_window(drives_w, st, pl):
-        out = stlib.run_stream(params, st, drives_w, cfg, fabric=pl, **kwargs)
+    def flush_writer():
+        while pending:
+            pending.pop(0).result()   # re-raises writer errors here
+
+    def checkpoint_now(step, st, plast_st, plan_desc):
+        def _do():
+            save_stream_state(ckpt_dir, step, st,
+                              metadata={"plan": plan_desc},
+                              plasticity=plast_st, rng=rng,
+                              fingerprint=fingerprint)
+            if keep is not None:
+                ckpt.prune(ckpt_dir, keep=keep)
+        if writer is None:
+            _do()
+        else:
+            flush_writer()            # single writer: previous save first
+            pending.append(writer.submit(_do))
+
+    def run_span(gstart, drives_w, st, pl, plast_st):
+        if faults:
+            wfaults = fablib.shift_faults(faults, gstart, drives_w.shape[0])
+            out = stlib.run_stream(params, st, drives_w, cfg, fabric=pl,
+                                   plasticity=plasticity,
+                                   plasticity_state=plast_st,
+                                   faults=wfaults, fault_mode=fault_mode,
+                                   **kwargs)
+        else:
+            fn = _window_runner(params, cfg, pl, plasticity, kwargs)
+            out = fn(st, drives_w, plast_st)
         jax.block_until_ready(out.spikes)
         return out
 
-    for start in range(0, n_steps, window):
-        drives_w = ext_drives[start:start + window]
-        save_stream_state(ckpt_dir, start, state,
-                          metadata={"plan": plan.describe()})
-        fired_before = wd.timeouts
-        with wd:
-            out = run_window(drives_w, state, plan)
-            if stall_probe is not None:
-                stall_probe(start // window)
-        if wd.timeouts > fired_before:
-            # Timeout → recover: drop the window, restore its boundary
-            # checkpoint, resume on the (degraded) plan.  The rerun sits in
-            # the refractory period — the watchdog stays quiet.
-            state, _ = restore_stream_state(ckpt_dir, state, step=start)
-            if on_recover is not None:
-                plan = on_recover(start // window, plan)
-            recoveries.append({"window": start // window, "step": start,
-                               "plan": plan.describe()})
-            out = run_window(drives_w, state, plan)
-        state = out.state
-        outs.append(out)
+    try:
+        for start in range(0, n_steps, window):
+            gstart = step_offset + start
+            widx = gstart // window
+            drives_w = ext_drives[start:start + window]
+            if start == 0 or widx % ckpt_every == 0:
+                checkpoint_now(gstart, state, plast, plan.describe())
+            fired_before = wd.timeouts
+            with wd:
+                out = run_span(gstart, drives_w, state, plan, plast)
+                if stall_probe is not None:
+                    stall_probe(widx)
+            if wd.timeouts > fired_before:
+                # Timeout → recover: drop everything back to the newest
+                # valid checkpoint (the boundary one on cadence 1; possibly
+                # older on a sparser cadence or after corruption), resume on
+                # the (degraded) plan, and rerun the whole span to the
+                # window end as one stream call.  The rerun sits in the
+                # refractory period — the watchdog stays quiet.
+                flush_writer()
+                s = ckpt.latest_step(ckpt_dir, max_step=gstart,
+                                     quarantine=True)
+                if s is None or s < step_offset:
+                    raise CheckpointError(
+                        f"no valid checkpoint at or before step {gstart} "
+                        f"(>= {step_offset}) to recover from under "
+                        f"{ckpt_dir}")
+                ck = restore_stream_checkpoint(
+                    ckpt_dir, state, step=s,
+                    plasticity_like=(plast if plasticity is not None
+                                     else None),
+                    expect_fingerprint=fingerprint)
+                if on_recover is not None:
+                    plan = on_recover(widx, plan)
+                recoveries.append({"window": widx, "step": gstart,
+                                   "restored_step": s,
+                                   "plan": plan.describe()})
+                outs = [o for o in outs if o[1] < s]
+                local_s = s - step_offset
+                span = ext_drives[local_s:start + drives_w.shape[0]]
+                out = run_span(s, span, ck.state, plan, ck.plasticity)
+                outs.append((out, s, span.shape[0]))
+                rng = ck.rng if ck.rng is not None else rng
+            else:
+                outs.append((out, gstart, drives_w.shape[0]))
+            state = out.state
+            plast = out.plasticity
+        flush_writer()
+    finally:
+        if writer is not None:
+            writer.shutdown(wait=True)
+    trimmed = [o._replace(state=None, plasticity=None) for o, _, _ in outs]
+    merged = (jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *trimmed)
+              if len(trimmed) > 1 else trimmed[0])
+    return merged._replace(state=state, plasticity=plast), recoveries
 
-    merged = jax.tree.map(lambda *a: jnp.concatenate(a, axis=0),
-                          *[o._replace(state=None) for o in outs]) \
-        if len(outs) > 1 else outs[0]._replace(state=None)
-    return merged._replace(state=state), recoveries
+
+def resume_supervised_stream(params, state_like, ext_drives, cfg, *,
+                             fabric, window: int, ckpt_dir: str,
+                             plasticity=None, watchdog=None,
+                             on_recover: Callable | None = None,
+                             stall_probe: Callable | None = None,
+                             stream_kwargs: dict | None = None,
+                             ckpt_every: int = 1, keep: int | None = None,
+                             faults: Sequence | None = None,
+                             fault_mode: str = "mask",
+                             async_checkpoint: bool = True):
+    """Restart a preempted supervised stream from disk.
+
+    The preemption-survival entry point: a fresh process (the old one
+    crashed, was SIGKILLed, or lost its node — possibly mid-checkpoint)
+    points this at the same checkpoint directory and the *full* drive
+    schedule, and the run continues from the newest checkpoint that
+    verifies: partial and bit-rotted directories are quarantined, the
+    fingerprint is validated against (cfg, fabric, plasticity), and the
+    remaining windows run under the same supervision (checkpoint cadence,
+    retention, watchdog, whole-run fault schedule).  The concatenation of
+    the pre-kill output prefix ``[:resumed_step]`` with the returned output
+    is bit-exact with an uninterrupted run — spikes, drops, latencies,
+    final state, and plasticity included.
+
+    Args:
+      state_like: a freshly initialized ``NetworkState`` (structure donor).
+      ext_drives: the whole run's drives, step 0 onward — the resume point
+        indexes into it.
+      Remaining arguments as in ``run_supervised_stream``.
+
+    Returns:
+      ``(out, info)`` — ``out`` covers steps ``[resumed_step:]``; ``info``
+      has ``resumed_step``, the restored checkpoint's ``manifest``, the
+      restored ``rng``, and the in-run ``recoveries`` list.
+    """
+    from repro.snn import network as netlib
+
+    fingerprint = stream_fingerprint(cfg, fabric=fabric,
+                                     plasticity=plasticity)
+    step = ckpt.latest_step(ckpt_dir, quarantine=True)
+    if step is None:
+        raise FileNotFoundError(
+            f"nothing to resume: no checkpoint under {ckpt_dir} verifies")
+    plast_like = (netlib.init_stream_plasticity(params, ext_drives.shape[2])
+                  if plasticity is not None else None)
+    ck = restore_stream_checkpoint(ckpt_dir, state_like, step=step,
+                                   plasticity_like=plast_like,
+                                   expect_fingerprint=fingerprint,
+                                   quarantine=True)
+    out, recoveries = run_supervised_stream(
+        params, ck.state, ext_drives[step:], cfg, fabric=fabric,
+        window=window, ckpt_dir=ckpt_dir, watchdog=watchdog,
+        on_recover=on_recover, stall_probe=stall_probe,
+        stream_kwargs=stream_kwargs, plasticity=plasticity,
+        plasticity_state=ck.plasticity, rng=ck.rng,
+        ckpt_every=ckpt_every, keep=keep, step_offset=step,
+        faults=faults, fault_mode=fault_mode,
+        async_checkpoint=async_checkpoint)
+    return out, {"resumed_step": step, "manifest": ck.manifest,
+                 "rng": ck.rng, "recoveries": recoveries}

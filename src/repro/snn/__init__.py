@@ -11,11 +11,15 @@ from repro.snn.chip import (  # noqa: F401
 )
 from repro.snn.network import (  # noqa: F401
     NetworkConfig, NetworkParams, NetworkState, init_feedforward,
-    init_state as init_network_state, routing_matrices, step_dense,
-    step_event, run_dense, run_event, run_event_steps,
+    init_state as init_network_state, init_stream_plasticity,
+    routing_matrices, step_dense, step_event, run_dense, run_event,
+    run_event_steps,
 )
 from repro.snn.stream import (  # noqa: F401
     StreamOut, run_stream, stream_latency_stats,
 )
 from repro.snn.encoding import poisson_encode, latency_encode, regular_encode  # noqa: F401
-from repro.snn.plasticity import STDPConfig, STDPState, init_stdp, stdp_step  # noqa: F401
+from repro.snn.plasticity import (  # noqa: F401
+    STDPConfig, STDPState, StreamPlasticityState, init_stdp,
+    init_stream_stdp, stdp_step, stdp_stream_step,
+)

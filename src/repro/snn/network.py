@@ -107,6 +107,16 @@ def init_state(cfg: NetworkConfig, batch: int) -> NetworkState:
     return NetworkState(chips=chips, inflight=inflight)
 
 
+def init_stream_plasticity(params: NetworkParams, batch: int):
+    """Fresh online-plasticity state for ``run_stream(plasticity=...)``:
+    zero STDP traces over the network's stacked chip weights.  This is the
+    ``plasticity_like`` structure checkpoint restores validate against
+    (``runtime.elastic.restore_stream_checkpoint``)."""
+    from repro.snn import plasticity as plaslib
+
+    return plaslib.init_stream_stdp(params.chips.weights, batch)
+
+
 # ---------------------------------------------------------------------------
 # Dense (differentiable) routing derived from the LUT configuration
 # ---------------------------------------------------------------------------

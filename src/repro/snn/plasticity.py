@@ -63,3 +63,52 @@ def stdp_step(state: STDPState, weights: jax.Array, pre: jax.Array,
           - cfg.lr_dep * jnp.outer(pre, trace_post))
     new_w = jnp.clip(weights + dw * WEIGHT_MAX, 0.0, WEIGHT_MAX)
     return STDPState(trace_pre=trace_pre, trace_post=trace_post), new_w
+
+
+# ---------------------------------------------------------------------------
+# Network-wide online plasticity for the streaming engine
+# ---------------------------------------------------------------------------
+
+
+class StreamPlasticityState(NamedTuple):
+    """The full plasticity state of a streamed multi-chip run: per-chip,
+    per-batch trace filters plus the evolving weight arrays.  This is scan
+    carry in ``snn.stream.run_stream`` and part of the checkpointable stream
+    state (``runtime.elastic``) — losing it loses the run."""
+
+    trace_pre: jax.Array    # f32[n_chips, batch, n_rows]
+    trace_post: jax.Array   # f32[n_chips, batch, n_neurons]
+    weights: jax.Array      # f32[n_chips, n_rows, n_neurons]
+
+
+def init_stream_stdp(weights: jax.Array, batch: int) -> StreamPlasticityState:
+    """Fresh traces over the given stacked weights
+    (f32[n_chips, n_rows, n_neurons], e.g. ``params.chips.weights``)."""
+    n_chips, n_rows, n_neurons = weights.shape
+    return StreamPlasticityState(
+        trace_pre=jnp.zeros((n_chips, batch, n_rows), jnp.float32),
+        trace_post=jnp.zeros((n_chips, batch, n_neurons), jnp.float32),
+        weights=jnp.asarray(weights, jnp.float32))
+
+
+def stdp_stream_step(state: StreamPlasticityState, pre: jax.Array,
+                     post: jax.Array, cfg: STDPConfig = STDPConfig()
+                     ) -> StreamPlasticityState:
+    """One PPU walk over every chip of a streamed network.
+
+    ``pre`` is the synapse-row drive of this step (external + delivered
+    inter-chip events, f32[n_chips, batch, n_rows]); ``post`` the output
+    spikes (f32[n_chips, batch, n_neurons]).  Traces filter per batch
+    element; each chip's weight array is shared across the batch (one
+    synapse array per chip, as in hardware), so the weight update is the
+    batch-mean of the per-element outer products — with ``batch == 1`` and
+    one chip this reduces exactly to ``stdp_step``.
+    """
+    trace_pre = cfg.alpha_pre * state.trace_pre + pre
+    trace_post = cfg.alpha_post * state.trace_post + post
+    batch = pre.shape[1]
+    dw = (cfg.lr_pot * jnp.einsum("cbr,cbn->crn", trace_pre, post)
+          - cfg.lr_dep * jnp.einsum("cbr,cbn->crn", pre, trace_post)) / batch
+    weights = jnp.clip(state.weights + dw * WEIGHT_MAX, 0.0, WEIGHT_MAX)
+    return StreamPlasticityState(trace_pre=trace_pre, trace_post=trace_post,
+                                 weights=weights)

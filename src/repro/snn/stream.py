@@ -50,6 +50,7 @@ from repro.core import latency as latlib
 from repro.core.events import make_frame
 from repro.snn import chip as chiplib
 from repro.snn import network as netlib
+from repro.snn import plasticity as plaslib
 
 
 class StreamOut(NamedTuple):
@@ -74,6 +75,12 @@ class StreamOut(NamedTuple):
     # — subtree leaves for uplinks, destinations for downlinks).
     unroutable: jax.Array      # i32[T, n_chips, batch]
     rerouted: jax.Array        # i32[T, n_chips, batch]
+    # Online-plasticity mode only (``plasticity=STDPConfig(...)``): the final
+    # trace filters + evolved weights after the last step — irreplaceable
+    # stream state (the chips' weights at step t exist nowhere else), part of
+    # the checkpointable tree in ``runtime.elastic``.  ``None`` when the run
+    # is non-plastic.
+    plasticity: "plaslib.StreamPlasticityState | None" = None
 
 
 def stream_latency_stats(out: StreamOut) -> dict[str, float]:
@@ -112,7 +119,10 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                fabric: "fablib.FabricPlan | None" = None,
                timed: bool = False,
                faults: "Sequence[fablib.FaultEvent] | None" = None,
-               fault_mode: str = "mask") -> StreamOut:
+               fault_mode: str = "mask",
+               plasticity: "plaslib.STDPConfig | None" = None,
+               plasticity_state: "plaslib.StreamPlasticityState | None"
+               = None) -> StreamOut:
     """Scan the full emulation pipeline over ``ext_drives``.
 
     Args:
@@ -163,10 +173,24 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         extension lanes where a healthy sibling has budget; the segments
         chain bit-exactly (the carried state crosses untouched).
 
+      plasticity: an ``snn.plasticity.STDPConfig`` switches on online
+        plasticity (the PPUs' hybrid-plasticity loop, Pehle et al. 2022):
+        every step, after the chip update, the pre-synaptic row drive and
+        the output spikes update per-chip/per-batch STDP traces and rewrite
+        the (shared-per-chip) weight arrays in-scan — the chips integrate
+        the *evolving* weights from the next step on.  The traces + weights
+        ride the scan carry and the final state is returned in
+        ``StreamOut.plasticity``; chain windows by passing it back via
+        ``plasticity_state`` (bit-exact with one long run).  Works in both
+        modes and composes with ``timed`` / ``faults``.
+      plasticity_state: initial ``StreamPlasticityState`` (defaults to
+        fresh zero traces over ``params.chips.weights``); requires
+        ``plasticity``.
+
     Returns:
       ``StreamOut(state, spikes, dropped, uplink_dropped, latency_ns,
-      latency_valid, unroutable, rerouted)`` — bit-exact with the
-      equivalent per-step loop (``run_event_steps`` / ``step_dense``
+      latency_valid, unroutable, rerouted, plasticity)`` — bit-exact with
+      the equivalent per-step loop (``run_event_steps`` / ``step_dense``
       iterated); the latency planes are zero-width unless ``timed``.
     """
     if mode not in ("event", "dense"):
@@ -192,6 +216,9 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                          "dense surrogate has no wire to time)")
     if fault_mode not in ("mask", "reroute"):
         raise ValueError(f"unknown fault_mode: {fault_mode!r}")
+    if plasticity_state is not None and plasticity is None:
+        raise ValueError("plasticity_state without plasticity — pass the "
+                         "STDPConfig that should drive the update")
     if faults is not None and mode != "event":
         raise ValueError("fault injection requires the event datapath (the "
                          "dense surrogate has no links to kill)")
@@ -265,15 +292,23 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
 
         def body(carry, xs):
             drive_t, health_t = xs
-            chips, inflight, t = carry
+            chips, inflight, t, plast = carry
             slot = jax.lax.rem(t, delay)
             # Ingress: consume the delay-line slot written ``delay`` steps
             # ago.
             drive = drive_t + jax.lax.dynamic_index_in_dim(inflight, slot, 0,
                                                            keepdims=False)
+            # Plastic runs integrate the *evolving* weights from the carry;
+            # non-plastic runs keep the static params (same program as
+            # before — ``plast`` is an empty pytree then).
+            chip_params = (params.chips if plast is None
+                           else params.chips._replace(weights=plast.weights))
             new_chips, spikes = jax.vmap(
                 lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
-                    params.chips, chips, drive)
+                    chip_params, chips, drive)
+            if plast is not None:
+                plast = plaslib.stdp_stream_step(plast, drive, spikes,
+                                                 plasticity)
             if mode == "dense":
                 routed = jnp.einsum("sbn,sdnr->dbr", spikes, route_mats)
                 dropped = jnp.zeros(spikes.shape[:2], jnp.int32)
@@ -288,7 +323,7 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
             # copy).
             inflight = jax.lax.dynamic_update_index_in_dim(inflight, routed,
                                                            slot, 0)
-            return ((new_chips, inflight, t + 1),
+            return ((new_chips, inflight, t + 1, plast),
                     (spikes, dropped, uplink, lat, lat_valid, unroutable,
                      rerouted))
 
@@ -316,7 +351,12 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
             sched = fablib.health_schedule(plan, faults, n_steps)
         segments = [(0, n_steps, plan)]
 
-    carry = (state.chips, state.inflight, jnp.int32(0))
+    plast0 = None
+    if plasticity is not None:
+        plast0 = (plasticity_state if plasticity_state is not None
+                  else plaslib.init_stream_stdp(params.chips.weights,
+                                                ext_drives.shape[2]))
+    carry = (state.chips, state.inflight, jnp.int32(0), plast0)
     ys_parts = []
     for start, end, plan_seg in segments:
         h = (None if sched is None else
@@ -324,7 +364,7 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         carry, ys = jax.lax.scan(make_body(plan_seg), carry,
                                  (ext_drives[start:end], h))
         ys_parts.append(ys)
-    chips, inflight, _ = carry
+    chips, inflight, _, plast_final = carry
     (spikes, dropped, uplink, lat, lat_valid, unroutable, rerouted) = (
         ys_parts[0] if len(ys_parts) == 1
         else jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *ys_parts))
@@ -336,4 +376,5 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                                                inflight=inflight),
                      spikes=spikes, dropped=dropped, uplink_dropped=uplink,
                      latency_ns=lat, latency_valid=lat_valid,
-                     unroutable=unroutable, rerouted=rerouted)
+                     unroutable=unroutable, rerouted=rerouted,
+                     plasticity=plast_final)

@@ -1,0 +1,336 @@
+"""Durable long-run streams (ISSUE 8): the crash-consistent checkpoint
+format (per-leaf checksums, fsync + atomic rename-over, verification-driven
+readers, quarantine, safe prune) and the preemption-survival harness — a
+kill at every write-protocol point must leave a resumable directory, and
+``resume_supervised_stream`` must continue bit-exactly (spikes, drops,
+final state, online-plasticity traces and evolved weights), composing with
+the link-fault schedules of ISSUE 6."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core import fabric as fablib
+from repro.core.aggregator import identity_router
+from repro.runtime import elastic
+from repro.snn import network as netlib
+from repro.snn import stream as stlib
+from repro.snn.plasticity import STDPConfig
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(autouse=True)
+def _disarm_crash_points():
+    yield
+    ckpt.set_crash_point(None)
+
+
+def _tree(scale=1.0):
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) * scale,
+            "opt": {"step": jnp.int32(3),
+                    "m": jnp.ones((3, 4), jnp.float32) * scale}}
+
+
+# ---------------------------------------------------------------------------
+# Format v2: manifest, checksums, per-leaf validation
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_roundtrip_with_checksums(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree(), metadata={"note": "x"})
+    out, manifest = ckpt.restore(d, _tree(0.0), step=1)
+    assert manifest["format_version"] == ckpt.FORMAT_VERSION
+    assert manifest["step"] == 1 and manifest["metadata"]["note"] == "x"
+    for entry in manifest["leaves"]:
+        assert set(entry) >= {"name", "shape", "dtype", "sha256", "bytes"}
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(_tree())):
+        assert jnp.array_equal(a, b)
+    assert out["opt"]["step"].dtype == jnp.int32
+
+
+def test_restore_validates_dtype_per_leaf(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    bad = _tree()
+    bad["opt"]["step"] = jnp.float32(0)          # i32 slot declared as f32
+    with pytest.raises(ckpt.CheckpointError) as e:
+        ckpt.restore(d, bad, step=1)
+    assert "dtype" in str(e.value) and "step" in str(e.value)
+
+
+def test_restore_validates_shape_per_leaf(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    bad = _tree()
+    bad["w"] = jnp.zeros((4, 3), jnp.float32)
+    with pytest.raises(ckpt.CheckpointError) as e:
+        ckpt.restore(d, bad, step=1)
+    assert "shape" in str(e.value) and "'w'" in str(e.value)
+
+
+def test_restore_rejects_structure_mismatch(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    with pytest.raises(ckpt.CheckpointError) as e:
+        ckpt.restore(d, {"w": _tree()["w"]}, step=1)
+    assert "unexpected leaves" in str(e.value)
+
+
+def test_checksum_detects_bit_flip(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    path = os.path.join(d, "step_00000001", "w.npy")
+    raw = bytearray(open(path, "rb").read())
+    raw[-1] ^= 0xFF                              # same size, different bits
+    open(path, "wb").write(bytes(raw))
+    problems = ckpt.verify(d)[1]
+    assert problems and "sha256" in problems[0]
+    with pytest.raises(ckpt.CheckpointError, match="checksum"):
+        ckpt.restore(d, _tree(), step=1)
+
+
+def test_quarantine_moves_corrupt_aside(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    ckpt.save(d, 2, _tree(2.0))
+    os.remove(os.path.join(d, "step_00000002", "w.npy"))
+    assert ckpt.latest_step(d, quarantine=True) == 1
+    names = os.listdir(d)
+    assert any(n.startswith("step_00000002.corrupt") for n in names)
+    assert 2 not in ckpt.verify(d)               # never scanned again
+
+
+def test_latest_step_skips_partial_tmp_and_bounds(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    ckpt.save(d, 4, _tree())
+    os.makedirs(os.path.join(d, "step_00000007.tmp"))   # crashed writer
+    os.makedirs(os.path.join(d, "step_00000009"))       # no manifest at all
+    assert ckpt.latest_step(d) == 4
+    assert ckpt.latest_step(d, max_step=3) == 1
+    assert ckpt.latest_step(d, max_step=0) is None
+    assert ckpt.latest_step(d, verified=False) == 9     # name-only mode
+
+
+# ---------------------------------------------------------------------------
+# Crash injection: a kill at every protocol point leaves a resumable dir
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("point", ["mid_leaf_write", "pre_rename"])
+def test_crash_before_rename_preserves_previous(tmp_path, point):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    ckpt.set_crash_point(point)
+    with pytest.raises(ckpt.CrashInjected):
+        ckpt.save(d, 2, _tree(2.0))
+    assert ckpt.latest_step(d) == 1              # torn write never counts
+    out, _ = ckpt.restore(d, _tree())
+    assert float(out["w"][0, 1]) == 1.0
+    ckpt.save(d, 2, _tree(2.0))                  # retry after "restart"
+    assert ckpt.latest_step(d) == 2
+
+
+def test_crash_post_rename_checkpoint_is_complete(tmp_path):
+    d = str(tmp_path)
+    ckpt.set_crash_point("post_rename")
+    with pytest.raises(ckpt.CrashInjected):
+        ckpt.save(d, 1, _tree())
+    assert ckpt.latest_step(d) == 1
+    assert not ckpt.verify(d)[1]
+
+
+def test_crash_while_overwriting_same_step(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 3, _tree())
+    ckpt.set_crash_point("pre_rename")
+    with pytest.raises(ckpt.CrashInjected):
+        ckpt.save(d, 3, _tree(9.0))
+    # The overwrite died before the swap: the original must still verify.
+    assert ckpt.latest_step(d) == 3
+    out, _ = ckpt.restore(d, _tree(), step=3)
+    assert float(out["w"][0, 1]) == 1.0
+
+
+def test_crash_mid_prune_keeps_newest(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        ckpt.save(d, s, _tree(float(s)))
+    ckpt.set_crash_point("mid_prune")
+    with pytest.raises(ckpt.CrashInjected):
+        ckpt.prune(d, keep=1)
+    assert ckpt.latest_step(d) == 3
+    out, _ = ckpt.restore(d, _tree())
+    assert float(out["w"][0, 1]) == 3.0
+
+
+def test_prune_keeps_only_verified_and_clamps(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        ckpt.save(d, s, _tree(float(s)))
+    # Truncate the newest: shallow verification catches the size mismatch.
+    path = os.path.join(d, "step_00000003", "w.npy")
+    with open(path, "r+b") as f:
+        f.truncate(10)
+    removed = ckpt.prune(d, keep=0)              # clamps to keep >= 1
+    assert ckpt.latest_step(d) == 2              # newest *verified* survives
+    assert 3 in removed and 1 in removed
+
+
+# ---------------------------------------------------------------------------
+# Stream-level preemption survival: kill → resume is bit-exact
+# ---------------------------------------------------------------------------
+
+
+N_CHIPS, BATCH, T, WINDOW = 4, 1, 8, 2
+
+
+@pytest.fixture(scope="module")
+def net():
+    cfg = netlib.NetworkConfig(n_chips=N_CHIPS, capacity=256)
+    params = netlib.init_feedforward(KEY, cfg)._replace(
+        router=identity_router(N_CHIPS))
+    state = netlib.init_state(cfg, BATCH)
+    drives = (jax.random.uniform(
+        jax.random.PRNGKey(3), (T, N_CHIPS, BATCH, cfg.chip.n_rows))
+        < 0.3).astype(jnp.float32)
+    plan = fablib.compile_fabric(fablib.star_spec(N_CHIPS, cfg.capacity))
+    pcfg = STDPConfig(lr_pot=0.3, lr_dep=0.2)
+    return cfg, params, state, drives, plan, pcfg
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point", ckpt.CRASH_POINTS)
+def test_kill_resume_bit_exact(tmp_path, net, point):
+    """The process dies at ``point`` while checkpointing (or pruning) after
+    3 windows; a fresh process resumes from the newest valid checkpoint and
+    the tail is bit-exact with the uninterrupted plastic run."""
+    cfg, params, state0, drives, plan, pcfg = net
+    d = str(tmp_path)
+    ref = stlib.run_stream(params, state0, drives, cfg, fabric=plan,
+                           plasticity=pcfg)
+
+    # Windows 0..2 complete normally (checkpoints at steps 0, 2, 4)...
+    out_pre, recs = elastic.run_supervised_stream(
+        params, state0, drives[:6], cfg, fabric=plan, window=WINDOW,
+        ckpt_dir=d, plasticity=pcfg, async_checkpoint=False)
+    assert recs == [] and ckpt.latest_step(d) == 4
+    # ...then the kill lands mid-protocol on the step-6 boundary.
+    fp = elastic.stream_fingerprint(cfg, fabric=plan, plasticity=pcfg)
+    ckpt.set_crash_point(point)
+    with pytest.raises(ckpt.CrashInjected):
+        if point == "mid_prune":
+            ckpt.prune(d, keep=1)
+        else:
+            elastic.save_stream_state(d, 6, out_pre.state,
+                                      plasticity=out_pre.plasticity,
+                                      fingerprint=fp)
+    expect_step = {"mid_leaf_write": 4, "pre_rename": 4,
+                   "post_rename": 6, "mid_prune": 4}[point]
+
+    out, info = elastic.resume_supervised_stream(
+        params, state0, drives, cfg, fabric=plan, window=WINDOW,
+        ckpt_dir=d, plasticity=pcfg, async_checkpoint=False)
+    s = info["resumed_step"]
+    assert s == expect_step
+    np.testing.assert_array_equal(np.asarray(out.spikes),
+                                  np.asarray(ref.spikes[s:]))
+    np.testing.assert_array_equal(np.asarray(out.dropped),
+                                  np.asarray(ref.dropped[s:]))
+    _assert_trees_equal(out.state, ref.state)
+    _assert_trees_equal(out.plasticity, ref.plasticity)
+
+
+@pytest.mark.slow
+def test_kill_resume_with_fault_schedule(tmp_path, net):
+    """Preemption composes with ISSUE 6's link-fault schedules: the resumed
+    run sees the remaining fault windows exactly as one long run would."""
+    cfg, params, state0, drives, plan, pcfg = net
+    d = str(tmp_path)
+    faults = (fablib.FaultEvent(level=0, edge=1, kill_step=3,
+                                restore_step=7),)
+    ref = stlib.run_stream(params, state0, drives, cfg, fabric=plan,
+                           plasticity=pcfg, faults=faults)
+    elastic.run_supervised_stream(
+        params, state0, drives[:4], cfg, fabric=plan, window=WINDOW,
+        ckpt_dir=d, plasticity=pcfg, faults=faults, async_checkpoint=False)
+    out, info = elastic.resume_supervised_stream(
+        params, state0, drives, cfg, fabric=plan, window=WINDOW,
+        ckpt_dir=d, plasticity=pcfg, faults=faults, async_checkpoint=False)
+    s = info["resumed_step"]
+    assert s == 2                                # last boundary of [:4]
+    np.testing.assert_array_equal(np.asarray(out.spikes),
+                                  np.asarray(ref.spikes[s:]))
+    np.testing.assert_array_equal(np.asarray(out.unroutable),
+                                  np.asarray(ref.unroutable[s:]))
+    _assert_trees_equal(out.state, ref.state)
+    _assert_trees_equal(out.plasticity, ref.plasticity)
+
+
+def test_resume_refuses_fingerprint_mismatch(tmp_path, net):
+    cfg, params, state0, drives, plan, pcfg = net
+    d = str(tmp_path)
+    elastic.run_supervised_stream(
+        params, state0, drives[:2], cfg, fabric=plan, window=WINDOW,
+        ckpt_dir=d, plasticity=pcfg, async_checkpoint=False)
+    other = netlib.NetworkConfig(n_chips=N_CHIPS, capacity=512)
+    with pytest.raises(ckpt.CheckpointError, match="fingerprint"):
+        elastic.resume_supervised_stream(
+            params, state0, drives, other, fabric=plan, window=WINDOW,
+            ckpt_dir=d, plasticity=pcfg)
+
+
+def test_restore_refuses_to_drop_plasticity(tmp_path, net):
+    cfg, params, state0, drives, plan, pcfg = net
+    d = str(tmp_path)
+    out = stlib.run_stream(params, state0, drives[:2], cfg, fabric=plan,
+                           plasticity=pcfg)
+    elastic.save_stream_state(d, 2, out.state, plasticity=out.plasticity)
+    with pytest.raises(ckpt.CheckpointError, match="plasticity"):
+        elastic.restore_stream_state(d, state0, step=2)
+    ck = elastic.restore_stream_checkpoint(
+        d, state0, step=2,
+        plasticity_like=netlib.init_stream_plasticity(params, BATCH))
+    _assert_trees_equal(ck.plasticity, out.plasticity)
+
+
+def test_rng_round_trips_typed_keys(tmp_path, net):
+    cfg, params, state0, drives, plan, pcfg = net
+    d = str(tmp_path)
+    rng = jax.random.key(123)
+    elastic.save_stream_state(d, 0, state0, rng=rng)
+    ck = elastic.restore_stream_checkpoint(d, state0, step=0)
+    assert jnp.issubdtype(ck.rng.dtype, jax.dtypes.prng_key)
+    np.testing.assert_array_equal(np.asarray(jax.random.key_data(ck.rng)),
+                                  np.asarray(jax.random.key_data(rng)))
+
+
+@pytest.mark.slow
+def test_supervised_cadence_and_retention(tmp_path, net):
+    """Sparse checkpoint cadence + bounded retention still recovers, and
+    the windowed outputs stay bit-exact with the bare scan (async writer)."""
+    cfg, params, state0, drives, plan, pcfg = net
+    d = str(tmp_path)
+    ref = stlib.run_stream(params, state0, drives, cfg, fabric=plan,
+                           plasticity=pcfg)
+    out, recs = elastic.run_supervised_stream(
+        params, state0, drives, cfg, fabric=plan, window=WINDOW,
+        ckpt_dir=d, plasticity=pcfg, ckpt_every=2, keep=1)
+    assert recs == []
+    np.testing.assert_array_equal(np.asarray(out.spikes),
+                                  np.asarray(ref.spikes))
+    _assert_trees_equal(out.plasticity, ref.plasticity)
+    steps = sorted(ckpt._candidates(d))
+    assert steps == [4]                          # widx 0, 2 saved; keep=1
+    assert not ckpt.verify(d)[4]

@@ -243,3 +243,79 @@ def test_run_stream_rejects_bad_configs():
         stlib.run_stream(params, state, drives, cfg, topology="hierarchical")
     with pytest.raises(ValueError):
         stlib.run_stream(params, state, drives, cfg, mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# Online plasticity in the scan (ISSUE 8): the PPU hybrid-plasticity loop
+# threaded through ``run_stream`` as checkpointable carry
+# ---------------------------------------------------------------------------
+
+
+def test_stdp_stream_step_reduces_to_stdp_step():
+    """With one chip and batch 1 the network-wide SIMD walk is exactly the
+    single-array ``stdp_step`` reference."""
+    from repro.snn import plasticity as plaslib
+
+    n_rows, n_neurons = 5, 7
+    cfg = plaslib.STDPConfig(lr_pot=0.4, lr_dep=0.3)
+    key = jax.random.fold_in(KEY, 21)
+    w0 = jax.random.uniform(key, (n_rows, n_neurons)) * 10.0
+    st_ref = plaslib.init_stdp(n_rows, n_neurons)
+    st_net = plaslib.init_stream_stdp(w0[None], batch=1)
+    w_ref = w0
+    for t in range(4):
+        pre = (jax.random.uniform(jax.random.fold_in(key, 2 * t),
+                                  (n_rows,)) < 0.5).astype(jnp.float32)
+        post = (jax.random.uniform(jax.random.fold_in(key, 2 * t + 1),
+                                   (n_neurons,)) < 0.5).astype(jnp.float32)
+        st_ref, w_ref = plaslib.stdp_step(st_ref, w_ref, pre, post, cfg)
+        st_net = plaslib.stdp_stream_step(st_net, pre[None, None],
+                                          post[None, None], cfg)
+        assert jnp.allclose(st_net.weights[0], w_ref)
+        assert jnp.allclose(st_net.trace_pre[0, 0], st_ref.trace_pre)
+        assert jnp.allclose(st_net.trace_post[0, 0], st_ref.trace_post)
+
+
+@pytest.mark.slow
+def test_run_stream_plasticity_windows_chain_bit_exact():
+    """Two plastic windows chained through ``plasticity_state`` (and the
+    carried ``NetworkState``) equal one long plastic run on every
+    observable — the property stream checkpointing relies on — and the
+    weights actually evolve under a driving stimulus."""
+    from repro.snn.plasticity import STDPConfig
+
+    cfg = netlib.NetworkConfig(n_chips=3, capacity=512)
+    params = init_feedforward(KEY, cfg)._replace(router=identity_router(3))
+    drives = _stim_drives(jax.random.fold_in(KEY, 22), 6, 3, 2,
+                          cfg.chip.n_rows, p=0.5)
+    state = netlib.init_state(cfg, 2)
+    pcfg = STDPConfig(lr_pot=0.5, lr_dep=0.4)
+
+    ref = stlib.run_stream(params, state, drives, cfg, plasticity=pcfg)
+    assert ref.plasticity is not None
+    assert not jnp.array_equal(ref.plasticity.weights, params.chips.weights)
+
+    a = stlib.run_stream(params, state, drives[:3], cfg, plasticity=pcfg)
+    b = stlib.run_stream(params, a.state, drives[3:], cfg, plasticity=pcfg,
+                         plasticity_state=a.plasticity)
+    assert jnp.array_equal(jnp.concatenate([a.spikes, b.spikes]), ref.spikes)
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, b.plasticity,
+                                     ref.plasticity))
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, b.state, ref.state))
+
+
+def test_run_stream_plasticity_off_is_inert():
+    """Without ``plasticity`` the output carries no plasticity leaf and the
+    program is unchanged; ``plasticity_state`` alone is rejected."""
+    from repro.snn import plasticity as plaslib
+
+    cfg = netlib.NetworkConfig(n_chips=2)
+    params = init_feedforward(KEY, cfg)
+    drives = _stim_drives(jax.random.fold_in(KEY, 23), 3, 2, 1,
+                          cfg.chip.n_rows)
+    state = netlib.init_state(cfg, 1)
+    out = stlib.run_stream(params, state, drives, cfg)
+    assert out.plasticity is None
+    ps = plaslib.init_stream_stdp(params.chips.weights, batch=1)
+    with pytest.raises(ValueError, match="plasticity_state"):
+        stlib.run_stream(params, state, drives, cfg, plasticity_state=ps)
