@@ -561,8 +561,118 @@ def _timed_call(fn):
     return time.perf_counter() - t0
 
 
+# ---------------------------------------------------------------------------
+# Routed exchange mode: ppermute edge schedule vs the broadcast gather
+# ---------------------------------------------------------------------------
+#
+# The ``stream_routed_*`` family (ISSUE 9) prices the destination-routed
+# wire strategy (``exchange_mode="routed"``: each merge reads only its
+# enabled source entities through a static edge schedule) against the
+# default broadcast-gather plane, on the same engine, traffic and uplink
+# sizing as ``run``'s headline case.  Bit-exactness is gated first — every
+# scenario the fabric verifier lints (healthy + degraded), timed and
+# untimed, all four drop fields — then both strategies are timed in one
+# interleaved loop (``core.fabric.pick_exchange_mode``), so the recorded
+# ratio is container-noise-proof: both modes see the same wall-clock drift.
+
+ROUTED_GATE_STEPS = 8           # parity gate rounds (cheap, full coverage)
+
+
+def _build_mode_scan(state, plan, timing=None):
+    """engine="merge" scan of the stacked round — the same engine under
+    both exchange modes, so the recorded ratio isolates the wire strategy
+    (the 1-level star's fused fast path is gather-only and would be an
+    engine change, not a mode change)."""
+    def _scan(fr):
+        def body(_, fr_t):
+            out, drops = fablib.fabric_route_step(
+                state, EventFrame(*fr_t), plan, timing=timing,
+                engine="merge")
+            outs = ((out.labels, out.valid, drops) if timing is None
+                    else (out.labels, out.valid, out.times, drops))
+            return None, outs
+        _, outs = jax.lax.scan(body, None, tuple(fr))
+        return outs
+    return jax.jit(_scan)
+
+
+def run_routed(verbose: bool = True, n_steps: int = N_STEPS):
+    """The ``stream_routed_*`` family: routed vs gather, parity then price."""
+    from repro.analysis.scenarios import benchmark_plans
+    from repro.core import pick_exchange_mode, with_exchange_mode
+
+    key = jax.random.key(0)
+    timing = timed_wire()
+    results = {}
+    rows = []
+
+    # -- parity gate: routed must be bit-exact on every linted scenario ----
+    checked = 0
+    for sc_name, plan, cap_in in benchmark_plans(OCC_HEADLINE):
+        state = identity_router(plan.n_nodes)
+        frames = _frames_for(plan.n_nodes, cap_in, ROUTED_GATE_STEPS,
+                             jax.random.fold_in(key, checked), OCC_HEADLINE)
+        for tmg in (None, timing):
+            g = _build_mode_scan(state, with_exchange_mode(plan, "gather"),
+                                 tmg)(frames)
+            r = _build_mode_scan(state, with_exchange_mode(plan, "routed"),
+                                 tmg)(frames)
+            g_l, g_v, r_l, r_v = g[0], g[1], r[0], r[1]
+            assert jnp.array_equal(g_v, r_v), (sc_name, tmg is not None)
+            assert jnp.array_equal(jnp.where(g_v, g_l, 0),
+                                   jnp.where(r_v, r_l, 0)), (
+                f"routed labels diverge from gather on {sc_name}")
+            if tmg is not None:
+                assert jnp.array_equal(jnp.where(g_v, g[2], 0),
+                                       jnp.where(r_v, r[2], 0)), (
+                    f"routed timestamps diverge from gather on {sc_name}")
+            for fld in ("congestion", "uplink", "unroutable", "rerouted"):
+                assert jnp.array_equal(getattr(g[-1], fld),
+                                       getattr(r[-1], fld)), (
+                    f"routed {fld} drops diverge from gather on {sc_name}")
+        checked += 1
+    if verbose:
+        print(f"exchange_stream[routed parity],0,bit-exact on {checked} "
+              f"scenarios (timed+untimed, all drop fields)")
+
+    # -- price: interleaved same-run timing per headline topology ----------
+    for name, fan_ins, cap_in, cap in CASES:
+        n = math.prod(fan_ins)
+        state = identity_router(n)
+        tag = f"[{name},T={n_steps}]"
+        frames = _frames_for(n, cap_in, n_steps,
+                             jax.random.fold_in(key, n), OCC_HEADLINE)
+        plan = _plan_for(fan_ins, cap,
+                         _level_caps(fan_ins, cap_in, OCC_HEADLINE))
+        picked, seconds = pick_exchange_mode(state, frames, plan)
+        routed_us = seconds["routed"] / n_steps * 1e6
+        gather_us = seconds["gather"] / n_steps * 1e6
+        speedup = seconds["gather"] / seconds["routed"]
+        results[f"stream_routed_scan_us_per_step{tag}"] = routed_us
+        results[f"stream_routed_gather_us_per_step{tag}"] = gather_us
+        results[f"stream_routed_speedup{tag}"] = speedup
+        results[f"stream_routed_winner_is_routed{tag}"] = float(
+            picked.exchange_mode == "routed")
+        rows.append((name, n_steps, routed_us, gather_us, speedup))
+        if verbose:
+            print(f"exchange_stream[{name} routed scan],{routed_us:.0f},"
+                  f"us/step ({speedup:.2f}x same-run gather "
+                  f"{gather_us:.0f}; winner={picked.exchange_mode})")
+        if name == "EXT_4CASE_96CHIP":
+            assert speedup > 1.0, (
+                f"routed mode must beat the same-run gather baseline on "
+                f"{name}: routed {routed_us:.0f} vs gather "
+                f"{gather_us:.0f} us/step")
+
+    path = _merge_bench_json(results)
+    if verbose:
+        print(f"exchange_stream[routed json],0,wrote {path}")
+    return rows
+
+
 if __name__ == "__main__":
     run()
     run_timed()
     run_degraded()
     run_ckpt()
+    run_routed()

@@ -49,11 +49,17 @@ def run(verbose: bool = True):
         one = jax.tree.map(lambda p: L.Param(p.value[0], p.axes[1:]),
                            params["moe"], is_leaf=L.is_param)["moe"]
         x = jax.random.normal(key, (4, 64, c.d_model), jnp.float32)
-        t0 = time.perf_counter()
-        y, metrics = jax.jit(lambda pp, xx: moelib.moe_forward(pp, xx, c))(
-            one, x)
+        fwd = jax.jit(lambda pp, xx: moelib.moe_forward(pp, xx, c))
+        y, metrics = fwd(one, x)                 # compile + warm
         jax.block_until_ready(y)
-        us = (time.perf_counter() - t0) * 1e6
+        # Steady-state per-call time: the first call above includes
+        # trace+compile and must never be the reported number.
+        n_calls = 10
+        t0 = time.perf_counter()
+        for _ in range(n_calls):
+            y, metrics = fwd(one, x)
+        jax.block_until_ready(y)
+        us = (time.perf_counter() - t0) / n_calls * 1e6
         dropped = float(metrics["dropped_frac"])
         rows.append(("capacity_sweep", cf, dropped, us))
         if verbose:

@@ -21,6 +21,9 @@ from the calibration ratio instead of a prose footnote.
   stream_ckpt             §III    durable long-run streams: crash-consistent
                                   checkpoint cost + windowed-supervision
                                   overhead (full plastic stream state)
+  stream_routed           §III/§V routed exchange mode (ppermute edge
+                                  schedule) vs broadcast gather: parity
+                                  gate + interleaved same-run timing
   moe_dispatch            DESIGN §4  event-frame dispatch at LM scale
   roofline_table          §Roofline  all dry-run cells (needs results/)
 """
@@ -48,6 +51,7 @@ ALL = [
     ("stream_timed", exchange_stream.run_timed),
     ("stream_degraded", exchange_stream.run_degraded),
     ("stream_ckpt", exchange_stream.run_ckpt),
+    ("stream_routed", exchange_stream.run_routed),
     ("moe_dispatch", moe_dispatch.run),
     ("grad_compression", grad_compression.run),
     ("roofline_table", roofline_table.run),

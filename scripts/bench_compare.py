@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Diff two BENCH_history.jsonl records — only when they are comparable.
+
+Benchmark numbers recorded in different containers are not comparable:
+PR 4's 938 -> 3750 us "regression" was the machine moving, not the
+datapath.  Every run stamps `environment.calibration_matmul_us` (a fixed
+jit'd-matmul microbenchmark) into its history record, so two records are
+comparable exactly when their calibrations agree.  This tool refuses to
+diff (exit 2) unless they match within a relative tolerance, then prints a
+per-key old/new/ratio table for the numeric results.
+
+Usage:
+    python scripts/bench_compare.py                  # last two runs
+    python scripts/bench_compare.py -2 -1            # explicit indices
+    python scripts/bench_compare.py 0 -1 --prefix stream_routed
+    python scripts/bench_compare.py --history BENCH_history.jsonl --tol 0.1
+
+Record selectors index into the history file (negative = from the end,
+like Python lists).  Exit codes: 0 = diff printed, 1 = usage/data error,
+2 = records not comparable (calibration mismatch).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_TOL = 0.25        # relative: |a - b| / min(a, b)
+
+
+def load_history(path: Path) -> list[dict]:
+    if not path.exists():
+        sys.exit(f"error: no history file at {path}")
+    records = []
+    for i, line in enumerate(path.read_text().splitlines()):
+        if not line.strip():
+            continue
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            print(f"warning: skipping malformed record on line {i + 1}: {e}",
+                  file=sys.stderr)
+    if not records:
+        sys.exit(f"error: {path} holds no parseable records")
+    return records
+
+
+def pick(records: list[dict], sel: int, label: str) -> dict:
+    try:
+        return records[sel]
+    except IndexError:
+        sys.exit(f"error: {label} selector {sel} out of range "
+                 f"({len(records)} records)")
+
+
+def calibration(rec: dict) -> float | None:
+    env = rec.get("environment") or rec.get("_environment") or {}
+    val = env.get("calibration_matmul_us")
+    return float(val) if val is not None else None
+
+
+def comparable(old: dict, new: dict, tol: float) -> tuple[bool, str]:
+    a, b = calibration(old), calibration(new)
+    if a is None or b is None:
+        return False, ("one record carries no calibration_matmul_us stamp "
+                       "— cannot establish the machines match")
+    drift = abs(a - b) / min(a, b)
+    msg = (f"calibration_matmul_us: old={a:.0f} new={b:.0f} "
+           f"(drift {drift * 100:.1f}%, tolerance {tol * 100:.0f}%)")
+    return drift <= tol, msg
+
+
+def numeric_results(rec: dict) -> dict[str, float]:
+    out = {}
+    for k, v in (rec.get("results") or {}).items():
+        if isinstance(v, bool):
+            out[k] = float(v)
+        elif isinstance(v, (int, float)):
+            out[k] = float(v)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("old", nargs="?", type=int, default=-2,
+                    help="history index of the baseline record (default -2)")
+    ap.add_argument("new", nargs="?", type=int, default=-1,
+                    help="history index of the candidate record (default -1)")
+    ap.add_argument("--history", type=Path,
+                    default=Path(__file__).resolve().parent.parent
+                    / "BENCH_history.jsonl",
+                    help="path to BENCH_history.jsonl")
+    ap.add_argument("--prefix", default="",
+                    help="only diff result keys with this prefix")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="relative calibration tolerance (default "
+                         f"{DEFAULT_TOL})")
+    args = ap.parse_args(argv)
+
+    records = load_history(args.history)
+    old = pick(records, args.old, "old")
+    new = pick(records, args.new, "new")
+    print(f"old: [{args.old}] {old.get('utc', '?')}  "
+          f"benchmarks={old.get('benchmarks')}")
+    print(f"new: [{args.new}] {new.get('utc', '?')}  "
+          f"benchmarks={new.get('benchmarks')}")
+
+    ok, msg = comparable(old, new, args.tol)
+    print(msg)
+    if not ok:
+        print("REFUSING to diff: the records were measured on machines "
+              "whose calibrations disagree — any delta below would mix "
+              "datapath changes with hardware drift.", file=sys.stderr)
+        return 2
+
+    a, b = numeric_results(old), numeric_results(new)
+    keys = sorted(k for k in (set(a) | set(b))
+                  if k.startswith(args.prefix))
+    if not keys:
+        print(f"no numeric result keys match prefix {args.prefix!r}")
+        return 1
+
+    width = max(len(k) for k in keys)
+    print(f"\n{'key':<{width}}  {'old':>12}  {'new':>12}  {'ratio':>7}")
+    for k in keys:
+        ov, nv = a.get(k), b.get(k)
+        if nv is None:
+            print(f"{k:<{width}}  {ov:12.3f}  {'—':>12}  (old only)")
+            continue
+        if ov is None:
+            print(f"{k:<{width}}  {'—':>12}  {nv:12.3f}  (new only)")
+            continue
+        ratio = nv / ov if ov else float("inf")
+        flag = "" if 0.8 <= ratio <= 1.25 else "  <<"
+        print(f"{k:<{width}}  {ov:12.3f}  {nv:12.3f}  {ratio:7.3f}x{flag}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,4 +37,4 @@ echo "=== fabric static analysis (full: optimized-HLO collective audit) ==="
 python -m repro.analysis.lint -q --hlo
 
 echo "=== streaming benchmarks (3-level fabric + timed + degraded + durable) ==="
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed --only stream_degraded --only stream_ckpt
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed --only stream_degraded --only stream_ckpt --only stream_routed

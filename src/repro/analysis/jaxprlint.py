@@ -19,6 +19,12 @@ catches:
     rematerialized (literal ``iota``/``broadcast_in_dim``) inside a
     ``lax.scan`` body instead of riding the carry/closure.
 
+Routed-mode programs (``exchange_mode="routed"``) get their own pass,
+``check_routed``: *zero* all_gathers (every wire byte moves along hop-graph
+edges via ``ppermute``), the per-edge byte budget
+(``sum_i (fan_in_i - 1) * len_i * 2``), and the int16 wire dtype on every
+permuted plane.
+
 ``fabric_exchange`` needs one device per leaf, so the linter traces a
 structure-preserving *shrunk twin* of each plan (every fan-in clamped to
 2, capacities re-clamped, one dead edge kept per degraded level): the
@@ -137,6 +143,64 @@ def gather_budget_bytes(plan: FabricPlan, cap_in: int, *,
     lens = stream_lengths(plan, cap_in)
     word = WIRE_WORD_BYTES + (4 if timed else 0)
     return sum(lvl.fan_in * ln * word
+               for lvl, ln in zip(plan.levels, lens))
+
+
+def check_routed(closed, path: str, *, plan: FabricPlan | None = None,
+                 cap_in: int | None = None,
+                 wire_dtypes: tuple[str, ...] = WIRE_DTYPES,
+                 timed: bool = False) -> list[Diagnostic]:
+    """Routed-mode program invariants: zero all_gathers (every wire byte
+    moves edge-to-edge via ``ppermute``), the per-edge byte budget, and the
+    int16 wire dtype on every permuted plane."""
+    diags = []
+    n_gathers = 0
+    total_bytes = 0
+    for eqn in iter_eqns(closed.jaxpr):
+        if eqn.primitive.name == "all_gather":
+            n_gathers += 1
+            continue
+        if eqn.primitive.name != "ppermute":
+            continue
+        aval = eqn.invars[0].aval
+        total_bytes += _aval_bytes(eqn.outvars[0].aval)
+        allowed = wire_dtypes + (("int32",) if timed else ())
+        if str(aval.dtype) not in allowed:
+            diags.append(Diagnostic(
+                "program.gather-widening", f"{path}/ppermute",
+                f"ppermute moves {aval.dtype} (shape {aval.shape}) — the "
+                f"routed wire format is int16 words; a pre-exchange "
+                f"widening multiplies per-edge bytes"))
+    if n_gathers:
+        diags.append(Diagnostic(
+            "program.gather-count", path,
+            f"{n_gathers} all_gather(s) in a routed program — routed mode "
+            f"exchanges only along hop-graph edges (ppermute); a gather "
+            f"reintroduces O(n_chips) broadcast bandwidth"))
+    if plan is not None and cap_in is not None:
+        budget = routed_budget_bytes(plan, cap_in, timed=timed)
+        if total_bytes > budget:
+            diags.append(Diagnostic(
+                "program.collective-budget", path,
+                f"routed program permutes {total_bytes} bytes/round but the "
+                f"plan's edge schedule budgets {budget} "
+                f"((fan_in - 1) x stream_len x {WIRE_WORD_BYTES}B per "
+                f"level)"))
+    return diags
+
+
+def routed_budget_bytes(plan: FabricPlan, cap_in: int, *,
+                        timed: bool = False) -> int:
+    """Per-edge wire budget of one *routed* exchange round, per leaf: each
+    level runs ``fan_in - 1`` ring rotations, each shipping this child's
+    packed stream to one sibling (the own slot never travels), as int16
+    wire words (plus the int32 timestamp plane when timed).  The routed /
+    gather byte ratio is therefore ``(fan_in - 1) / fan_in`` per level in
+    the worst case — and lower when route-enable pruning drops edges at
+    the top level."""
+    lens = stream_lengths(plan, cap_in)
+    word = WIRE_WORD_BYTES + (4 if timed else 0)
+    return sum((lvl.fan_in - 1) * ln * word
                for lvl, ln in zip(plan.levels, lens))
 
 
@@ -269,6 +333,34 @@ def lint_fabric_exchange(plan: FabricPlan, cap_in: int,
     closed, _ = trace_fabric_exchange(twin, cap_small)
     return (check_f64(closed, path)
             + check_gathers(closed, path, plan=twin, cap_in=cap_small)
+            + check_scan_consts(closed, path))
+
+
+def lint_fabric_exchange_routed(plan: FabricPlan, cap_in: int,
+                                path: str = "fabric_exchange[routed]"
+                                ) -> list[Diagnostic]:
+    """Trace the shard_map'd round of the plan's shrunk twin in
+    ``exchange_mode="routed"`` and pin the routed invariants: zero
+    all_gathers, ppermute-only wire traffic within the per-edge byte
+    budget, int16 wire words on every permuted plane.  Device-count
+    handling as in ``lint_fabric_exchange``."""
+    import jax
+
+    from repro.core.fabric import with_exchange_mode
+
+    twin, cap_small = shrink_plan(plan, cap_in)
+    twin = with_exchange_mode(twin, "routed")
+    if len(jax.devices()) < twin.n_nodes:
+        return [Diagnostic(
+            "program.devices", path,
+            f"skipped: {twin.n_nodes} devices needed, "
+            f"{len(jax.devices())} available (run via "
+            f"`python -m repro.analysis.lint`, which forces "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+            WARNING)]
+    closed, _ = trace_fabric_exchange(twin, cap_small)
+    return (check_f64(closed, path)
+            + check_routed(closed, path, plan=twin, cap_in=cap_small)
             + check_scan_consts(closed, path))
 
 

@@ -6,7 +6,9 @@ degraded):
   * plan verifier   (``planlint``)    — invariants on each compiled plan;
   * program lint    (``jaxprlint``)   — jaxpr weight-class checks on
     ``fabric_route_step``, ``fabric_exchange`` (shrunk twins on 8 virtual
-    CPU devices) and ``run_stream``;
+    CPU devices, both ``gather`` and ``routed`` exchange modes — the
+    routed twin pins zero all_gathers and the per-edge ppermute budget)
+    and ``run_stream``;
   * kernel checker  (``kernelcheck``) — pack-unit write-set model check at
     every plan capacity + Pallas grid tilings of the router kernels;
   * suppression lint — stale/undocumented waivers fail the run.
@@ -30,6 +32,7 @@ if "jax" not in sys.modules:
 
 from repro.analysis import hlo as hlolib
 from repro.analysis import jaxprlint, kernelcheck, planlint
+from repro.core import fabric as fablib
 from repro.analysis.diagnostics import (Diagnostic, WARNING,
                                         apply_suppressions)
 from repro.analysis.scenarios import benchmark_plans
@@ -80,6 +83,9 @@ def run_lint(hlo: bool = False, verbose: bool = False) -> list[Diagnostic]:
         diags += planlint.lint_plan(sc.plan, sc.cap_in, sc.name)
         diags += jaxprlint.lint_route_step(
             sc.plan, sc.cap_in, f"{sc.name}/fabric_route_step")
+        diags += jaxprlint.lint_route_step(
+            fablib.with_exchange_mode(sc.plan, "routed"), sc.cap_in,
+            f"{sc.name}/fabric_route_step[routed]")
         # One shrunk-twin exchange lint per health signature (the twin only
         # depends on the level structure + which levels carry dead edges).
         sig = (sc.name.split("/")[0],
@@ -89,6 +95,8 @@ def run_lint(hlo: bool = False, verbose: bool = False) -> list[Diagnostic]:
             exchange_seen.add(str(sig))
             diags += jaxprlint.lint_fabric_exchange(
                 sc.plan, sc.cap_in, f"{sc.name}/fabric_exchange")
+            diags += jaxprlint.lint_fabric_exchange_routed(
+                sc.plan, sc.cap_in, f"{sc.name}/fabric_exchange[routed]")
             if hlo:
                 diags += _hlo_pass(sc)
         capacities.add(sc.plan.capacity)

@@ -16,6 +16,7 @@ from repro.core.routing import (  # noqa: F401
 from repro.core.fabric import (  # noqa: F401
     LevelSpec, FabricSpec, LevelPlan, FabricPlan, compile_fabric,
     fabric_route_step, fabric_exchange, FabricInterconnect,
+    EXCHANGE_MODES, with_exchange_mode, pick_exchange_mode,
     star_spec, hierarchical_spec, ext_4case_spec,
     FabricHealth, FaultEvent, full_health, degrade_spec, health_schedule,
     dead_edges_at, fault_boundaries,

@@ -21,7 +21,11 @@ hop-graph plan executed by one generic engine:
   ``exchange_fwd`` (1-level fast path) and ``merge_pack_fwd`` kernels.
 * ``fabric_exchange`` — the per-shard executor for ``shard_map``: one mesh
   axis per level (nested meshes), per-level ``all_gather`` + uplink packs,
-  16-bit wire words on every gather, same merge tail.
+  16-bit wire words on every gather, same merge tail.  Under
+  ``exchange_mode="routed"`` the gathers become per-level ``ppermute``
+  neighbor exchanges that move only the hop-graph edges (the paper's
+  point-to-point transceiver links, never a broadcast), bit-exact with the
+  gather strategy.
 * ``FabricInterconnect`` — the mesh binding (N nested axes), with
   ``exchange_fn`` / ``stream_fn`` like the legacy ``StarInterconnect``.
 
@@ -235,6 +239,13 @@ class FabricSpec:
     ``compile_fabric`` assign extension-lane detours around dead uplinks
     (the paper's 4 spare transceiver lanes); ``False`` compiles pure
     masking — dead edges drop their traffic as ``unroutable`` instead.
+    ``exchange_mode`` selects the wire strategy: ``"gather"`` broadcasts
+    each level's streams (one ``all_gather`` per level in the sharded
+    executor, full-plane merges in the stacked one); ``"routed"`` moves
+    only the hop-graph edges — ``ppermute`` neighbor exchanges per level
+    on devices, per-destination enabled-source merge schedules stacked —
+    with identical observables (see ``with_exchange_mode``,
+    ``pick_exchange_mode``).
     """
 
     levels: tuple[LevelSpec, ...]
@@ -242,6 +253,7 @@ class FabricSpec:
     window_us: float | None = None
     name: str = ""
     reroute: bool = True
+    exchange_mode: str = "gather"
 
     @property
     def n_nodes(self) -> int:
@@ -309,6 +321,11 @@ class FabricPlan:
     @property
     def compact(self) -> bool:
         return self.levels[0].link_capacity is not None
+
+    @property
+    def exchange_mode(self) -> str:
+        """Wire strategy ("gather" | "routed") — see ``FabricSpec``."""
+        return self.spec.exchange_mode
 
     @property
     def degraded(self) -> bool:
@@ -441,12 +458,18 @@ def _assign_detours(alive: np.ndarray, fan_in: int) -> np.ndarray:
     return detour
 
 
+EXCHANGE_MODES = ("gather", "routed")
+
+
 def compile_fabric(spec: FabricSpec) -> FabricPlan:
     """Compile a topology description into the static hop-graph plan."""
     if not spec.levels:
         raise ValueError("a fabric needs at least one level")
     if spec.capacity <= 0:
         raise ValueError(f"ingress capacity must be positive: {spec.capacity}")
+    if spec.exchange_mode not in EXCHANGE_MODES:
+        raise ValueError(f"unknown exchange_mode: {spec.exchange_mode!r} "
+                         f"(expected one of {EXCHANGE_MODES})")
     n_nodes = spec.n_nodes
     levels = []
     leaves = 1
@@ -501,6 +524,19 @@ def compile_fabric(spec: FabricSpec) -> FabricPlan:
                                 detour=detour, downlink_ok=down_ok))
     return FabricPlan(spec=spec, levels=tuple(levels), n_nodes=leaves,
                       capacity=spec.capacity)
+
+
+def with_exchange_mode(plan: FabricPlan, mode: str) -> FabricPlan:
+    """Copy a compiled plan under a different wire strategy.  The levels are
+    strategy-independent, so no recompile happens — the two modes share one
+    hop graph and differ only in how the executors move the wire words."""
+    if mode not in EXCHANGE_MODES:
+        raise ValueError(f"unknown exchange_mode: {mode!r} "
+                         f"(expected one of {EXCHANGE_MODES})")
+    if plan.spec.exchange_mode == mode:
+        return plan
+    return dataclasses.replace(
+        plan, spec=dataclasses.replace(plan.spec, exchange_mode=mode))
 
 
 # -- convenience spec constructors (the legacy shapes + the §V extension) ----
@@ -771,6 +807,137 @@ def _detour_penalty(lvl: LevelPlan, timing: TimedWire, valid) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Routed mode: static edge schedules (hop-graph edges only, no broadcast)
+# ---------------------------------------------------------------------------
+
+
+def _concrete_enables(enables) -> np.ndarray:
+    """Routed mode compiles a static edge schedule from the route enables."""
+    if isinstance(enables, jax.core.Tracer):
+        raise ValueError(
+            "exchange_mode='routed' compiles a static edge schedule from the "
+            "plan's route enables, which are traced here — build the plan "
+            "outside jit (concrete enables) or use exchange_mode='gather'")
+    return np.asarray(enables, dtype=bool)
+
+
+# Keyed by (n, gsize, fan_in, level>0, enables bytes); the values are device
+# arrays, so every retrace of the same plan closes over the same staged LUT
+# buffers (persistent device constants — they stay small scan constants
+# under jaxprlint's program.scan-const rule instead of fresh per-trace
+# copies).
+_ROUTED_MAP_CACHE: dict = {}
+
+
+def _routed_leaf_maps(enables, level: int, n: int, gsize: int, f: int):
+    """Static per-destination source schedule of one stacked level.
+
+    Returns ``(src_flat, live, deg)``: ``src_flat`` is int32[f·deg] — for
+    each destination child slot, the ``deg`` child slots of its enabled
+    sources in ascending order (own-subtree excluded above level 0),
+    padded with slot 0 where ``live`` (bool[n, deg], already expanded per
+    destination leaf) is False; ``deg`` is the max in-degree.  These are
+    the hop-graph edges: a route-disabled (or structurally excluded) pair
+    never enters the merge stream at all, instead of riding along
+    gated-off.
+    """
+    en = _concrete_enables(enables)
+    key = (n, gsize, f, min(level, 1), en.tobytes())
+    hit = _ROUTED_MAP_CACHE.get(key)
+    if hit is None:
+        need = en & ~np.eye(f, dtype=bool) if level > 0 else en
+        deg = max(1, int(need.sum(axis=0).max()))
+        src = np.zeros((f, deg), np.int32)
+        live = np.zeros((f, deg), bool)
+        for k in range(f):
+            js = np.flatnonzero(need[:, k])
+            src[k, :len(js)] = js
+            live[k, :len(js)] = True
+        child = (np.arange(n) // gsize) % f
+        # Concrete device arrays even when called under a trace, so the
+        # cache holds persistent buffers, not leaked tracers.
+        with jax.ensure_compile_time_eval():
+            hit = (jnp.asarray(src.reshape(-1)), jnp.asarray(live[child]),
+                   deg)
+        _ROUTED_MAP_CACHE[key] = hit
+    return hit
+
+
+def _repeat_rows(x: jax.Array, reps: int) -> jax.Array:
+    """Repeat each row ``reps`` times contiguously via broadcast+reshape."""
+    if reps == 1:
+        return x
+    r, c = x.shape
+    return jnp.broadcast_to(x[:, None, :], (r, reps, c)).reshape(r * reps, c)
+
+
+def _routed_plane(cur: jax.Array, axis_name: str, f: int,
+                  perms: tuple[tuple[tuple[int, int], ...], ...]) -> jax.Array:
+    """Reconstruct one level's [f, ...] stream plane edge-wise.
+
+    The own slot never travels (every shard already holds its entity's
+    stream); the other f-1 rows arrive over ``ppermute`` ring rotations,
+    one hop-graph edge set per rotation.  A rotation whose (src, dst) pair
+    was pruned (route-disabled at the top level) leaves that row zero —
+    int16 wire words decode as invalid, exactly like a gated-off gather
+    slot, so downstream masking and merges are unchanged.
+    """
+    plane = jnp.zeros((f,) + cur.shape, cur.dtype)
+    me = jax.lax.axis_index(axis_name)
+    plane = jax.lax.dynamic_update_index_in_dim(plane, cur, me, 0)
+    for r, perm in enumerate(perms, start=1):
+        if not perm:
+            continue
+        recv = jax.lax.ppermute(cur, axis_name, perm=perm)
+        plane = jax.lax.dynamic_update_index_in_dim(
+            plane, recv, jnp.mod(me - r, f), 0)
+    return plane
+
+
+def pick_exchange_mode(state, frames, plan: FabricPlan, *,
+                       timing: TimedWire | None = None,
+                       trials: int = 3) -> tuple[FabricPlan, dict[str, float]]:
+    """Mode-selection knob: time a scanned stacked exchange under both wire
+    strategies on this topology and traffic, and return the winning plan.
+
+    ``frames`` is an ``EventFrame`` with a leading time axis (the scanned
+    rounds).  Which strategy wins is topology- and gating-dependent —
+    routed skips the own-subtree and route-disabled segments entirely,
+    gather pays them but runs fewer, larger primitives — so callers
+    autotune per plan and keep the winner (``seconds`` maps each mode to
+    its best-of-``trials`` wall-clock for the record).
+    """
+    import time as _time
+
+    fns = {}
+    for mode in EXCHANGE_MODES:
+        p = with_exchange_mode(plan, mode)
+
+        def scanned(fr, p=p):
+            def body(_, fr_t):
+                out, drops = fabric_route_step(state, EventFrame(*fr_t), p,
+                                               timing=timing, engine="merge")
+                return None, (out.labels, out.valid, drops)
+            return jax.lax.scan(body, None, tuple(fr))[1]
+
+        fns[mode] = jax.jit(scanned)
+        jax.block_until_ready(fns[mode](frames))       # compile + warm
+    # Interleave the trials (A B A B ...) rather than timing each mode in a
+    # block: container wall-clock drifts on the tens-of-seconds scale, and
+    # interleaving puts both modes under the same drift before the per-mode
+    # minimum is taken.
+    seconds = dict.fromkeys(fns, float("inf"))
+    for _ in range(trials):
+        for mode, fn in fns.items():
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(frames))
+            seconds[mode] = min(seconds[mode],
+                                _time.perf_counter() - t0)
+    winner = min(seconds, key=seconds.get)
+    return with_exchange_mode(plan, winner), seconds
+
+
+# ---------------------------------------------------------------------------
 # Stacked executor: all leaves' frames on one device
 # ---------------------------------------------------------------------------
 
@@ -788,7 +955,11 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
         ``rev_tables`` (``aggregator.RouterState``; its ``route_enables``
         are ignored — enables live in the plan).
       frames: per-leaf egress frames, arrays shaped [n_nodes, cap_in].
-      plan: compiled hop graph (``compile_fabric``).
+      plan: compiled hop graph (``compile_fabric``).  Its ``exchange_mode``
+        picks the merge schedule — ``"routed"`` builds each destination's
+        stream from its enabled source entities only (a static edge
+        schedule; needs concrete route enables) instead of gating a full
+        broadcast plane, with bit-identical observables.
       use_fused: route the merge through the fused kernels (default: the
         ``REPRO_FUSED_EXCHANGE`` env flag, on).
       timing: timed datapath (``latency.timed_wire``) — ``frames.times`` are
@@ -822,11 +993,13 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
         raise ValueError(f"frames carry {n} leaf streams but the plan wires "
                          f"{plan.n_nodes}")
 
+    routed = plan.exchange_mode == "routed"
+
     # Fast path: the plain 1-level star is the original fused single-round
     # kernel (bit-exact with the merge engine, pinned by the parity battery).
     if (engine == "auto" and len(levels) == 1 and timing is None and use_fused
             and levels[0].link_capacity is None and not plan.degraded
-            and health is None):
+            and health is None and not routed):
         from repro.kernels.spike_router.ops import fused_exchange
 
         out_l, out_v, dropped = fused_exchange(
@@ -897,41 +1070,84 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
             recv_ok = d_ok if recv_ok is None else recv_ok & d_ok
 
         s_len = f * cur_len
-        # S_i per tier-(i+1) entity: the concat of its children's U_i.
-        s_l = cur_l.reshape(n_grp, s_len)
-        s_v = cur_v.reshape(n_grp, f, cur_len)
         anc = leaf // gnext                   # tier-(i+1) ancestor of each leaf
-        child = ent % f                       # leaf's child slot at this level
-        gate = lvl.enables.T[child]           # [n, f] src child → this dest
-        if i > 0:
-            gate = gate & (jnp.arange(f)[None, :] != child[:, None])
-        if n_grp == 1:
-            # Top-of-tree streams stay shared views (the hardware broadcasts
-            # a wire, not a buffer); only validity is per-destination.
-            part_l = jnp.broadcast_to(s_l.reshape(1, s_len), (n, s_len))
-            part_v = (s_v[0][None] & gate[:, :, None]).reshape(n, s_len)
+        if routed:
+            # Routed mode: only the hop-graph edges enter the merge — each
+            # destination selects its enabled source entities' streams via a
+            # static per-level schedule (padded to the max in-degree with
+            # all-invalid segments), so the own subtree and route-disabled
+            # pairs cost no merge work instead of riding along gated-off.
+            # The selection moves int16 wire words (validity rides the
+            # embedded bit; the enable lane is a static constant) and keeps
+            # ascending source order, matching the gather layout — the
+            # surviving valid-event sequence, and with it labels/valids/
+            # drops/timestamps, is bit-exact.
+            src_flat, live, deg = _routed_leaf_maps(lvl.enables, i, n,
+                                                    gsize, f)
+            n_ent = n_grp * f
+            sel = pack_wire16(cur_l, cur_v).reshape(n_grp, f, cur_len)
+            sel = sel[:, src_flat].reshape(n_ent, deg * cur_len)
+            # Entity → leaf expansion is a contiguous repeat (leaves of one
+            # entity are adjacent), so it lowers to broadcast+reshape — a
+            # copy loop, never a gather chain XLA would re-evaluate
+            # element-wise inside the merge fusion.
+            part_l = _repeat_rows(sel, n // n_ent)
+            part_v = jnp.broadcast_to(
+                live[:, :, None], (n, deg, cur_len)).reshape(n, deg * cur_len)
+            per_child = layout[i][:len(layout[i]) // f]
+            level_segs = list(per_child) * deg
         else:
-            part_l = s_l[anc]
-            part_v = (s_v[anc] & gate[:, :, None]).reshape(n, s_len)
+            # S_i per tier-(i+1) entity: the concat of its children's U_i.
+            s_l = cur_l.reshape(n_grp, s_len)
+            s_v = cur_v.reshape(n_grp, f, cur_len)
+            child = ent % f                   # leaf's child slot at this level
+            gate = lvl.enables.T[child]       # [n, f] src child → this dest
+            if i > 0:
+                gate = gate & (jnp.arange(f)[None, :] != child[:, None])
+            if n_grp == 1:
+                # Top-of-tree streams stay shared views (the hardware
+                # broadcasts a wire, not a buffer); only validity is
+                # per-destination.
+                part_l = jnp.broadcast_to(s_l.reshape(1, s_len), (n, s_len))
+                part_v = (s_v[0][None] & gate[:, :, None]).reshape(n, s_len)
+            else:
+                part_l = s_l[anc]
+                part_v = (s_v[anc] & gate[:, :, None]).reshape(n, s_len)
+            level_segs = list(layout[i])
         if recv_ok is not None:
-            lost = part_v.sum(axis=-1).astype(jnp.int32)
+            if routed:
+                # The enable lane is slots, not events — count the embedded
+                # valid bits for the loss attribution, like the sharded path.
+                _, w_v = unpack_wire16(part_l)
+                lost = (w_v & part_v).sum(axis=-1).astype(jnp.int32)
+            else:
+                lost = part_v.sum(axis=-1).astype(jnp.int32)
             part_v = part_v & recv_ok[:, None]
             unroutable = unroutable + jnp.where(recv_ok, 0, lost)
         parts_l.append(part_l)
         parts_v.append(part_v)
         if timing is not None:
-            s_t = cur_t.reshape(n_grp, s_len)
-            parts_t.append(jnp.broadcast_to(s_t.reshape(1, s_len), (n, s_len))
-                           if n_grp == 1 else s_t[anc])
-        seg_lens += list(layout[i])
+            if routed:
+                sel_t = cur_t.reshape(n_grp, f, cur_len)
+                sel_t = sel_t[:, src_flat].reshape(n_ent, deg * cur_len)
+                parts_t.append(_repeat_rows(sel_t, n // n_ent))
+            else:
+                s_t = cur_t.reshape(n_grp, s_len)
+                parts_t.append(
+                    jnp.broadcast_to(s_t.reshape(1, s_len), (n, s_len))
+                    if n_grp == 1 else s_t[anc])
+        seg_lens += level_segs
 
         if i + 1 < len(levels):
             # Prepare U_{i+1}: each tier-(i+1) entity uplinks its aggregated
             # stream into the next level's merge — timed events pay the
             # crossing extra plus the wait of their rank in the stream, and
             # the pack cascades (an event crossing k levels must survive
-            # every intermediate uplink).
+            # every intermediate uplink).  The cascade is ungated — it
+            # aggregates whole entity streams — so routed mode feeds it the
+            # same full concatenation as gather.
             nxt = levels[i + 1]
+            s_l = cur_l.reshape(n_grp, s_len)
             s_vf = cur_v.reshape(n_grp, s_len)
             if timing is not None:
                 okp = s_vf.astype(jnp.int32)
@@ -959,6 +1175,12 @@ def fabric_route_step(state, frames: EventFrame, plan: FabricPlan, *,
     merge_times = (jnp.concatenate(parts_t, axis=-1)
                    if timing is not None else None)
     seg_lens = tuple(seg_lens)
+    if routed and not (use_fused or timing is not None):
+        # The plain-pack fallback wants unpacked labels; the fused/timed
+        # merges take the int16 wire words (embedded valid & enable lane)
+        # directly, like the sharded executor.
+        w_l, w_v = unpack_wire16(labels)
+        labels, valid = w_l, w_v & valid
     if use_fused or timing is not None:
         ingress, dropped = _fused_merge(labels, valid, state.rev_tables,
                                         plan.capacity, seg_lens=seg_lens,
@@ -1004,9 +1226,21 @@ def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
     still clocks its gather; the words are zeroed, i.e. invalid) and
     retimes detoured streams identically.  ``health`` is the dynamic
     overlay; under ``shard_map`` pass it as replicated constants.
+
+    A ``"routed"`` plan replaces each level's broadcast gather with
+    ``ppermute`` neighbor exchanges along the hop-graph edges
+    (``_routed_plane``): the own slot never travels, and at the top level
+    route-disabled (src, dst) pairs are pruned from the rotation schedule
+    entirely (``parallel.sharding.edge_neighbor_permutes``) — non-top
+    levels keep full rotations because the ungated uplink cascade
+    aggregates whole entity streams.  Unreceived rows stay zero, which
+    decodes as invalid — the same observables as a gated-off gather slot.
     """
     if use_fused is None:
         use_fused = fused_exchange_enabled()
+    routed = plan.exchange_mode == "routed"
+    if routed:
+        from repro.parallel.sharding import edge_neighbor_permutes
     levels = plan.levels
     if len(axis_names) != len(levels):
         raise ValueError(f"{len(axis_names)} mesh axes for "
@@ -1067,9 +1301,17 @@ def fabric_exchange(frame: EventFrame, axis_names: tuple[str, ...],
                 recv_ok = d_ok if recv_ok is None else recv_ok & d_ok
         else:
             flow_ok = None
-        g_words = jax.lax.all_gather(cur_words, axis_names[i], axis=0)
-        g_times = (jax.lax.all_gather(cur_times, axis_names[i], axis=0)
-                   if timing is not None else None)
+        if routed:
+            perms = edge_neighbor_permutes(
+                _concrete_enables(lvl.enables),
+                prune=(i + 1 == len(levels)))
+            g_words = _routed_plane(cur_words, axis_names[i], f, perms)
+            g_times = (_routed_plane(cur_times, axis_names[i], f, perms)
+                       if timing is not None else None)
+        else:
+            g_words = jax.lax.all_gather(cur_words, axis_names[i], axis=0)
+            g_times = (jax.lax.all_gather(cur_times, axis_names[i], axis=0)
+                       if timing is not None else None)
         me = jax.lax.axis_index(axis_names[i])
         if flow_ok is not None:
             # Gathered slot s holds the entity (leaf // gnext) * f + s.
@@ -1205,7 +1447,18 @@ class FabricInterconnect:
         shard = P(tuple(reversed(axes)))          # top level outermost
         return round_fn, shard, (shard, shard)
 
-    def exchange_fn(self):
+    def exchange_fn(self, *, donate: bool = False):
+        """One-round dispatch ``fn(frame, fwd_tables, rev_tables)``.
+
+        ``donate=True`` marks the input frame's wire buffers as donated to
+        the jit call — the exchange may reuse their device memory for its
+        outputs (the caller's frame is consumed; don't reference it after
+        the call).  Opt-in because callers that re-dispatch the same frame
+        (timing loops, checkpoint replays) must keep their buffers alive.
+        On CPU donation is a no-op (XLA ignores it with a warning
+        suppressed by jax), so the flag only changes peak memory where an
+        accelerator backend is attached.
+        """
         from repro.compat import shard_map as _shard_map
 
         round_fn, shard, table_specs = self._round()
@@ -1220,10 +1473,16 @@ class FabricInterconnect:
         out_specs = (EventFrame(shard, shard, shard),
                      ExchangeDrops(shard, shard, shard, shard))
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
-                                  out_specs=out_specs))
+                                  out_specs=out_specs),
+                       donate_argnums=(0,) if donate else ())
 
-    def stream_fn(self):
-        """Scan T rounds inside one ``shard_map`` (leading time axis)."""
+    def stream_fn(self, *, donate: bool = False):
+        """Scan T rounds inside one ``shard_map`` (leading time axis).
+
+        ``donate=True`` donates the T-step input frame stack to the call
+        (see ``exchange_fn``); the scan carry's wire buffers are donated by
+        XLA's loop lowering regardless — this flag extends that to the
+        caller-visible frame planes."""
         from jax.sharding import PartitionSpec as P
 
         from repro.compat import shard_map as _shard_map
@@ -1245,4 +1504,5 @@ class FabricInterconnect:
         out_specs = (EventFrame(tshard, tshard, tshard),
                      ExchangeDrops(tshard, tshard, tshard, tshard))
         return jax.jit(_shard_map(fn, mesh=self.mesh, in_specs=in_specs,
-                                  out_specs=out_specs))
+                                  out_specs=out_specs),
+                       donate_argnums=(0,) if donate else ())

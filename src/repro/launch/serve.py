@@ -78,19 +78,31 @@ def generate(cfg, params, prompts: jax.Array, max_new: int,
 
 
 def _splice_prefill(cfg, dec_caches, pre_caches, s):
-    """Copy prefill K/V (length s) into the zero-initialized decode cache."""
+    """Copy prefill K/V (length s) into the zero-initialized decode cache.
+
+    Recurrent state leaves (SSM/conv) carry no sequence dim — prefill's
+    final state *is* the decode state (equal shapes, pass through).  Every
+    sequence-carrying layout ``model.init_cache`` builds keeps the sequence
+    on the second-to-last axis — KV ``[L, B, H, S, Dh]``, MLA latent
+    ``[L, B, S, rank]`` — so the splice axis is ``ndim - 2`` by
+    construction.  It must NOT be sniffed from dim sizes: a prompt length
+    that collides with ``n_heads``/``head_dim`` (e.g. ``--prompt-len 16``
+    on a 16-head config) would match the wrong axis first.
+    """
     def splice(dst, src):
-        if dst.ndim == src.ndim and dst.shape[:2] == src.shape[:2] \
-                and src.shape != dst.shape:
-            # stacked cache leaves: [L, B, ..., S, ...]; find the seq dim
-            for axis in range(2, dst.ndim):
-                if src.shape[axis] == s and dst.shape[axis] >= s:
-                    idx = [slice(None)] * dst.ndim
-                    idx[axis] = slice(0, s)
-                    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
         if src.shape == dst.shape:
             return src.astype(dst.dtype)
-        raise ValueError(f"cannot splice cache {src.shape} into {dst.shape}")
+        axis = dst.ndim - 2
+        if (dst.ndim == src.ndim and src.shape[axis] == s
+                and dst.shape[axis] >= s
+                and all(a == b for i, (a, b) in
+                        enumerate(zip(src.shape, dst.shape)) if i != axis)):
+            idx = [slice(None)] * dst.ndim
+            idx[axis] = slice(0, s)
+            return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+        raise ValueError(f"cannot splice cache {src.shape} into {dst.shape} "
+                         f"(prompt length {s}, expected the sequence on "
+                         f"axis {axis})")
     return jax.tree.map(splice, dec_caches, pre_caches)
 
 

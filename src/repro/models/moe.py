@@ -64,7 +64,10 @@ def _dispatch_combine(tokens, top_e, top_p, params, cfg: ModelConfig,
                       cap: int):
     """Sort-based event-frame dispatch → expert compute → combine.
 
-    tokens: [N, D]; top_e/top_p: [N, k].  Returns (y [N, D], keep_frac).
+    tokens: [N, D]; top_e/top_p: [N, k].  Returns ``(y [N, D], kept)``
+    where ``kept`` is the raw count of routed events that fit their
+    expert's capacity (callers derive the keep fraction as
+    ``kept / (N * k)``).
     """
     n, d = tokens.shape
     e, k = cfg.n_experts, cfg.top_k
@@ -123,9 +126,12 @@ def moe_forward(params: dict, x: jax.Array, cfg: ModelConfig
     top_p, top_e = jax.lax.top_k(probs, k)                    # [N, k]
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)    # renormalize
 
-    # Load-balancing auxiliary loss (Switch/GShard style).
+    # Load-balancing auxiliary loss (GShard style): ``ce`` is the fraction
+    # of *all* k routed assignments landing on each expert — counting only
+    # the top-1 column would ignore k-1 of every token's events and
+    # under-penalize experts that are hot in the lower-ranked slots.
     me = jnp.mean(probs, axis=0)                              # [E]
-    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], e), axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_e, e), axis=1), axis=0) / k
     aux_loss = e * jnp.sum(me * ce)
 
     # --- Dispatch/combine ------------------------------------------------------

@@ -194,6 +194,32 @@ def fabric_leaf_index(axis_names: tuple, fan_ins: tuple) -> jax.Array:
     return leaf
 
 
+def edge_neighbor_permutes(enables, *, prune: bool
+                           ) -> tuple[tuple[tuple[int, int], ...], ...]:
+    """Edge-neighbor index maps of one fabric level: the ``ppermute``
+    schedule that replaces that level's ``all_gather`` in routed mode.
+
+    Returns one ``((src, dst), ...)`` pair tuple per ring rotation
+    ``r = 1..fan_in-1`` — rotation ``r`` ships child slot ``j``'s stream to
+    slot ``(j + r) % fan_in``; the own slot (``r = 0``) never travels.
+    With ``prune`` (the top level, whose plane feeds no further uplink
+    cascade) pairs the static route-enable matrix disables are dropped from
+    the schedule, so a disabled edge costs no wire at all; its plane row
+    stays zero, which decodes as invalid.  Non-top levels must keep full
+    rotations — the ungated cascade aggregates whole entity streams.
+    """
+    en = np.asarray(enables, dtype=bool)
+    f = en.shape[0]
+    if en.shape != (f, f):
+        raise ValueError(f"enables must be square, got {en.shape}")
+    perms = []
+    for r in range(1, f):
+        pairs = tuple((j, (j + r) % f) for j in range(f)
+                      if not prune or en[j, (j + r) % f])
+        perms.append(pairs)
+    return tuple(perms)
+
+
 # ---------------------------------------------------------------------------
 # Activation sharding constraints (in-graph)
 # ---------------------------------------------------------------------------

@@ -118,6 +118,7 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                pod_capacity: int | None = None,
                fabric: "fablib.FabricPlan | None" = None,
                timed: bool = False,
+               overlap: bool = False,
                faults: "Sequence[fablib.FaultEvent] | None" = None,
                fault_mode: str = "mask",
                plasticity: "plaslib.STDPConfig | None" = None,
@@ -159,6 +160,17 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         observables (spikes, dropped, uplink_dropped, state) are bit-exact
         with the untimed run.
 
+      overlap: event mode only, ``delay_steps >= 2`` — double-buffer the
+        exchange window: iteration ``t`` of the scan runs chip step ``t``
+        *alongside* the exchange of step ``t-1``'s spikes (the two are
+        data-independent, so the compiler — and a real fabric's DMA engine —
+        can overlap timestep ``t``'s compute with timestep ``t-1``'s wire
+        traffic).  The delay-line ring keeps this bit-exact: ``routed(t-1)``
+        lands in slot ``(t-1) % delay``, still ``delay - 1`` iterations
+        before its read, and a post-scan epilogue flushes the last window.
+        All observables (spikes, drops, latencies, final state) are
+        bit-exact with ``overlap=False``.  Incompatible with ``faults``
+        (the health schedule indexes the *current* step's exchange).
       faults: event mode only — a schedule of ``fabric.FaultEvent`` link
         faults injected into the stream (each edge dies at ``kill_step``
         and optionally restores).  The per-step rerouted / lost counts
@@ -222,6 +234,19 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
     if faults is not None and mode != "event":
         raise ValueError("fault injection requires the event datapath (the "
                          "dense surrogate has no links to kill)")
+    if overlap:
+        if mode != "event":
+            raise ValueError("overlap double-buffers the exchange window — "
+                             "event mode only (dense routing is a matmul, "
+                             "there is no wire phase to overlap)")
+        if state.inflight.shape[0] < 2:
+            raise ValueError("overlap needs delay_steps >= 2: with a "
+                             "single-slot delay line the deferred write "
+                             "would land after its own read")
+        if faults is not None:
+            raise ValueError("overlap defers each exchange one iteration, "
+                             "which would skew the per-step fault/health "
+                             "schedule — run faults without overlap")
     if fabric is not None:
         if mode != "event":
             raise ValueError("fabric plans run the event datapath only")
@@ -329,6 +354,43 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
 
         return body
 
+    def make_body_overlap(plan_seg):
+        """Scan body with the exchange deferred one iteration (see
+        ``overlap``): chip step ``t`` and the exchange of ``spikes(t-1)``
+        share an iteration with no data dependence between them, so the
+        scheduler can run the wire phase under the compute phase."""
+
+        def body(carry, xs):
+            drive_t, _ = xs
+            chips, inflight, t, plast, prev_spikes = carry
+            slot = jax.lax.rem(t, delay)
+            drive = drive_t + jax.lax.dynamic_index_in_dim(inflight, slot, 0,
+                                                           keepdims=False)
+            chip_params = (params.chips if plast is None
+                           else params.chips._replace(weights=plast.weights))
+            new_chips, spikes = jax.vmap(
+                lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
+                    chip_params, chips, drive)
+            if plast is not None:
+                plast = plaslib.stdp_stream_step(plast, drive, spikes,
+                                                 plasticity)
+            (routed, dropped, uplink, lat, lat_valid, unroutable,
+             rerouted) = event_route(prev_spikes, plan_seg, None)
+            # routed(t-1) lands in slot (t-1) % delay, read at step
+            # t-1+delay — never this iteration's slot while delay >= 2.
+            # The t == 0 dummy exchange (zero previous window) must not
+            # clobber the caller's initial in-flight frame due at step
+            # delay-1, hence the gate.
+            prev_slot = jax.lax.rem(t + delay - 1, delay)
+            written = jax.lax.dynamic_update_index_in_dim(inflight, routed,
+                                                          prev_slot, 0)
+            inflight = jnp.where(t > 0, written, inflight)
+            return ((new_chips, inflight, t + 1, plast, spikes),
+                    (spikes, dropped, uplink, lat, lat_valid, unroutable,
+                     rerouted))
+
+        return body
+
     # Fault schedule → constant-plan segments.  Mask mode scans dynamic
     # health masks through one program; reroute mode recompiles the plan at
     # each health-change boundary and chains the scans (the carried state —
@@ -357,17 +419,41 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                   else plaslib.init_stream_stdp(params.chips.weights,
                                                 ext_drives.shape[2]))
     carry = (state.chips, state.inflight, jnp.int32(0), plast0)
+    if overlap:
+        carry = (*carry, jnp.zeros((cfg.n_chips, ext_drives.shape[2],
+                                    cfg.chip.n_neurons), ext_drives.dtype))
     ys_parts = []
     for start, end, plan_seg in segments:
         h = (None if sched is None else
              jax.tree.map(lambda a: a[start:end], sched))
-        carry, ys = jax.lax.scan(make_body(plan_seg), carry,
-                                 (ext_drives[start:end], h))
+        body = (make_body_overlap if overlap else make_body)(plan_seg)
+        carry, ys = jax.lax.scan(body, carry, (ext_drives[start:end], h))
         ys_parts.append(ys)
-    chips, inflight, _, plast_final = carry
+    if overlap:
+        chips, inflight, _, plast_final, last_spikes = carry
+    else:
+        chips, inflight, _, plast_final = carry
     (spikes, dropped, uplink, lat, lat_valid, unroutable, rerouted) = (
         ys_parts[0] if len(ys_parts) == 1
         else jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *ys_parts))
+    if overlap:
+        # Epilogue: flush the deferred last window, then realign the stats
+        # streams (scan row t carried the stats of step t-1; row 0 was the
+        # zero dummy window).
+        (routed, e_drop, e_up, e_lat, e_latv, e_unr, e_rer) = event_route(
+            last_spikes, segments[-1][2], None)
+        inflight = jax.lax.dynamic_update_index_in_dim(
+            inflight, routed, (n_steps - 1) % delay, 0)
+
+        def _shift(a, tail):
+            return jnp.concatenate([a[1:], tail[None]], axis=0)
+
+        dropped = _shift(dropped, e_drop)
+        uplink = _shift(uplink, e_up)
+        lat = _shift(lat, e_lat)
+        lat_valid = _shift(lat_valid, e_latv)
+        unroutable = _shift(unroutable, e_unr)
+        rerouted = _shift(rerouted, e_rer)
     # Restore shift-register order so the final state is bit-exact with the
     # per-step path (slot ``t % delay`` was written last).
     if delay > 1 and n_steps % delay:

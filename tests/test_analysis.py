@@ -361,6 +361,57 @@ def test_collective_budget_flagged():
     assert "program.collective-budget" in checks(diags)
 
 
+def _pmap_ppermute_jaxpr(payload):
+    """An axis-bound ppermute without needing >1 device."""
+    import jax
+
+    return jax.make_jaxpr(jax.pmap(
+        lambda x: jax.lax.ppermute(x, "fab0", [(0, 0)]),
+        axis_name="fab0"))(payload)
+
+
+def test_routed_gather_count_flagged():
+    # Any all_gather in a routed program is an error — the whole point of
+    # the mode is that every wire byte moves edge-to-edge via ppermute.
+    import jax.numpy as jnp
+
+    closed = _pmap_gather_jaxpr(jnp.zeros((1, 4), jnp.int16))
+    diags = jaxprlint.check_routed(closed, "prog")
+    assert checks(diags) == {"program.gather-count"}
+    assert jaxprlint.check_routed(
+        _pmap_ppermute_jaxpr(jnp.zeros((1, 4), jnp.int16)), "prog") == []
+
+
+def test_routed_widening_flagged():
+    import jax.numpy as jnp
+
+    closed = _pmap_ppermute_jaxpr(jnp.zeros((1, 4), jnp.int32))
+    diags = jaxprlint.check_routed(closed, "prog")
+    assert checks(diags) == {"program.gather-widening"}
+    # the int32 timestamp plane is legal on the timed lane only
+    assert jaxprlint.check_routed(closed, "prog", timed=True) == []
+
+
+def test_routed_budget_flagged():
+    import jax.numpy as jnp
+
+    sc = SCENARIOS["PROJECTED_120CHIP"]
+    twin, cap = jaxprlint.shrink_plan(sc.plan, sc.cap_in)
+    budget = jaxprlint.routed_budget_bytes(twin, cap)
+    assert 0 < budget < jaxprlint.gather_budget_bytes(twin, cap)
+    closed = _pmap_ppermute_jaxpr(jnp.zeros((1, budget), jnp.int16))
+    diags = jaxprlint.check_routed(closed, "prog", plan=twin, cap_in=cap)
+    assert "program.collective-budget" in checks(diags)
+
+
+def test_routed_exchange_lint_clean():
+    # The real routed program of every headline scenario passes its own
+    # invariants: zero all_gathers, edge traffic within budget, int16 wire.
+    sc = SCENARIOS["EXT_4CASE_96CHIP"]
+    diags = jaxprlint.lint_fabric_exchange_routed(sc.plan, sc.cap_in)
+    assert errors(diags) == []
+
+
 def test_shrink_plan_preserves_structure():
     sc = SCENARIOS["EXT_4CASE_96CHIP/1dead_uplink"]
     twin, cap = jaxprlint.shrink_plan(sc.plan, sc.cap_in)

@@ -15,6 +15,12 @@ the pure-jnp oracle (``mode="jax"``) and the Pallas interpreter
 timestamps, and drop counts.  Arrival order is additionally pinned against a
 straight numpy replay of the merge semantics, so both modes are checked
 against the specification, not only against each other.
+
+The ``exchange_mode="routed"`` battery (ISSUE 9) extends the matrix to the
+stacked hop-graph executor's wire strategies: routed (static edge-schedule
+merge) vs gather (broadcast plane) over occupancy × uplink caps × timed ×
+degraded detours, bit-exact on every observable including all four
+``ExchangeDrops`` fields.
 """
 
 import jax
@@ -172,3 +178,76 @@ def test_merge_pack_conformance(occupancy, wire16, segmented, timed):
             expect = src_t + ranks * service + (ranks // cc) * stall
             got_t = np.asarray(out_t[b])[np.asarray(out_v[b])]
             assert np.array_equal(got_t, expect)
+
+
+# ---------------------------------------------------------------------------
+# exchange_mode="routed" vs "gather": stacked hop-graph executor (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def _routed_plan(caps, degraded):
+    from repro.core import FabricSpec, LevelSpec, compile_fabric, degrade_spec
+
+    spec = FabricSpec(levels=(LevelSpec(2, link_capacity=caps[0]),
+                              LevelSpec(2, link_capacity=caps[1]),
+                              LevelSpec(2, link_capacity=caps[2],
+                                        extension=True)),
+                      capacity=CAPACITY)
+    if degraded:
+        spec = degrade_spec(spec, [(1, 0)])     # dead uplink → detour
+    return compile_fabric(spec)
+
+
+@pytest.mark.parametrize("occupancy", OCCUPANCIES)
+@pytest.mark.parametrize("caps", [(None, None, None), (6, 10, 8)])
+@pytest.mark.parametrize("timed", [False, True])
+@pytest.mark.parametrize("degraded", [False, True])
+def test_routed_mode_conformance(occupancy, caps, timed, degraded):
+    from repro.core import fabric_route_step, make_frame, with_exchange_mode
+
+    plan = _routed_plan(caps, degraded)
+    n = plan.n_nodes
+    state = identity_router(n)
+    key = jax.random.fold_in(KEY, 2000 + int(occupancy * 100) + 7 * timed
+                             + 13 * degraded + 29 * bool(caps[0]))
+    labels, valid = _frames(key, (n, CAP_IN), occupancy)
+    frames, _ = make_frame(labels, jnp.zeros_like(labels) if timed else None,
+                           valid, CAP_IN)
+    timing = TIMING if timed else None
+    outs = {mode: fabric_route_step(state, frames,
+                                    with_exchange_mode(plan, mode),
+                                    timing=timing)
+            for mode in ("gather", "routed")}
+    (g, g_d), (r, r_d) = outs["gather"], outs["routed"]
+    assert jnp.array_equal(g.valid, r.valid)
+    assert jnp.array_equal(jnp.where(g.valid, g.labels, 0),
+                           jnp.where(r.valid, r.labels, 0))
+    if timed:
+        assert jnp.array_equal(jnp.where(g.valid, g.times, 0),
+                               jnp.where(r.valid, r.times, 0))
+    for fld in ("congestion", "uplink", "unroutable", "rerouted"):
+        assert jnp.array_equal(getattr(g_d, fld), getattr(r_d, fld)), fld
+
+
+def test_routed_mode_requires_concrete_enables():
+    """Routed plans compile a static edge schedule — tracing the enables
+    must raise, not silently fall back."""
+    from repro.core import fabric_route_step, make_frame, with_exchange_mode
+
+    plan = with_exchange_mode(_routed_plan((None, None, None), False),
+                              "routed")
+    state = identity_router(plan.n_nodes)
+    labels, valid = _frames(KEY, (plan.n_nodes, CAP_IN), 0.5)
+    frames, _ = make_frame(labels, None, valid, CAP_IN)
+
+    import dataclasses
+
+    def traced_enables(en):
+        lvl = dataclasses.replace(plan.levels[0], enables=en)
+        p = dataclasses.replace(plan,
+                                levels=(lvl,) + tuple(plan.levels[1:]))
+        out, _ = fabric_route_step(state, frames, p)
+        return out.valid.sum()
+
+    with pytest.raises(ValueError, match="routed"):
+        jax.jit(traced_enables)(jnp.asarray(plan.levels[0].enables))

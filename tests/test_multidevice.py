@@ -301,6 +301,118 @@ def test_degraded_fabric_shard_map_matches_stacked():
     assert "DEGRADED_MATCH True" in out
 
 
+def test_routed_fabric_shard_map_matches_stacked_and_gather():
+    """Routed exchange mode (ISSUE 9): the ppermute edge schedule on the
+    nested 2x2x2 mesh is bit-exact with both the stacked routed executor
+    and the gather-mode shard_map round — cascaded caps, extension level
+    and the timed lane included — and the scanned stream_fn agrees."""
+    out = _run("""
+        from repro.core import (FabricInterconnect, FabricSpec, LevelSpec,
+                                compile_fabric, fabric_route_step,
+                                identity_router, make_frame, timed_wire,
+                                with_exchange_mode)
+        from repro.parallel.sharding import fabric_mesh
+        w = timed_wire()
+        N = 8
+        st = identity_router(N)
+        key = jax.random.key(13)
+        labels = jax.random.randint(key, (N, 16), 0, 2**15)
+        valid = jax.random.uniform(jax.random.fold_in(key, 1), (N, 16)) < 0.6
+        frames, _ = make_frame(labels, jnp.zeros_like(labels), valid, 16)
+        ok = True
+        for caps, timing in (((None, None, None), None),
+                             ((8, 12, 6), None), ((8, 12, 6), w)):
+            plan = compile_fabric(FabricSpec(
+                levels=(LevelSpec(2, link_capacity=caps[0]),
+                        LevelSpec(2, link_capacity=caps[1]),
+                        LevelSpec(2, link_capacity=caps[2], extension=True)),
+                capacity=24, exchange_mode="routed"))
+            mesh = fabric_mesh(plan)
+            ic = FabricInterconnect(mesh=mesh, plan=plan, timing=timing)
+            out_f, d_f = ic.exchange_fn()(frames, st.fwd_tables,
+                                          st.rev_tables)
+            ref, d_r = fabric_route_step(st, frames, plan, timing=timing)
+            icg = FabricInterconnect(
+                mesh=mesh, plan=with_exchange_mode(plan, "gather"),
+                timing=timing)
+            out_g, _ = icg.exchange_fn()(frames, st.fwd_tables,
+                                         st.rev_tables)
+            ok &= bool(jnp.array_equal(out_f.labels, ref.labels))
+            ok &= bool(jnp.array_equal(out_f.valid, ref.valid))
+            ok &= bool(jnp.array_equal(out_f.times, ref.times))
+            ok &= bool(jnp.array_equal(out_f.labels, out_g.labels))
+            ok &= bool(jnp.array_equal(out_f.valid, out_g.valid))
+            for fld in ("congestion", "uplink", "unroutable", "rerouted"):
+                ok &= bool(jnp.array_equal(getattr(d_f, fld),
+                                           getattr(d_r, fld)))
+        frames_T = jax.tree.map(lambda x: jnp.broadcast_to(x[None],
+                                                           (3, *x.shape)),
+                                frames)
+        outs_T, _ = ic.stream_fn()(frames_T, st.fwd_tables, st.rev_tables)
+        ok &= bool(jnp.array_equal(outs_T.labels[1], out_f.labels))
+        print("ROUTED_MATCH", ok)
+    """)
+    assert "ROUTED_MATCH True" in out
+
+
+def test_routed_degraded_parity_and_zero_gathers_in_jaxpr():
+    """Degraded detours under routed mode (dead uplink, exhausted group,
+    mixed, dynamic health overlay) match the stacked executor on every
+    observable; and the routed program's jaxpr carries ZERO all_gathers —
+    every wire byte moves by ppermute."""
+    out = _run("""
+        from repro.core import (FabricHealth, FabricInterconnect, FabricSpec,
+                                LevelSpec, compile_fabric, degrade_spec,
+                                fabric_route_step, identity_router,
+                                make_frame, timed_wire, with_exchange_mode)
+        from repro.parallel.sharding import fabric_mesh
+        from repro.analysis import jaxprlint
+        w = timed_wire()
+        spec = FabricSpec(levels=(LevelSpec(2), LevelSpec(2),
+                                  LevelSpec(2, extension=True)), capacity=24)
+        st = identity_router(8)
+        key = jax.random.key(17)
+        labels = jax.random.randint(key, (8, 12), 0, 2**15)
+        valid = jax.random.uniform(jax.random.fold_in(key, 1), (8, 12)) < 0.6
+        frames, _ = make_frame(labels, jnp.zeros_like(labels), valid, 12)
+        up = [None] * 3
+        up[1] = jnp.array([True, False, True, True])
+        overlay = FabricHealth(uplink=tuple(up), downlink=(None,) * 3)
+        cases = [
+            (compile_fabric(degrade_spec(spec, [(1, 0)])), None),
+            (compile_fabric(degrade_spec(spec, [(1, 0), (1, 1)])), None),
+            (compile_fabric(degrade_spec(spec, [(1, 2),
+                                                (0, 3, "downlink")])), None),
+            (compile_fabric(spec), overlay),
+        ]
+        ok = True
+        for plan, health in cases:
+            plan = with_exchange_mode(plan, "routed")
+            mesh = fabric_mesh(plan)
+            ic = FabricInterconnect(mesh=mesh, plan=plan, timing=w,
+                                    health=health)
+            out_f, d_f = ic.exchange_fn()(frames, st.fwd_tables,
+                                          st.rev_tables)
+            ref, d_r = fabric_route_step(st, frames, plan, timing=w,
+                                         health=health)
+            ok &= bool(jnp.array_equal(out_f.labels, ref.labels))
+            ok &= bool(jnp.array_equal(out_f.valid, ref.valid))
+            ok &= bool(jnp.array_equal(out_f.times, ref.times))
+            for fld in ("congestion", "uplink", "unroutable", "rerouted"):
+                ok &= bool(jnp.array_equal(getattr(d_f, fld),
+                                           getattr(d_r, fld)))
+        closed, _ = jaxprlint.trace_fabric_exchange(
+            with_exchange_mode(compile_fabric(spec), "routed"), 12)
+        names = [e.primitive.name
+                 for e in jaxprlint.iter_eqns(closed.jaxpr)]
+        print("GATHERS", names.count("all_gather"),
+              "PPERMUTES", names.count("ppermute") > 0)
+        print("ROUTED_DEGRADED_MATCH", ok)
+    """)
+    assert "ROUTED_DEGRADED_MATCH True" in out
+    assert "GATHERS 0 PPERMUTES True" in out
+
+
 def test_sharded_train_step_matches_single_device():
     """The FSDP×TP-sharded train loss equals the unsharded one."""
     out = _run("""

@@ -7,10 +7,53 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config, smoke_config
-from repro.launch.serve import generate
+from repro.launch.serve import _splice_prefill, generate
 from repro.models import model as M
 
 KEY = jax.random.key(5)
+
+
+def test_splice_prefill_colliding_prompt_length():
+    """The splice axis is the layout's sequence axis (ndim - 2), not the
+    first axis whose size equals the prompt length: with s == n_kv_heads
+    the old sniff matched the heads axis first and corrupted the cache."""
+    L, B, H, Dh, s, max_len = 2, 2, 4, 8, 4, 16
+    src = jnp.arange(L * B * H * s * Dh,
+                     dtype=jnp.float32).reshape(L, B, H, s, Dh)
+    dst = jnp.zeros((L, B, H, max_len, Dh))
+    out = _splice_prefill(None, {"k": dst}, {"k": src}, s)["k"]
+    assert jnp.array_equal(out[:, :, :, :s], src)
+    assert not out[:, :, :, s:].any()
+    # MLA-style latent [L, B, S, rank] with s == rank: same property.
+    src4 = jnp.arange(L * B * s * s, dtype=jnp.float32).reshape(L, B, s, s)
+    dst4 = jnp.zeros((L, B, max_len, s))
+    out4 = _splice_prefill(None, {"k": dst4}, {"k": src4}, s)["k"]
+    assert jnp.array_equal(out4[:, :, :s], src4)
+    assert not out4[:, :, s:].any()
+    # Recurrent state (no sequence dim, equal shapes) passes through.
+    st = jnp.ones((L, B, 3, 5))
+    assert jnp.array_equal(
+        _splice_prefill(None, {"k": jnp.zeros_like(st)}, {"k": st}, s)["k"],
+        st)
+    with pytest.raises(ValueError):
+        _splice_prefill(None, {"k": jnp.zeros((L, B, 7, Dh))},
+                        {"k": jnp.zeros((L, B, 5, Dh + 1))}, 5)
+
+
+@pytest.mark.slow
+def test_generate_at_prompt_length_colliding_with_kv_heads():
+    """End-to-end regression: generation at a prompt length equal to
+    n_kv_heads must still decode from the correctly spliced cache (token 1
+    equals the teacher-forced argmax on [prompt, token 0])."""
+    cfg = dataclasses.replace(smoke_config(get_config("smollm-135m")),
+                              dtype="float32", n_heads=4, n_kv_heads=4)
+    params = M.init_params(KEY, cfg)
+    s = cfg.n_kv_heads
+    prompts = jax.random.randint(KEY, (2, s), 1, cfg.vocab_size)
+    toks, _ = generate(cfg, params, prompts, max_new=2)
+    forced = jnp.concatenate([prompts, toks[:, :1]], 1)
+    logits, _, _ = M.prefill(params, {"tokens": forced}, cfg)
+    assert jnp.array_equal(toks[:, 1], jnp.argmax(logits, -1))
 
 
 @pytest.mark.slow
