@@ -1,0 +1,216 @@
+"""Emulation-as-a-service throughput: many experiments per compiled program.
+
+The hardware system amortizes one routing configuration over many
+experiment runs; the software twin is ``runtime.engine.EmulationEngine``,
+which runs S concurrent tenant sessions as rows of the batch axis of ONE
+compiled ``run_stream`` window program on the extension-lane
+``EXT_4CASE_96CHIP`` fabric.  This benchmark records the ``stream_engine_*``
+family:
+
+  * a HARD parity gate first — S batched engine sessions must be bit-exact
+    with S independent batch-1 ``run_stream`` runs, including the timed
+    latency lane and per-slot online plasticity (unequal session lengths,
+    so the idle-tail masking is in the gate too);
+  * experiments/s and p99 time-to-result at S = 1 / 8 / 64 / 512 concurrent
+    sessions (reduced per-chip array so the sweep stays minutes, full
+    96-chip fabric either way), engine stepped through its real
+    submit → window loop → collect path;
+  * the sequential baseline — the same warmed batch-1 stream called S
+    times — and a HARD assert that batched throughput beats it at S = 64
+    (the engine's reason to exist).
+
+Writes into ``BENCH_interconnect.json`` next to the ``stream_*`` keys; see
+README.md for the glossary.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.scenarios import CASES, OCC_HEADLINE, engine_network
+from repro.runtime.engine import EmulationEngine
+
+from benchmarks.exchange_stream import _merge_bench_json
+
+SCENARIO = next(c[0] for c in CASES if len(c[1]) == 3)  # EXT_4CASE_96CHIP
+SWEEP_S = (1, 8, 64, 512)
+N_STEPS = 16                    # session length in the throughput sweep
+WINDOW = 8
+GATE_S = 4                      # parity-gate concurrency
+GATE_RATE = 0.35                # gate stimulus rate: dense enough to spike
+
+
+def _gate_chip():
+    from repro.snn import chip as chiplib
+    return chiplib.ChipConfig(n_neurons=128, n_rows=64)
+
+
+def _sweep_chip():
+    # Large synapse arrays: the batched win on a CPU host is weight reuse
+    # in the chip matmul ([S, rows] @ [rows, neurons] reads the weights
+    # once for all S tenants), so the arrays must be big enough that the
+    # matmul — not the capacity-bound exchange, whose work scales linearly
+    # with S — dominates the step.  Measured on the 1-CPU container at
+    # S=64: 16x32 is a batching *loss* (0.9x), 64x128 a wash (~1.0x),
+    # 192x384 a robust 1.2-1.3x.
+    from repro.snn import chip as chiplib
+    return chiplib.ChipConfig(n_neurons=384, n_rows=192)
+
+
+def _parity_gate(verbose: bool) -> int:
+    """S batched sessions == S independent runs, bit for bit.
+
+    Timed lane + per-slot plasticity + unequal lengths on the full 96-chip
+    extension fabric (mid-size synapse arrays).  Returns the total routed
+    event count so the gate can assert it checked real traffic.
+    """
+    from repro.snn import network as netlib
+    from repro.snn import stream as stlib
+    from repro.snn.plasticity import STDPConfig
+
+    cfg, params, plan = engine_network(SCENARIO, chip=_gate_chip())
+    pcfg = STDPConfig()
+    rng = np.random.default_rng(0)
+    lengths = (12, 7, 12, 5)
+    stims = [(rng.uniform(size=(L, cfg.chip.n_rows)) < GATE_RATE)
+             .astype(np.float32) for L in lengths]
+
+    eng = EmulationEngine(params, cfg, slots=GATE_S, max_steps=max(lengths),
+                          window=4, plan=plan, timed=True, plasticity=pcfg,
+                          keep_spikes=True)
+    sids = [eng.submit(s) for s in stims]
+    eng.drain()
+
+    events = 0
+    for sid, stim, L in zip(sids, stims, lengths):
+        drives = jnp.zeros((L, cfg.n_chips, 1, cfg.chip.n_rows))
+        drives = drives.at[:, 0, 0].set(jnp.asarray(stim))
+        out = stlib.run_stream(
+            params, netlib.init_state(cfg, 1), drives, cfg, fabric=plan,
+            timed=True, plasticity=pcfg,
+            plasticity_state=netlib.init_slot_plasticity(params, 1))
+        r = eng.collect(sid)
+        ref_spikes = np.asarray(out.spikes)[:, :, 0]
+        assert np.array_equal(r.spikes, ref_spikes), (
+            f"engine session {sid} spikes diverged from its independent run")
+        for field in ("dropped", "uplink_dropped", "unroutable", "rerouted"):
+            ref = int(np.asarray(getattr(out, field)).sum())
+            assert getattr(r, field) == ref, (
+                f"engine session {sid} {field}: {getattr(r, field)} != {ref}")
+        ref_lat = np.asarray(out.latency_ns)[np.asarray(out.latency_valid)]
+        ref_stats = stlib.masked_latency_stats(
+            ref_lat, np.ones(ref_lat.shape, bool), strict=False)
+        for k, ref_v in ref_stats.items():
+            got_v = r.latency[k]
+            assert got_v == ref_v or (
+                np.isnan(got_v) and np.isnan(ref_v)), (
+                f"engine session {sid} latency {k}: {got_v} != {ref_v}")
+        for a, b in zip(jax.tree.leaves(r.plasticity),
+                        jax.tree.leaves(out.plasticity)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)[:, 0]), (
+                f"engine session {sid} plasticity state diverged")
+        events += ref_lat.size
+    assert events > 0, ("parity gate saw zero routed events — raise "
+                        "GATE_RATE; an empty gate proves nothing")
+    if verbose:
+        print(f"engine_throughput[parity S={GATE_S}],0,bit-exact vs "
+              f"independent runs ({events} timed events, plastic, "
+              f"lengths {lengths})")
+    return events
+
+
+def _session_stims(rng, n, n_rows):
+    return [(rng.uniform(size=(N_STEPS, n_rows)) < OCC_HEADLINE)
+            .astype(np.float32) for _ in range(n)]
+
+
+def run(verbose: bool = True, trials: int = 3):
+    """The ``stream_engine_*`` family on EXT_4CASE_96CHIP."""
+    _parity_gate(verbose)
+
+    cfg, params, plan = engine_network(SCENARIO, chip=_sweep_chip())
+    rng = np.random.default_rng(1)
+    results = {f"stream_engine_parity[{SCENARIO}]": 1.0}
+    per_s = {}
+
+    # Sequential baseline: the same warmed batch-1 stream, called S_REF times
+    # one experiment at a time.  Its trials are interleaved with the batched
+    # S=S_REF trials below rather than timed after the whole sweep — host
+    # clock rate drifts on the minutes scale, so measuring the two sides of
+    # the speedup ratio in adjacent time slices is what makes it comparable
+    # (same trick as the routed-vs-gather benchmark).
+    from repro.snn import network as netlib
+    from repro.snn import stream as stlib
+
+    S_REF = 64
+    state0 = netlib.init_state(cfg, 1)
+    seq_fn = jax.jit(lambda dr: stlib.run_stream(
+        params, state0, dr, cfg, fabric=plan))
+    seq_drives = []
+    for stim in _session_stims(np.random.default_rng(7), S_REF,
+                               cfg.chip.n_rows):
+        d = jnp.zeros((N_STEPS, cfg.n_chips, 1, cfg.chip.n_rows))
+        seq_drives.append(d.at[:, 0, 0].set(jnp.asarray(stim)))
+    seq_best = float("inf")
+
+    for S in SWEEP_S:
+        eng = EmulationEngine(params, cfg, slots=S, max_steps=N_STEPS,
+                              window=WINDOW, plan=plan, keep_spikes=False)
+        stims = _session_stims(rng, S, cfg.chip.n_rows)
+        eng.warm()
+        if S == S_REF:
+            jax.block_until_ready(seq_fn(seq_drives[0]).spikes)  # compile+warm
+        best, p99_ms = float("inf"), float("nan")
+        for _ in range(trials):
+            sids = [eng.submit(s) for s in stims]
+            t0 = time.perf_counter()
+            while eng.active or eng.queued:
+                eng.step()
+            wall = time.perf_counter() - t0
+            ttr = [eng.collect(sid).time_to_result_s for sid in sids]
+            if wall < best:
+                best, p99_ms = wall, float(np.percentile(ttr, 99) * 1e3)
+            if S == S_REF:
+                t0 = time.perf_counter()
+                for d in seq_drives:
+                    out = seq_fn(d)
+                    # Each experiment's result is materialized before the
+                    # next starts — the honest one-at-a-time serving loop.
+                    jax.block_until_ready(out.spikes)
+                seq_best = min(seq_best, time.perf_counter() - t0)
+        xps = S / best
+        per_s[S] = xps
+        tag = f"[S={S},{SCENARIO},T={N_STEPS}]"
+        results[f"stream_engine_experiments_per_s{tag}"] = xps
+        results[f"stream_engine_p99_ms{tag}"] = p99_ms
+        if verbose:
+            print(f"engine_throughput[S={S}],{best / S * 1e6:.0f},"
+                  f"us/experiment ({xps:.1f} experiments/s, "
+                  f"p99 time-to-result {p99_ms:.1f} ms)")
+
+    seq_xps = S_REF / seq_best
+    speedup = per_s[S_REF] / seq_xps
+    tag = f"[S={S_REF},{SCENARIO},T={N_STEPS}]"
+    results[f"stream_engine_sequential_experiments_per_s{tag}"] = seq_xps
+    results[f"stream_engine_speedup_vs_sequential{tag}"] = speedup
+    if verbose:
+        print(f"engine_throughput[sequential S={S_REF}],"
+              f"{seq_best / S_REF * 1e6:.0f},us/experiment "
+              f"({seq_xps:.1f} experiments/s)")
+        print(f"engine_throughput[speedup S={S_REF}],0,"
+              f"batched is {speedup:.2f}x sequential")
+    assert per_s[S_REF] > seq_xps, (
+        f"batched engine at S={S_REF} ({per_s[S_REF]:.1f} experiments/s) "
+        f"must beat the sequential baseline ({seq_xps:.1f}) — the whole "
+        f"point of slot multi-tenancy")
+
+    path = _merge_bench_json(results)
+    if verbose:
+        print(f"engine_throughput[json],0,wrote {path}")
+    return [(SCENARIO, S, per_s[S]) for S in SWEEP_S]
+
+
+if __name__ == "__main__":
+    run()

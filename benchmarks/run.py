@@ -24,6 +24,10 @@ from the calibration ratio instead of a prose footnote.
   stream_routed           §III/§V routed exchange mode (ppermute edge
                                   schedule) vs broadcast gather: parity
                                   gate + interleaved same-run timing
+  stream_engine           §IV     emulation-as-a-service: S tenant sessions
+                                  batched through one compiled window
+                                  program (parity gate + experiments/s vs
+                                  the sequential one-at-a-time baseline)
   moe_dispatch            DESIGN §4  event-frame dispatch at LM scale
   roofline_table          §Roofline  all dry-run cells (needs results/)
 """
@@ -36,8 +40,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (encoding_tradeoff, exchange_stream, fig5_latency,
-                        fig5_speedup, grad_compression,
+from benchmarks import (encoding_tradeoff, engine_throughput, exchange_stream,
+                        fig5_latency, fig5_speedup, grad_compression,
                         interconnect_throughput, moe_dispatch, roofline_table,
                         scaling_projection)
 
@@ -52,6 +56,7 @@ ALL = [
     ("stream_degraded", exchange_stream.run_degraded),
     ("stream_ckpt", exchange_stream.run_ckpt),
     ("stream_routed", exchange_stream.run_routed),
+    ("stream_engine", engine_throughput.run),
     ("moe_dispatch", moe_dispatch.run),
     ("grad_compression", grad_compression.run),
     ("roofline_table", roofline_table.run),

@@ -36,5 +36,12 @@ python -m pytest -x -q
 echo "=== fabric static analysis (full: optimized-HLO collective audit) ==="
 python -m repro.analysis.lint -q --hlo
 
-echo "=== streaming benchmarks (3-level fabric + timed + degraded + durable) ==="
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed --only stream_degraded --only stream_ckpt --only stream_routed
+echo "=== streaming benchmarks (3-level fabric + timed + degraded + durable + engine) ==="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --only stream --only stream_timed --only stream_degraded --only stream_ckpt --only stream_routed --only stream_engine
+
+echo "=== benchmark history diff vs previous record (non-blocking) ==="
+# Exit 1 = fewer than two records, exit 2 = calibration drift between
+# containers (the --tol guard) — both expected on fresh checkouts and
+# cross-machine runs, so the step reports but never fails the build.
+python scripts/bench_compare.py --prefix stream \
+  || echo "bench_compare: skipped (exit $? — no comparable prior record or calibration drift)"

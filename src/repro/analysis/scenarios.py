@@ -74,6 +74,37 @@ def plan_for(fan_ins, cap: int, caps) -> FabricPlan:
     return compile_fabric(FabricSpec(levels=levels, capacity=cap))
 
 
+def engine_network(name: str, *, occupancy: float = OCC_HEADLINE,
+                   chip=None, seed: int = 0):
+    """A ready-to-emulate network on one of the catalogue fabrics: the
+    compiled plan plus matching ``NetworkConfig`` / feed-forward params with
+    an all-enabled identity router (the fabric plan owns the topology).
+    Shared by the emulation-engine benchmark, the serving CLI and the
+    engine tests so "EXT_4CASE_96CHIP" means the same machine everywhere.
+
+    Returns ``(cfg, params, plan)``.  ``chip`` overrides the per-chip
+    dimensions (e.g. a reduced array for large-S throughput sweeps).
+    """
+    import jax
+
+    from repro.core.aggregator import identity_router
+    from repro.snn import chip as chiplib
+    from repro.snn import network as netlib
+
+    case = next((c for c in CASES if c[0] == name), None)
+    if case is None:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"have {[c[0] for c in CASES]}")
+    _, fan_ins, cap_in, cap = case
+    n = math.prod(fan_ins)
+    plan = plan_for(fan_ins, cap, level_caps(fan_ins, cap_in, occupancy))
+    cfg = netlib.NetworkConfig(n_chips=n, capacity=cap,
+                               chip=chip or chiplib.ChipConfig())
+    params = netlib.init_feedforward(
+        jax.random.PRNGKey(seed), cfg)._replace(router=identity_router(n))
+    return cfg, params, plan
+
+
 class Scenario(NamedTuple):
     """One lintable deployment: a compiled plan plus its egress frame width."""
 

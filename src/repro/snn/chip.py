@@ -92,6 +92,25 @@ def chip_step(params: ChipParams, state: ChipState, in_spikes: jax.Array,
     return ChipState(neurons=new_neurons), spikes
 
 
+def chip_step_slots(params: ChipParams, state: ChipState,
+                    in_spikes: jax.Array, weights: jax.Array,
+                    cfg: ChipConfig = ChipConfig()
+                    ) -> tuple[ChipState, jax.Array]:
+    """One chip step with *per-slot* weight arrays (multi-tenant engine).
+
+    Identical op order to ``chip_step`` — quantize, scale, row signs, row
+    contraction, neuron step — but every batch row integrates its own
+    ``weights[b]`` (f32[batch, n_rows, n_neurons]); the per-slot contraction
+    is bit-exact with the batch-1 matmul of ``chip_step``, which is what
+    keeps S engine sessions equal to S independent runs under plasticity.
+    """
+    w = quantize_ste(weights) if cfg.quantize_weights else weights
+    w_eff = (w * params.w_scale) * params.row_sign[:, None]
+    current = jnp.einsum("br,brn->bn", in_spikes, w_eff)
+    new_neurons, spikes = nrn.neuron_step(state.neurons, current, cfg.neuron)
+    return ChipState(neurons=new_neurons), spikes
+
+
 def crossbar_to_rows(out_spikes: jax.Array, select: jax.Array) -> jax.Array:
     """Layer-1 crossbar: map neuron outputs onto synapse-row drivers.
 

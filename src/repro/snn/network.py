@@ -117,6 +117,16 @@ def init_stream_plasticity(params: NetworkParams, batch: int):
     return plaslib.init_stream_stdp(params.chips.weights, batch)
 
 
+def init_slot_plasticity(params: NetworkParams, batch: int):
+    """Fresh *per-slot* plasticity state (``SlotPlasticityState``): every
+    batch row gets its own weight copy seeded from the network's stacked
+    chip weights — the multi-tenant engine's mode, where batch rows are
+    independent tenant sessions (``runtime.engine.EmulationEngine``)."""
+    from repro.snn import plasticity as plaslib
+
+    return plaslib.init_slot_stdp(params.chips.weights, batch)
+
+
 # ---------------------------------------------------------------------------
 # Dense (differentiable) routing derived from the LUT configuration
 # ---------------------------------------------------------------------------

@@ -112,3 +112,59 @@ def stdp_stream_step(state: StreamPlasticityState, pre: jax.Array,
     weights = jnp.clip(state.weights + dw * WEIGHT_MAX, 0.0, WEIGHT_MAX)
     return StreamPlasticityState(trace_pre=trace_pre, trace_post=trace_post,
                                  weights=weights)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot online plasticity for the multi-tenant emulation engine
+# ---------------------------------------------------------------------------
+
+
+class SlotPlasticityState(NamedTuple):
+    """Per-slot plasticity: every batch row (= tenant session of
+    ``runtime.engine``) evolves its *own* weight copy, so S concurrent
+    sessions stay bit-exact with S independent batch-1 runs — the shared
+    array of ``StreamPlasticityState`` would batch-mean the tenants'
+    updates into each other.  With ``batch == 1`` this reduces exactly to
+    the shared path (a size-1 einsum contraction and a /1 mean are exact),
+    which is what the engine's parity gate pins."""
+
+    trace_pre: jax.Array    # f32[n_chips, batch, n_rows]
+    trace_post: jax.Array   # f32[n_chips, batch, n_neurons]
+    weights: jax.Array      # f32[n_chips, batch, n_rows, n_neurons]
+
+
+def init_slot_stdp(weights: jax.Array, batch: int) -> SlotPlasticityState:
+    """Fresh per-slot traces with every slot seeded from the given shared
+    weights (f32[n_chips, n_rows, n_neurons], e.g. ``params.chips.weights``)."""
+    n_chips, n_rows, n_neurons = weights.shape
+    return SlotPlasticityState(
+        trace_pre=jnp.zeros((n_chips, batch, n_rows), jnp.float32),
+        trace_post=jnp.zeros((n_chips, batch, n_neurons), jnp.float32),
+        weights=jnp.broadcast_to(
+            jnp.asarray(weights, jnp.float32)[:, None],
+            (n_chips, batch, n_rows, n_neurons)) + 0.0)
+
+
+def stdp_slot_step(state: SlotPlasticityState, pre: jax.Array,
+                   post: jax.Array, cfg: STDPConfig = STDPConfig(),
+                   mask: jax.Array | None = None) -> SlotPlasticityState:
+    """One PPU walk with per-slot weights: no cross-batch reduction — each
+    slot's outer products rewrite only that slot's array.
+
+    ``mask`` (bool[batch], optional) freezes masked slots entirely: their
+    traces and weights pass through unchanged, so idle engine slots cost
+    zero plasticity updates (and an occupied slot's history is independent
+    of how long it idled before submission).
+    """
+    trace_pre = cfg.alpha_pre * state.trace_pre + pre
+    trace_post = cfg.alpha_post * state.trace_post + post
+    dw = (cfg.lr_pot * jnp.einsum("cbr,cbn->cbrn", trace_pre, post)
+          - cfg.lr_dep * jnp.einsum("cbr,cbn->cbrn", pre, trace_post))
+    weights = jnp.clip(state.weights + dw * WEIGHT_MAX, 0.0, WEIGHT_MAX)
+    if mask is not None:
+        keep = mask[None, :, None]
+        trace_pre = jnp.where(keep, trace_pre, state.trace_pre)
+        trace_post = jnp.where(keep, trace_post, state.trace_post)
+        weights = jnp.where(keep[..., None], weights, state.weights)
+    return SlotPlasticityState(trace_pre=trace_pre, trace_post=trace_post,
+                               weights=weights)

@@ -79,22 +79,48 @@ class StreamOut(NamedTuple):
     # trace filters + evolved weights after the last step — irreplaceable
     # stream state (the chips' weights at step t exist nowhere else), part of
     # the checkpointable tree in ``runtime.elastic``.  ``None`` when the run
-    # is non-plastic.
-    plasticity: "plaslib.StreamPlasticityState | None" = None
+    # is non-plastic; a ``SlotPlasticityState`` (per-slot weights) when the
+    # run was seeded with one (multi-tenant engine mode).
+    plasticity: ("plaslib.StreamPlasticityState | "
+                 "plaslib.SlotPlasticityState | None") = None
 
 
-def stream_latency_stats(out: StreamOut) -> dict[str, float]:
+_LATENCY_STAT_KEYS = ("median_ns", "p01_ns", "p99_ns", "jitter_ns",
+                      "jitter_frac")
+
+
+def masked_latency_stats(latency_ns, latency_valid, *,
+                         strict: bool = True) -> dict[str, float]:
+    """Percentile summary of the valid-masked latency samples plus a
+    ``count`` key.  Zero delivered events raises under ``strict`` (the
+    historical behaviour — an untimed run or a dead stream is a caller
+    bug); ``strict=False`` returns NaN-valued stats with ``count == 0``
+    instead, so per-tenant accounting of idle sessions stays total."""
+    lats = jnp.asarray(latency_ns)[jnp.asarray(latency_valid)]
+    count = int(lats.size)
+    if count == 0:
+        if strict:
+            raise ValueError("no delivered events (or run_stream ran "
+                             "untimed — pass timed=True)")
+        return {**{k: float("nan") for k in _LATENCY_STAT_KEYS}, "count": 0}
+    stats = {k: float(v) for k, v in
+             latlib.latency_statistics(lats.astype(jnp.float32)).items()}
+    stats["count"] = count
+    return stats
+
+
+def stream_latency_stats(out: StreamOut, *,
+                         strict: bool = True) -> dict[str, float]:
     """Host-side percentile summary of a timed stream's wire latencies.
 
     Masks the padding slots and reuses ``core.latency.latency_statistics``
-    (median / p01 / p99 / jitter).  Call on concrete (non-traced) outputs.
+    (median / p01 / p99 / jitter), plus a ``count`` of delivered events.
+    Call on concrete (non-traced) outputs.  ``strict=False`` returns
+    NaN stats (``count == 0``) instead of raising when nothing was
+    delivered — see ``masked_latency_stats``.
     """
-    lats = jnp.asarray(out.latency_ns)[jnp.asarray(out.latency_valid)]
-    if lats.size == 0:
-        raise ValueError("no delivered events (or run_stream ran untimed — "
-                         "pass timed=True)")
-    return {k: float(v) for k, v in
-            latlib.latency_statistics(lats.astype(jnp.float32)).items()}
+    return masked_latency_stats(out.latency_ns, out.latency_valid,
+                                strict=strict)
 
 
 def _egress_label_grid(cfg: netlib.NetworkConfig) -> jax.Array:
@@ -122,8 +148,9 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
                faults: "Sequence[fablib.FaultEvent] | None" = None,
                fault_mode: str = "mask",
                plasticity: "plaslib.STDPConfig | None" = None,
-               plasticity_state: "plaslib.StreamPlasticityState | None"
-               = None) -> StreamOut:
+               plasticity_state: "plaslib.StreamPlasticityState | "
+               "plaslib.SlotPlasticityState | None" = None,
+               slot_mask: jax.Array | None = None) -> StreamOut:
     """Scan the full emulation pipeline over ``ext_drives``.
 
     Args:
@@ -197,7 +224,22 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         modes and composes with ``timed`` / ``faults``.
       plasticity_state: initial ``StreamPlasticityState`` (defaults to
         fresh zero traces over ``params.chips.weights``); requires
-        ``plasticity``.
+        ``plasticity``.  Passing a ``plaslib.SlotPlasticityState`` instead
+        switches to *per-slot* plasticity: every batch row integrates and
+        rewrites its own weight copy (``chip_step_slots``) with no
+        cross-batch reduction, so batch rows are fully independent tenant
+        sessions — the multi-tenant engine's mode
+        (``runtime.engine.EmulationEngine``).  Bit-exact with the shared
+        path at ``batch == 1``.
+      slot_mask: bool[T, batch], optional — the multi-tenant engine's idle
+        / tail masking.  A masked ``(t, b)`` entry zeroes slot ``b``'s
+        output spikes at step ``t`` *before* recording, egress and
+        plasticity: the slot emits no events (so it contributes zero
+        entries to every drop counter — sessions are per-batch-row and the
+        exchange is vmapped over batch), and under per-slot plasticity its
+        traces and weights are frozen.  Unmasked rows are bit-exact with an
+        unmasked run.  Composes with every mode (timed / overlap / faults /
+        plasticity).
 
     Returns:
       ``StreamOut(state, spikes, dropped, uplink_dropped, latency_ns,
@@ -231,6 +273,11 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
     if plasticity_state is not None and plasticity is None:
         raise ValueError("plasticity_state without plasticity — pass the "
                          "STDPConfig that should drive the update")
+    if slot_mask is not None and slot_mask.shape != (ext_drives.shape[0],
+                                                     ext_drives.shape[2]):
+        raise ValueError(f"slot_mask must be bool[T, batch] = "
+                         f"{(ext_drives.shape[0], ext_drives.shape[2])}, "
+                         f"got {slot_mask.shape}")
     if faults is not None and mode != "event":
         raise ValueError("fault injection requires the event datapath (the "
                          "dense surrogate has no links to kill)")
@@ -265,6 +312,10 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
     delay = state.inflight.shape[0]
     labels_grid = _egress_label_grid(cfg)
     timing = latlib.timed_wire(cfg.latency) if timed else None
+    # Per-slot plasticity (multi-tenant engine): each batch row carries its
+    # own weight copy — decided by the *type* of the initial state, so the
+    # scan body is a static choice, not a traced one.
+    per_slot = isinstance(plasticity_state, plaslib.SlotPlasticityState)
 
     # Every event-mode topology is one hop-graph plan executed by the same
     # N-level engine; the legacy star/hierarchical flags compile to 1-/2-level
@@ -311,18 +362,18 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         return jax.vmap(one_batch, in_axes=1,
                         out_axes=(1, 1, 1, 1, 1, 1, 1))(spikes)
 
-    def make_body(plan_seg):
-        """Scan body over ``(drive_t, health_t)`` for one constant-plan
-        segment (``health_t`` is ``None`` without a mask schedule)."""
-
-        def body(carry, xs):
-            drive_t, health_t = xs
-            chips, inflight, t, plast = carry
-            slot = jax.lax.rem(t, delay)
-            # Ingress: consume the delay-line slot written ``delay`` steps
-            # ago.
-            drive = drive_t + jax.lax.dynamic_index_in_dim(inflight, slot, 0,
-                                                           keepdims=False)
+    def chip_phase(chips, drive, plast, mask_t):
+        """Chip step (shared or per-slot weights) + slot masking + the
+        plasticity update — common to both scan bodies.  ``mask_t`` zeroes
+        masked slots' spikes *before* recording/egress/plasticity, so an
+        idle slot emits no events and (under per-slot plasticity) freezes
+        its traces and weights."""
+        if per_slot:
+            new_chips, spikes = jax.vmap(
+                lambda p, s, d, w: chiplib.chip_step_slots(p, s, d, w,
+                                                           cfg.chip))(
+                    params.chips, chips, drive, plast.weights)
+        else:
             # Plastic runs integrate the *evolving* weights from the carry;
             # non-plastic runs keep the static params (same program as
             # before — ``plast`` is an empty pytree then).
@@ -331,9 +382,31 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
             new_chips, spikes = jax.vmap(
                 lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
                     chip_params, chips, drive)
-            if plast is not None:
+        if mask_t is not None:
+            spikes = jnp.where(mask_t[None, :, None], spikes, 0.0)
+        if plast is not None:
+            if per_slot:
+                plast = plaslib.stdp_slot_step(plast, drive, spikes,
+                                               plasticity, mask=mask_t)
+            else:
                 plast = plaslib.stdp_stream_step(plast, drive, spikes,
                                                  plasticity)
+        return new_chips, spikes, plast
+
+    def make_body(plan_seg):
+        """Scan body over ``(drive_t, health_t, mask_t)`` for one
+        constant-plan segment (``health_t`` is ``None`` without a mask
+        schedule; ``mask_t`` is ``None`` without ``slot_mask``)."""
+
+        def body(carry, xs):
+            drive_t, health_t, mask_t = xs
+            chips, inflight, t, plast = carry
+            slot = jax.lax.rem(t, delay)
+            # Ingress: consume the delay-line slot written ``delay`` steps
+            # ago.
+            drive = drive_t + jax.lax.dynamic_index_in_dim(inflight, slot, 0,
+                                                           keepdims=False)
+            new_chips, spikes, plast = chip_phase(chips, drive, plast, mask_t)
             if mode == "dense":
                 routed = jnp.einsum("sbn,sdnr->dbr", spikes, route_mats)
                 dropped = jnp.zeros(spikes.shape[:2], jnp.int32)
@@ -361,19 +434,14 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
         scheduler can run the wire phase under the compute phase."""
 
         def body(carry, xs):
-            drive_t, _ = xs
+            drive_t, _, mask_t = xs
             chips, inflight, t, plast, prev_spikes = carry
             slot = jax.lax.rem(t, delay)
             drive = drive_t + jax.lax.dynamic_index_in_dim(inflight, slot, 0,
                                                            keepdims=False)
-            chip_params = (params.chips if plast is None
-                           else params.chips._replace(weights=plast.weights))
-            new_chips, spikes = jax.vmap(
-                lambda p, s, d: chiplib.chip_step(p, s, d, cfg.chip))(
-                    chip_params, chips, drive)
-            if plast is not None:
-                plast = plaslib.stdp_stream_step(plast, drive, spikes,
-                                                 plasticity)
+            new_chips, spikes, plast = chip_phase(chips, drive, plast, mask_t)
+            # prev_spikes were masked at production, so the deferred
+            # exchange of a masked slot's window is already empty.
             (routed, dropped, uplink, lat, lat_valid, unroutable,
              rerouted) = event_route(prev_spikes, plan_seg, None)
             # routed(t-1) lands in slot (t-1) % delay, read at step
@@ -426,8 +494,9 @@ def run_stream(params: netlib.NetworkParams, state: netlib.NetworkState,
     for start, end, plan_seg in segments:
         h = (None if sched is None else
              jax.tree.map(lambda a: a[start:end], sched))
+        m = None if slot_mask is None else slot_mask[start:end]
         body = (make_body_overlap if overlap else make_body)(plan_seg)
-        carry, ys = jax.lax.scan(body, carry, (ext_drives[start:end], h))
+        carry, ys = jax.lax.scan(body, carry, (ext_drives[start:end], h, m))
         ys_parts.append(ys)
     if overlap:
         chips, inflight, _, plast_final, last_spikes = carry

@@ -413,6 +413,60 @@ def test_routed_degraded_parity_and_zero_gathers_in_jaxpr():
     assert "GATHERS 0 PPERMUTES True" in out
 
 
+def test_engine_batched_step_shards_over_slot_axis():
+    """The emulation engine's window program distributed (ISSUE 10): tenant
+    sessions are batch rows, and the exchange is vmapped over batch, so a
+    shard_map of the masked, per-slot-plastic ``run_stream`` over the slot
+    axis on 8 devices (1 session per device) is bit-exact with the
+    single-device batched step — spikes, drops, final delay-line state and
+    the per-slot evolved weights."""
+    out = _run("""
+        import numpy as np
+        from repro.core.aggregator import identity_router
+        from repro.snn import chip as chiplib
+        from repro.snn import network as netlib
+        from repro.snn import stream as stlib
+        from repro.snn.plasticity import STDPConfig
+
+        chip = chiplib.ChipConfig(n_neurons=16, n_rows=8)
+        cfg = netlib.NetworkConfig(n_chips=3, capacity=12, chip=chip)
+        params = netlib.init_feedforward(jax.random.PRNGKey(0), cfg)._replace(
+            router=identity_router(cfg.n_chips))
+        pcfg = STDPConfig()
+        S, T = 8, 6
+        state = netlib.init_state(cfg, S)
+        plast = netlib.init_slot_plasticity(params, S)
+        key = jax.random.key(1)
+        drives = (jax.random.uniform(key, (T, cfg.n_chips, S, chip.n_rows))
+                  < 0.4).astype(jnp.float32)
+        # Unequal session lengths -> real per-slot masking in the shard.
+        lengths = jnp.arange(S) % 4 + 3
+        mask = jnp.arange(T)[:, None] < lengths[None, :]
+
+        def step(st, pl, dr, mk):
+            o = stlib.run_stream(params, st, dr, cfg, plasticity=pcfg,
+                                 plasticity_state=pl, slot_mask=mk)
+            return (o.spikes, o.dropped, o.state.inflight,
+                    o.plasticity.weights)
+
+        ref = step(state, plast, drives, mask)
+
+        mesh = compat.make_mesh((8,), ("slot",))
+        state_specs = netlib.NetworkState(chips=P(None, "slot"),
+                                          inflight=P(None, None, "slot"))
+        sharded = jax.jit(compat.shard_map(
+            step, mesh=mesh,
+            in_specs=(state_specs, P(None, "slot"), P(None, None, "slot"),
+                      P(None, "slot")),
+            out_specs=(P(None, None, "slot"), P(None, None, "slot"),
+                       P(None, None, "slot"), P(None, "slot"))))
+        got = sharded(state, plast, drives, mask)
+        ok = all(bool(jnp.array_equal(g, r)) for g, r in zip(got, ref))
+        print("ENGINE_SHARD_MATCH", ok)
+    """)
+    assert "ENGINE_SHARD_MATCH True" in out
+
+
 def test_sharded_train_step_matches_single_device():
     """The FSDP×TP-sharded train loss equals the unsharded one."""
     out = _run("""

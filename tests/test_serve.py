@@ -117,3 +117,24 @@ def test_generate_greedy_equals_zero_entropy_limit():
     cold, _ = generate(cfg, params, prompts, max_new=4, greedy=False,
                        key=jax.random.key(3), temperature=1e-4)
     assert jnp.array_equal(greedy_toks, cold)
+
+
+def test_generate_timing_excludes_compilation():
+    """``ServeStats`` must time execution, not XLA compilation: the default
+    warm pass drives prefill, the cache splice and one decode step on the
+    real shapes before the clocks start.  Regression for prefill_s and the
+    first decode iteration silently including jit compile time (the jitted
+    lambdas are created per call, so every call used to pay it)."""
+    cfg, params, prompts = _smoke_setup()
+    toks_cold, cold = generate(cfg, params, prompts, max_new=4, warm=False)
+    toks_warm, hot = generate(cfg, params, prompts, max_new=4)
+    # warm= only moves compilation; tokens must be identical.
+    assert jnp.array_equal(toks_cold, toks_warm)
+    # Compile dominates smoke-model execution by orders of magnitude, so a
+    # 2x margin is safe even on a noisy runner; decode amortizes compile
+    # over 4 steps, so only require strictly faster there.
+    assert hot.prefill_s < cold.prefill_s / 2, (
+        f"warm prefill {hot.prefill_s:.3f}s should be far below the "
+        f"compile-inclusive {cold.prefill_s:.3f}s")
+    assert hot.decode_s < cold.decode_s, (
+        f"warm decode {hot.decode_s:.3f}s >= cold {cold.decode_s:.3f}s")

@@ -278,6 +278,42 @@ def test_stream_latency_stats_requires_timed_run():
         stlib.stream_latency_stats(out)
 
 
+def test_latency_stats_strict_raises_on_zero_events():
+    """Zero delivered events stays an error under strict=True — both for a
+    timed run with no traffic and for the raw masked reduction."""
+    empty = jnp.zeros((3, 2, 1, 4), jnp.int32)
+    none_valid = jnp.zeros((3, 2, 1, 4), bool)
+    with pytest.raises(ValueError, match="delivered"):
+        stlib.masked_latency_stats(empty, none_valid)
+    cfg = netlib.NetworkConfig(n_chips=2)
+    params = init_feedforward(KEY, cfg)
+    out = stlib.run_stream(params, netlib.init_state(cfg, 1),
+                           jnp.zeros((2, 2, 1, cfg.chip.n_rows)), cfg,
+                           timed=True)
+    with pytest.raises(ValueError, match="delivered"):
+        stlib.stream_latency_stats(out)
+
+
+def test_latency_stats_non_strict_zero_events_returns_nan_and_count():
+    """strict=False keeps per-tenant accounting total on idle sessions:
+    every percentile key is NaN, ``count`` is 0, and nothing raises."""
+    stats = stlib.masked_latency_stats(jnp.zeros((5,), jnp.int32),
+                                       jnp.zeros((5,), bool), strict=False)
+    assert stats["count"] == 0
+    assert set(stats) == {"median_ns", "p01_ns", "p99_ns", "jitter_ns",
+                          "jitter_frac", "count"}
+    for k, v in stats.items():
+        if k != "count":
+            assert np.isnan(v), f"{k} should be NaN with zero events"
+    # With events, strict and non-strict agree and count the samples.
+    lats = jnp.asarray([100, 200, 300, 400], jnp.int32)
+    valid = jnp.asarray([True, True, False, True])
+    loose = stlib.masked_latency_stats(lats, valid, strict=False)
+    tight = stlib.masked_latency_stats(lats, valid)
+    assert loose == tight and loose["count"] == 3
+    assert loose["median_ns"] == 200.0
+
+
 # ---------------------------------------------------------------------------
 # Golden regression fixture (see conftest.py: --regen-golden)
 # ---------------------------------------------------------------------------
